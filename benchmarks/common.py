@@ -1,0 +1,43 @@
+"""Shared benchmark helpers: timing, graph suite preparation."""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.graphs.csr import build_csr, relabel, degeneracy_order, CSRGraph
+from repro.graphs.datasets import named_graph
+
+
+def timeit(fn, *, warmup: int = 1, reps: int = 3) -> float:
+    """Best-of-reps wall seconds, after warmup (excludes jit compile)."""
+    for _ in range(warmup):
+        fn()
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def prep_graph(name: str, *, order: str = "kco"):
+    """named graph → (CSRGraph, stats dict). order: kco | natural."""
+    E = named_graph(name)
+    n = int(E.max()) + 1 if E.size else 0
+    if order == "kco":
+        E = relabel(E, degeneracy_order(E, n))
+    g = build_csr(E, n)
+    stats = {
+        "name": name, "n": g.n, "m": g.m,
+        "wedges": g.wedge_count(),
+        "work_oriented": g.work_estimate_oriented(),
+        "work_oblivious": g.work_estimate_oblivious(),
+    }
+    return g, stats
+
+
+def row(name: str, seconds: float, derived: str = "") -> str:
+    """CSV row in the harness format: name,us_per_call,derived."""
+    return f"{name},{seconds * 1e6:.1f},{derived}"

@@ -1,0 +1,56 @@
+"""Paper Fig. 4: breakdown of PKT execution among phases.
+
+Phases mirrored: support computation / SCAN+processing (peel) — plus the
+wedge-table construction our shape-static SPMD adaptation adds (DESIGN.md
+§7.3), reported honestly as its own phase.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax.numpy as jnp
+
+from repro.core import support as support_mod
+from repro.core.pkt import _pkt_peel_jit, _pad_tables
+from repro.graphs.datasets import GRAPH_SUITE
+from benchmarks.common import prep_graph, timeit, row
+
+
+def run(suite=None) -> list[str]:
+    out = []
+    for name in suite or GRAPH_SUITE:
+        g, stats = prep_graph(name, order="kco")
+
+        t0 = time.perf_counter()
+        stab = support_mod.build_support_table(g)
+        ptab = support_mod.build_peel_table(g)
+        t_tables = time.perf_counter() - t0
+
+        t_support = timeit(lambda: support_mod.compute_support(g, stab))
+        S0 = support_mod.compute_support(g, stab)
+
+        chunk = min(1 << 14, max(1, ptab.size))
+        tabs = _pad_tables(ptab, g.m, chunk)
+        n_chunks = tabs.e1.shape[0] // chunk
+        N, Eid, S0j = jnp.asarray(g.N), jnp.asarray(g.Eid), jnp.asarray(S0)
+        iters = support_mod._search_iters(g)
+
+        def peel():
+            S, a, b = _pkt_peel_jit(N, Eid, S0j, tabs, m=g.m, chunk=chunk,
+                                    n_chunks=n_chunks, iters=iters,
+                                    dense=False)
+            S.block_until_ready()
+
+        t_peel = timeit(peel, warmup=1, reps=2)
+        tot = t_tables + t_support + t_peel
+        out.append(row(
+            f"fig4/{name}", tot,
+            f"support%={100 * t_support / tot:.1f}"
+            f";peel%={100 * t_peel / tot:.1f}"
+            f";tables%={100 * t_tables / tot:.1f}"))
+    return out
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

@@ -1,0 +1,91 @@
+"""Hillclimb harness: lower one (arch × shape) cell with config overrides and
+print the three roofline terms + per-kind collective breakdown.
+
+  PYTHONPATH=src python -m benchmarks.hillclimb --arch qwen3_8b \
+      --shape train_4k --mb 4 --set remat=block --set kv_chunk=2048
+
+Used for the §Perf iterations; every run prints a one-line record that goes
+into EXPERIMENTS.md.
+"""
+
+import os
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=512")
+
+import argparse
+import dataclasses
+import json
+
+import jax
+
+from repro.launch.mesh import make_production_mesh
+from repro.configs import get_config, SHAPES
+from repro.launch.dryrun import cost_cell, lower_cell
+from benchmarks.roofline import PEAK_FLOPS, HBM_BW, ICI_BW, CHIPS, model_flops
+
+
+def parse_override(s: str):
+    k, _, v = s.partition("=")
+    for cast in (int, float):
+        try:
+            return k, cast(v)
+        except ValueError:
+            pass
+    if v in ("True", "False"):
+        return k, v == "True"
+    if v == "None":
+        return k, None
+    return k, v
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--mb", type=int, default=1)
+    ap.add_argument("--set", action="append", default=[],
+                    help="cfg overrides key=value")
+    ap.add_argument("--multipod", action="store_true")
+    ap.add_argument("--mesh-shape", default=None,
+                    help="override single-pod mesh, e.g. 64,4 (data,model)")
+    ap.add_argument("--mem", action="store_true",
+                    help="also run the prod (scanned) pass for memory")
+    ap.add_argument("--tag", default="")
+    args = ap.parse_args()
+
+    if args.mesh_shape:
+        d, m = (int(x) for x in args.mesh_shape.split(","))
+        mesh = jax.make_mesh((d, m), ("data", "model"),
+                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    else:
+        mesh = make_production_mesh(multi_pod=args.multipod)
+    cfg = get_config(args.arch)
+    overrides = dict(parse_override(s) for s in args.set)
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+
+    rec = cost_cell(cfg, args.shape, mesh, microbatches=args.mb)
+    compute_s = rec["flops"] / PEAK_FLOPS
+    memory_s = rec["bytes_accessed"] / HBM_BW
+    coll_s = rec["collectives"]["total_bytes"] / ICI_BW
+    bound = max(compute_s, memory_s, coll_s)
+    mf = model_flops(args.arch, args.shape)
+    frac = (mf / CHIPS / PEAK_FLOPS) / max(bound, 1e-12)
+    print(f"[{args.tag}] {args.arch}/{args.shape} mb={args.mb} "
+          f"{' '.join(args.set)}")
+    print(f"  compute {compute_s:.3f}s  memory {memory_s:.3f}s  "
+          f"collective {coll_s:.3f}s  -> dominant "
+          f"{max((('compute', compute_s), ('memory', memory_s), ('collective', coll_s)), key=lambda t: t[1])[0]}"
+          f"  roofline_frac {frac:.4f}")
+    for k, v in rec["collectives"].items():
+        if isinstance(v, dict) and v["bytes"]:
+            print(f"    {k:20s} {v['bytes'] / 1e9:9.2f} GB")
+    if args.mem:
+        p = lower_cell(cfg, args.shape, mesh, microbatches=args.mb)
+        print(f"  prod mem: temp {p['temp_bytes'] / 2**30:.2f} GiB + args "
+              f"{p['arg_bytes'] / 2**30:.2f} GiB "
+              f"(fits={p['temp_bytes'] + p['arg_bytes'] <= 15.5 * 2**30})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,147 @@
+"""Roofline analysis (assignment deliverable g).
+
+Reads artifacts/dryrun/*.json and derives, per (arch × shape) on the
+single-pod mesh:
+
+  compute    = HLO_FLOPs_per_device / peak_FLOP/s        (bf16 MXU)
+  memory     = HLO_bytes_per_device / HBM_bw
+  collective = collective_bytes_per_device / ICI_bw
+
+FLOPs/bytes come from the *cost-mode* records (unrolled scans — exact;
+prod-mode numbers hide while-loop bodies), per-device post-SPMD. Collective
+bytes use the ring-model convention in launch/dryrun.parse_collectives.
+
+MODEL_FLOPS = 6·N·D (train) / 2·N_active·D (+attention/cache terms noted) —
+the useful-work yardstick; ratio MODEL_FLOPS / (HLO_FLOPs × chips) exposes
+remat and padding waste.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+import numpy as np
+
+PEAK_FLOPS = 197e12          # bf16 / chip (v5e)
+HBM_BW = 819e9               # B/s / chip
+ICI_BW = 50e9                # B/s / link
+CHIPS = 256                  # single-pod roofline mesh
+
+ART = os.environ.get(
+    "REPRO_DRYRUN_DIR",
+    os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                 "artifacts", "dryrun"))
+
+
+def _load(arch, shape, mesh, mode):
+    p = os.path.join(ART, f"{arch}__{shape}__{mesh}__{mode}.json")
+    if not os.path.exists(p):
+        return None
+    with open(p) as f:
+        return json.load(f)
+
+
+def model_flops(arch: str, shape: str) -> float:
+    """Analytic useful FLOPs per step (global, forward+backward for train)."""
+    from repro.configs import get_config, SHAPES
+    cfg = get_config(arch)
+    seq, gbs, kind = SHAPES[shape]
+    n_active = cfg.active_param_count()
+    if kind == "train":
+        tokens = seq * gbs
+        return 6.0 * n_active * tokens
+    if kind == "prefill":
+        tokens = seq * gbs
+        return 2.0 * n_active * tokens
+    # decode: one token per sequence + attention over the cache
+    from repro.models.model import n_attn_apps
+    flops = 2.0 * n_active * gbs
+    na = n_attn_apps(cfg)
+    if na:
+        flops += 4.0 * gbs * na * cfg.n_heads * cfg.head_dim * seq
+    return flops
+
+
+def cell_terms(arch: str, shape: str) -> dict | None:
+    cost = _load(arch, shape, "pod", "cost")
+    prod = _load(arch, shape, "pod", "prod")
+    if not cost or cost.get("skipped") or cost.get("error"):
+        return None
+    compute_s = cost["flops"] / PEAK_FLOPS
+    memory_s = cost["bytes_accessed"] / HBM_BW
+    coll_s = cost["collectives"]["total_bytes"] / ICI_BW
+    terms = {"compute_s": compute_s, "memory_s": memory_s,
+             "collective_s": coll_s}
+    dom = max(terms, key=terms.get)
+    mf = model_flops(arch, shape)
+    hlo_total = cost["flops"] * CHIPS
+    bound = max(compute_s, memory_s, coll_s)
+    return {
+        "arch": arch, "shape": shape,
+        **{k: float(v) for k, v in terms.items()},
+        "dominant": dom.replace("_s", ""),
+        "model_flops": mf,
+        "hlo_flops_global": hlo_total,
+        "useful_ratio": mf / max(hlo_total, 1e-9),
+        # fraction of roofline-limited time that is useful compute
+        "roofline_fraction": (mf / CHIPS / PEAK_FLOPS) / max(bound, 1e-12),
+        "mem_gib": ((prod or {}).get("temp_bytes", 0)
+                    + (prod or {}).get("arg_bytes", 0)) / 2**30,
+        "fits": (prod or {}).get("fits_hbm"),
+        "microbatches": (prod or {}).get("microbatches"),
+    }
+
+
+def full_table() -> list[dict]:
+    from repro.configs import ARCHS, SHAPES, cell_is_valid
+    rows = []
+    for arch in ARCHS:
+        for shape in SHAPES:
+            ok, why = cell_is_valid(arch, shape)
+            if not ok:
+                rows.append({"arch": arch, "shape": shape, "skipped": why})
+                continue
+            r = cell_terms(arch, shape)
+            rows.append(r or {"arch": arch, "shape": shape,
+                              "skipped": "missing artifact"})
+    return rows
+
+
+def markdown_table(rows=None) -> str:
+    rows = rows or full_table()
+    hdr = ("| arch | shape | compute(s) | memory(s) | collective(s) | "
+           "dominant | useful ratio | roofline frac | mem GiB (mb) |")
+    sep = "|" + "---|" * 9
+    lines = [hdr, sep]
+    for r in rows:
+        if r.get("skipped"):
+            lines.append(f"| {r['arch']} | {r['shape']} | — | — | — | "
+                         f"skip | — | — | {r['skipped'][:42]} |")
+            continue
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.3e} | "
+            f"{r['memory_s']:.3e} | {r['collective_s']:.3e} | "
+            f"{r['dominant']} | {r['useful_ratio']:.2f} | "
+            f"{r['roofline_fraction']:.2f} | "
+            f"{r['mem_gib']:.1f} ({r['microbatches']}) |")
+    return "\n".join(lines)
+
+
+def run(suite=None) -> list[str]:
+    out = []
+    for r in full_table():
+        if r.get("skipped"):
+            out.append(f"roofline/{r['arch']}/{r['shape']},SKIP,"
+                       f"{r['skipped'][:60]}")
+            continue
+        bound = max(r["compute_s"], r["memory_s"], r["collective_s"])
+        out.append(
+            f"roofline/{r['arch']}/{r['shape']},{bound * 1e6:.1f},"
+            f"dom={r['dominant']};frac={r['roofline_fraction']:.3f}"
+            f";useful={r['useful_ratio']:.2f}")
+    return out
+
+
+if __name__ == "__main__":
+    print(markdown_table())

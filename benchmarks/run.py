@@ -1,0 +1,53 @@
+# One function per paper table/figure. Prints ``name,us_per_call,derived`` CSV.
+"""Benchmark harness entry: python -m benchmarks.run [--quick]
+
+  table2  — ordering impact on support computation      (paper Table 2)
+  table3  — PKT vs WC vs Ros decomposition + GWeps      (paper Table 3)
+  table4  — parallel scaling over host devices          (paper Table 4/Fig 5)
+  fig4    — phase breakdown                             (paper Fig 4)
+  fig6    — per-level time vs trussness distribution    (paper Fig 6)
+  roofline— LM arch × shape roofline terms from dry-run (deliverable g)
+"""
+
+import argparse
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="small graph suite only")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset of benches")
+    args = ap.parse_args()
+
+    from repro.graphs.datasets import GRAPH_SUITE
+    suite = GRAPH_SUITE[:5] if args.quick else GRAPH_SUITE
+    only = set(args.only.split(",")) if args.only else None
+
+    from benchmarks import (table2_support, table3_decomp, table4_parallel,
+                            fig4_phases, fig6_levels, roofline)
+    benches = {
+        "table2": lambda: table2_support.run(suite),
+        "table3": lambda: table3_decomp.run(suite),
+        "table4": lambda: table4_parallel.run(
+            suite=("rmat-small", "ba-small") if args.quick
+            else ("rmat-small", "ba-small", "er-small"),
+            device_counts=(1, 2, 4) if args.quick else (1, 2, 4, 8)),
+        "fig4": lambda: fig4_phases.run(suite),
+        "fig6": lambda: fig6_levels.run(),
+        "roofline": lambda: roofline.run(),
+    }
+    print("name,us_per_call,derived")
+    for name, fn in benches.items():
+        if only and name not in only:
+            continue
+        try:
+            for line in fn():
+                print(line, flush=True)
+        except Exception as e:  # report, keep going
+            print(f"{name},ERROR,{type(e).__name__}:{e}", file=sys.stderr)
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,19 @@
+"""Batched serving example (deliverable b): prefill + decode a request batch.
+
+    PYTHONPATH=src python examples/serve_lm.py
+"""
+
+from repro.launch.serve import main as serve_main
+
+
+def main():
+    # a batch of 8 requests through a reduced qwen3 (GQA + qk-norm path)
+    serve_main(["--arch", "qwen3_8b", "--reduced", "--requests", "8",
+                "--prompt-len", "16", "--gen", "24"])
+    # and the SSM family (state-based decode, no KV cache)
+    serve_main(["--arch", "falcon_mamba_7b", "--reduced", "--requests", "4",
+                "--prompt-len", "16", "--gen", "16"])
+
+
+if __name__ == "__main__":
+    main()

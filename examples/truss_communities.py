@@ -1,0 +1,79 @@
+"""Community detection via truss decomposition (paper's motivating use case).
+
+k-trusses as community seeds: peel to a target k, take connected components
+of the surviving edges. Compares the PKT engine against the triangle-list
+variant and the distributed engine on the same graph.
+
+    PYTHONPATH=src python examples/truss_communities.py
+"""
+
+import time
+
+import numpy as np
+
+from repro.graphs.gen import ring_of_cliques_edges, rmat_edges
+from repro.graphs.csr import build_csr, relabel, degeneracy_order
+from repro.core import pkt, truss_trilist, pkt_dist
+
+
+def connected_components(edges: np.ndarray, n: int) -> np.ndarray:
+    """Union-find over an edge list."""
+    parent = np.arange(n)
+
+    def find(x):
+        while parent[x] != x:
+            parent[x] = parent[parent[x]]
+            x = parent[x]
+        return x
+
+    for u, v in edges:
+        ru, rv = find(u), find(v)
+        if ru != rv:
+            parent[ru] = rv
+    return np.array([find(v) for v in range(n)])
+
+
+def main():
+    # planted communities: 12 cliques of 12, chained in a ring
+    E = ring_of_cliques_edges(12, 12)
+    n = int(E.max()) + 1
+    E = relabel(E, degeneracy_order(E, n))
+    g = build_csr(E, n)
+
+    t0 = time.perf_counter()
+    res = pkt(g)
+    print(f"PKT: {time.perf_counter() - t0:.3f}s, t_max={res.trussness.max()}")
+
+    # cross-check with the two other engines
+    assert np.array_equal(truss_trilist(g), res.trussness)
+    assert np.array_equal(pkt_dist(g, chunk=1 << 10), res.trussness)
+    print("engines agree (pkt == trilist == dist)")
+
+    # extract k-truss communities for k = 12: exactly the planted cliques
+    k = 12
+    keep = res.trussness >= k
+    comp = connected_components(g.El[keep], g.n)
+    labels = np.unique(comp[np.unique(g.El[keep])])
+    print(f"{k}-truss communities: {len(labels)} (planted: 12)")
+    assert len(labels) == 12
+
+    # a noisier instance: RMAT + report community-size spectrum at several k
+    E = rmat_edges(scale=9, edge_factor=10, seed=3)
+    n = int(E.max()) + 1
+    E = relabel(E, degeneracy_order(E, n))
+    g = build_csr(E, n)
+    res = pkt(g)
+    for k in (3, 4, 6, 8):
+        keep = res.trussness >= k
+        if keep.sum() == 0:
+            continue
+        comp = connected_components(g.El[keep], g.n)
+        verts = np.unique(g.El[keep])
+        sizes = np.sort(np.bincount(comp[verts]))[::-1]
+        sizes = sizes[sizes > 0]
+        print(f"k={k}: {keep.sum():6d} edges, {len(sizes):4d} communities, "
+              f"largest {sizes[:3]}")
+
+
+if __name__ == "__main__":
+    main()

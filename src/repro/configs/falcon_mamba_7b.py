@@ -1,0 +1,29 @@
+"""falcon-mamba-7b [ssm] — 64L d_model=4096 attention-free Mamba1,
+ssm_state=16, vocab=65024. [arXiv:2410.05355]"""
+
+from repro.models.model import ModelConfig
+
+CONFIG = ModelConfig(
+    name="falcon-mamba-7b",
+    family="ssm",
+    n_layers=64,
+    d_model=4096,
+    n_heads=0,
+    n_kv_heads=0,
+    head_dim=0,
+    d_ff=0,
+    vocab=65024,
+    ssm_state=16,
+    ssm_conv=4,
+    ssm_expand=2,
+    mamba_version=1,
+    rope="none",
+    act="swiglu",
+)
+
+
+def reduced() -> ModelConfig:
+    import dataclasses
+    return dataclasses.replace(
+        CONFIG, n_layers=2, d_model=64, vocab=256, ssm_state=4,
+        ssm_q_chunk=16)

@@ -1,0 +1,30 @@
+"""llama4-scout-17b-a16e [moe] — 48L d_model=5120 40H (GQA kv=8) d_ff=8192
+vocab=202048, MoE 16 experts top-1 + shared expert; vision frontend is a stub
+(early-fusion text backbone only, per assignment). [hf:meta-llama/Llama-4-Scout-17B-16E]"""
+
+from repro.models.model import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llama4-scout-17b-a16e",
+    family="moe",
+    n_layers=48,
+    d_model=5120,
+    n_heads=40,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=8192,
+    vocab=202048,
+    n_experts=16,
+    top_k=1,
+    shared_expert=True,
+    rope="rope",
+    rope_theta=5e5,
+    act="swiglu",
+)
+
+
+def reduced() -> ModelConfig:
+    import dataclasses
+    return dataclasses.replace(
+        CONFIG, n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, head_dim=16,
+        d_ff=128, vocab=512, n_experts=4, top_k=1, kv_chunk=32)

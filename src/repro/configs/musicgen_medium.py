@@ -1,0 +1,29 @@
+"""musicgen-medium [audio] — 48L d_model=1536 24H (kv=24, full MHA) d_ff=6144
+vocab=2048; decoder-only over EnCodec tokens, sinusoidal positions; the audio
+frontend (EnCodec) is a stub: input_specs provides precomputed frame
+embeddings per the assignment. [arXiv:2306.05284]"""
+
+from repro.models.model import ModelConfig
+
+CONFIG = ModelConfig(
+    name="musicgen-medium",
+    family="audio",
+    n_layers=48,
+    d_model=1536,
+    n_heads=24,
+    n_kv_heads=24,
+    head_dim=64,
+    d_ff=6144,
+    vocab=2048,
+    rope="sinusoidal",
+    norm="layernorm",
+    act="gelu",
+    input_is_embeds=True,
+)
+
+
+def reduced() -> ModelConfig:
+    import dataclasses
+    return dataclasses.replace(
+        CONFIG, n_layers=2, d_model=64, n_heads=4, n_kv_heads=4, head_dim=16,
+        d_ff=128, vocab=128, kv_chunk=32)

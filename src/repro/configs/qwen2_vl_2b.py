@@ -1,0 +1,29 @@
+"""qwen2-vl-2b [vlm] — 28L d_model=1536 12H (GQA kv=2) d_ff=8960
+vocab=151936; M-RoPE; the vision frontend is a stub: input_specs provides
+precomputed patch embeddings per the assignment. [arXiv:2409.12191]"""
+
+from repro.models.model import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen2-vl-2b",
+    family="vlm",
+    n_layers=28,
+    d_model=1536,
+    n_heads=12,
+    n_kv_heads=2,
+    head_dim=128,
+    d_ff=8960,
+    vocab=151936,
+    rope="mrope",
+    rope_theta=1e6,
+    act="swiglu",
+    input_is_embeds=True,
+    tie_embeddings=True,
+)
+
+
+def reduced() -> ModelConfig:
+    import dataclasses
+    return dataclasses.replace(
+        CONFIG, n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, head_dim=16,
+        d_ff=128, vocab=256, kv_chunk=32)

@@ -1,0 +1,28 @@
+"""smollm-135m [dense] — 30L d_model=576 9H (GQA kv=3) d_ff=1536 vocab=49152;
+llama-arch small. Also the end-to-end training-example arch.
+[hf:HuggingFaceTB/SmolLM-135M]"""
+
+from repro.models.model import ModelConfig
+
+CONFIG = ModelConfig(
+    name="smollm-135m",
+    family="dense",
+    n_layers=30,
+    d_model=576,
+    n_heads=9,
+    n_kv_heads=3,
+    head_dim=64,
+    d_ff=1536,
+    vocab=49152,
+    rope="rope",
+    rope_theta=1e4,
+    act="swiglu",
+    tie_embeddings=True,
+)
+
+
+def reduced() -> ModelConfig:
+    import dataclasses
+    return dataclasses.replace(
+        CONFIG, n_layers=2, d_model=48, n_heads=3, n_kv_heads=3, head_dim=16,
+        d_ff=96, vocab=256, kv_chunk=32)

@@ -1,0 +1,27 @@
+"""starcoder2-3b [dense] — 30L d_model=3072 24H (GQA kv=2) d_ff=12288
+vocab=49152; GQA + RoPE, GeLU MLP, LayerNorm. [arXiv:2402.19173]"""
+
+from repro.models.model import ModelConfig
+
+CONFIG = ModelConfig(
+    name="starcoder2-3b",
+    family="dense",
+    n_layers=30,
+    d_model=3072,
+    n_heads=24,
+    n_kv_heads=2,
+    head_dim=128,
+    d_ff=12288,
+    vocab=49152,
+    norm="layernorm",
+    rope="rope",
+    rope_theta=1e5,
+    act="gelu",
+)
+
+
+def reduced() -> ModelConfig:
+    import dataclasses
+    return dataclasses.replace(
+        CONFIG, n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, head_dim=16,
+        d_ff=128, vocab=256, kv_chunk=32)

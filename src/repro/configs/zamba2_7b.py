@@ -1,0 +1,35 @@
+"""zamba2-7b [hybrid] — 81L d_model=3584, Mamba2 backbone (ssm_state=64) with
+a SHARED attention block (32H GQA kv=32, head_dim=112, d_ff=14336) applied
+every 6 slots (13 applications over 81 layers). [arXiv:2411.15242]"""
+
+from repro.models.model import ModelConfig
+
+CONFIG = ModelConfig(
+    name="zamba2-7b",
+    family="hybrid",
+    n_layers=81,
+    d_model=3584,
+    n_heads=32,
+    n_kv_heads=32,
+    head_dim=112,
+    d_ff=14336,
+    vocab=32000,
+    ssm_state=64,
+    ssm_conv=4,
+    ssm_expand=2,
+    mamba_version=2,
+    ssd_head_p=64,
+    attn_every=6,
+    rope="rope",
+    rope_theta=1e4,
+    act="swiglu",
+    ssm_q_chunk=256,
+)
+
+
+def reduced() -> ModelConfig:
+    import dataclasses
+    return dataclasses.replace(
+        CONFIG, n_layers=7, d_model=64, n_heads=4, n_kv_heads=4, head_dim=16,
+        d_ff=128, vocab=256, ssm_state=8, ssd_head_p=16, attn_every=3,
+        ssm_q_chunk=16, kv_chunk=32)

@@ -1,0 +1,238 @@
+"""PKT — level-synchronous parallel truss decomposition (paper Algorithms 4+5).
+
+JAX/TPU adaptation of the OpenMP original (see DESIGN.md §2 for the mapping):
+
+  * SCAN            → dense masked compare over the support vector S
+  * curr/next       → boolean frontier vectors (inCurr/processed); the "next"
+                      buffer is recovered as  alive ∧ (S == l)  after update
+  * atomicSub+clamp → masked per-wedge decrement contributions aggregated with
+                      scatter-add, then  S ← max(S − dec, l)  (identical fixed
+                      point, bitwise deterministic)
+  * tie-break       → the paper's "lowest frontier edge id processes the
+                      triangle" predicate evaluated vectorially per wedge hit
+  * dynamic sched.  → chunk-skipping: the flat peel-wedge table is cut into
+                      fixed chunks; a sub-level only visits chunks overlapping
+                      frontier edges' ranges (work-efficiency: each triangle's
+                      wedge entries are scanned O(1) times over the whole run)
+
+Two modes:
+  mode="chunked" (default): work-efficient chunk-skipping while_loop.
+  mode="dense":  every sub-level scans the whole wedge table with frontier
+                 masking — the naive SPMD port, kept as a benchmark foil.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import NamedTuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.graphs.csr import CSRGraph
+from repro.core import support as support_mod
+
+_SENTINEL_S = jnp.int32(1 << 30)
+
+
+class PeelTables(NamedTuple):
+    """Device-resident static tables for the peel phase (padded to chunks)."""
+
+    e1: jnp.ndarray         # (n_chunks*C,) int32, sentinel m
+    cand_slot: jnp.ndarray  # (n_chunks*C,) int32, sentinel 0
+    lo: jnp.ndarray         # (n_chunks*C,) int32, sentinel 0
+    hi: jnp.ndarray         # (n_chunks*C,) int32, sentinel 0  (lo==hi → miss)
+    c_start: jnp.ndarray    # (m,) int32   first chunk containing edge e
+    c_end: jnp.ndarray      # (m,) int32   last chunk containing edge e (inclusive)
+    has_entries: jnp.ndarray  # (m,) bool
+
+
+@dataclasses.dataclass(frozen=True)
+class PKTResult:
+    trussness: np.ndarray   # (m,) int32, >= 2
+    support: np.ndarray     # (m,) int32 initial support
+    levels: int             # number of peel levels executed
+    sublevels: int          # total sub-level iterations (paper's S)
+
+
+def _pad_tables(tab: support_mod.WedgeTable, m: int, chunk: int) -> PeelTables:
+    nw = tab.size
+    n_chunks = max(1, -(-nw // chunk))
+    pad = n_chunks * chunk - nw
+    e1 = np.concatenate([tab.e1, np.full(pad, m, np.int32)])
+    cand = np.concatenate([tab.cand_slot, np.zeros(pad, np.int32)])
+    lo = np.concatenate([tab.lo, np.zeros(pad, np.int32)])
+    hi = np.concatenate([tab.hi, np.zeros(pad, np.int32)])
+    off = tab.off
+    has = off[1:] > off[:-1]
+    c_start = (off[:-1] // chunk).astype(np.int32)
+    c_end = (np.maximum(off[1:] - 1, 0) // chunk).astype(np.int32)
+    return PeelTables(
+        e1=jnp.asarray(e1), cand_slot=jnp.asarray(cand),
+        lo=jnp.asarray(lo), hi=jnp.asarray(hi),
+        c_start=jnp.asarray(c_start), c_end=jnp.asarray(c_end),
+        has_entries=jnp.asarray(has),
+    )
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("m", "chunk", "n_chunks", "iters", "dense"),
+)
+def _pkt_peel_jit(N, Eid, S0, tabs: PeelTables, *, m: int, chunk: int,
+                  n_chunks: int, iters: int, dense: bool):
+    """Runs the full level/sub-level peel; returns (S_final, levels, sublevels)."""
+    two_m = N.shape[0]
+
+    # extended edge state: slot m is a sentinel (processed, never in frontier)
+    S_ext0 = jnp.concatenate([S0.astype(jnp.int32), jnp.full((1,), _SENTINEL_S)])
+    processed0 = jnp.zeros((m + 1,), jnp.bool_).at[m].set(True)
+
+    def chunk_contrib(c, dec, S_ext, processed, inCurr, l):
+        """Decrement contributions from one chunk of the wedge table."""
+        base = c * chunk
+        e1 = jax.lax.dynamic_slice(tabs.e1, (base,), (chunk,))
+        cand = jax.lax.dynamic_slice(tabs.cand_slot, (base,), (chunk,))
+        lo = jax.lax.dynamic_slice(tabs.lo, (base,), (chunk,))
+        hi = jax.lax.dynamic_slice(tabs.hi, (base,), (chunk,))
+        in1 = inCurr[e1]
+        w = N[cand]
+        idx = support_mod.ranged_searchsorted(N, w, lo, hi, iters)
+        safe = jnp.minimum(idx, two_m - 1)
+        hit = (idx < hi) & (N[safe] == w)
+        e2 = Eid[cand]
+        e3 = Eid[safe]
+        valid = in1 & hit & ~processed[e2] & ~processed[e3]
+        s2 = S_ext[e2]
+        s3 = S_ext[e3]
+        in2 = inCurr[e2]
+        in3 = inCurr[e3]
+        dec2 = valid & (s2 > l) & ((~in3) | (e1 < e3))
+        dec3 = valid & (s3 > l) & ((~in2) | (e1 < e2))
+        dec = dec.at[jnp.where(dec2, e2, m)].add(dec2.astype(jnp.int32))
+        dec = dec.at[jnp.where(dec3, e3, m)].add(dec3.astype(jnp.int32))
+        return dec
+
+    def sublevel(S_ext, processed, inCurr, l):
+        """One ProcessSubLevel: aggregate decrements, apply, mark processed."""
+        dec0 = jnp.zeros((m + 1,), jnp.int32)
+        if dense:
+            def body(c, dec):
+                return chunk_contrib(c, dec, S_ext, processed, inCurr, l)
+            dec = jax.lax.fori_loop(0, n_chunks, body, dec0)
+        else:
+            # mark chunks overlapping any frontier edge's entry range
+            curr_edges = inCurr[:m] & tabs.has_entries
+            delta = jnp.zeros((n_chunks + 1,), jnp.int32)
+            delta = delta.at[jnp.where(curr_edges, tabs.c_start, n_chunks)].add(
+                curr_edges.astype(jnp.int32))
+            delta = delta.at[jnp.where(curr_edges, tabs.c_end + 1, n_chunks)].add(
+                -curr_edges.astype(jnp.int32))
+            active = jnp.cumsum(delta[:n_chunks]) > 0
+            n_active = jnp.sum(active.astype(jnp.int32))
+            (ids,) = jnp.nonzero(active, size=n_chunks, fill_value=n_chunks - 1)
+
+            def body(i, dec):
+                return chunk_contrib(ids[i], dec, S_ext, processed, inCurr, l)
+
+            def cond(state):
+                i, _ = state
+                return i < n_active
+
+            def wbody(state):
+                i, dec = state
+                return i + 1, body(i, dec)
+
+            _, dec = jax.lax.while_loop(cond, wbody, (jnp.int32(0), dec0))
+
+        S_ext = jnp.where(
+            (~processed) & (~inCurr) & (dec > 0),
+            jnp.maximum(S_ext - dec, l), S_ext)
+        processed = processed | inCurr
+        inCurr = (~processed) & (S_ext == l)
+        inCurr = inCurr.at[m].set(False)
+        return S_ext, processed, inCurr
+
+    def level_body(state):
+        S_ext, processed, l_done, todo, levels, subs = state
+        alive_S = jnp.where(processed, _SENTINEL_S, S_ext)
+        l = jnp.min(alive_S)  # skip-ahead to next populated level
+        inCurr = (~processed) & (S_ext == l)
+        inCurr = inCurr.at[m].set(False)
+
+        def sub_cond(st):
+            _, _, inC, subs_ = st
+            return jnp.any(inC)
+
+        def sub_body(st):
+            S_ext, processed, inC, subs_ = st
+            S_ext, processed, inC = sublevel(S_ext, processed, inC, l)
+            return S_ext, processed, inC, subs_ + 1
+
+        S_ext, processed, _, subs = jax.lax.while_loop(
+            sub_cond, sub_body, (S_ext, processed, inCurr, subs))
+        todo = (m + 1) - jnp.sum(processed.astype(jnp.int32))
+        return S_ext, processed, l, todo, levels + 1, subs
+
+    def level_cond(state):
+        return state[3] > 0
+
+    state = (S_ext0, processed0, jnp.int32(0), jnp.int32(m), jnp.int32(0),
+             jnp.int32(0))
+    S_ext, _, _, _, levels, subs = jax.lax.while_loop(
+        level_cond, level_body, state)
+    return S_ext[:m], levels, subs
+
+
+def pkt(g: CSRGraph, *, chunk: int = 1 << 14, mode: str = "chunked",
+        support_table: support_mod.WedgeTable | None = None,
+        peel_table: support_mod.WedgeTable | None = None) -> PKTResult:
+    """Full PKT truss decomposition. Returns trussness per edge (S+2)."""
+    if g.m == 0:
+        return PKTResult(np.zeros(0, np.int32), np.zeros(0, np.int32), 0, 0)
+    S0 = support_mod.compute_support(g, support_table)
+    ptab = peel_table if peel_table is not None else support_mod.build_peel_table(g)
+    chunk = min(chunk, max(1, ptab.size))
+    tabs = _pad_tables(ptab, g.m, chunk)
+    n_chunks = tabs.e1.shape[0] // chunk
+    S, levels, subs = _pkt_peel_jit(
+        jnp.asarray(g.N), jnp.asarray(g.Eid), jnp.asarray(S0), tabs,
+        m=g.m, chunk=chunk, n_chunks=n_chunks,
+        iters=support_mod._search_iters(g), dense=(mode == "dense"),
+    )
+    return PKTResult(
+        trussness=np.asarray(S) + 2,
+        support=np.asarray(S0),
+        levels=int(levels),
+        sublevels=int(subs),
+    )
+
+
+def truss_pkt(edges: np.ndarray, *, reorder: bool = True,
+              chunk: int = 1 << 14, mode: str = "chunked") -> np.ndarray:
+    """Convenience entry: canonical edges → trussness aligned to input order.
+
+    With ``reorder`` (the paper's preprocessing) vertices are relabeled by
+    increasing coreness before decomposition; results are mapped back.
+    """
+    from repro.graphs.csr import build_csr, degeneracy_order, relabel
+
+    edges = np.asarray(edges, dtype=np.int64)
+    if edges.size == 0:
+        return np.zeros(0, np.int64)
+    n = int(edges.max()) + 1
+    if reorder:
+        perm = degeneracy_order(edges, n)
+        r_edges = relabel(edges, perm)
+    else:
+        r_edges = edges
+    g = build_csr(r_edges, n)
+    res = pkt(g, chunk=chunk, mode=mode)
+    # map back: g.El rows are sorted lexicographically; locate each input edge
+    key_g = g.El[:, 0].astype(np.int64) * n + g.El[:, 1]
+    key_in = r_edges[:, 0] * n + r_edges[:, 1]
+    pos = np.searchsorted(key_g, key_in)
+    return res.trussness[pos].astype(np.int64)

@@ -1,0 +1,204 @@
+"""Parallel edge-support computation — the AM4 (Algorithm 3) TPU adaptation.
+
+The paper orients edges by increasing k-core vertex order and counts each
+triangle once in canonical order, using a thread-local size-n scratch array X
+for O(1) membership tests. On TPU there is no per-thread random-access scratch;
+the adaptation (DESIGN.md §2) replaces X with:
+
+  * a *flat oriented wedge table* built once per graph: one entry per
+    (oriented edge (u→v), candidate w ∈ N⁺(v)) pair — exactly the wedges the
+    AM4 loop nest inspects, Θ(Σ_v d⁻(v)·d⁺(v)) entries;
+  * a vectorized *ranged binary search* of w in N⁺(u) (sorted CSR rows) —
+    the membership test, O(log d⁺) gathers per probe;
+  * scatter-adds into S — the deterministic analogue of the three AtomicAdds.
+
+Each triangle u<v<w is discovered exactly once, anchored at its lowest-vertex
+edge (u,v) with w scanned from N⁺(v). Work: Θ(m + Σ_v d⁻(v)·d⁺(v)·log d⁺) —
+the ordering-dependence (Table 2) is preserved: relabeling by coreness shrinks
+d⁺ exactly as in the paper.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.graphs.csr import CSRGraph
+
+
+@dataclasses.dataclass(frozen=True)
+class WedgeTable:
+    """Flat (edge, candidate-slot) table + per-query search ranges."""
+
+    e1: np.ndarray       # (Nw,) int32 — edge id of (u, v)
+    cand_slot: np.ndarray  # (Nw,) int32 — CSR slot of w (gives w and Eid e2)
+    lo: np.ndarray       # (Nw,) int32 — probe range start in N
+    hi: np.ndarray       # (Nw,) int32 — probe range end in N
+    off: np.ndarray      # (m+1,) int64 — entries of edge e at [off[e], off[e+1])
+
+    @property
+    def size(self) -> int:
+        return int(self.e1.shape[0])
+
+
+def build_support_table(g: CSRGraph) -> WedgeTable:
+    """Oriented wedge table: for edge (u,v), candidates w ∈ N⁺(v), probe N⁺(u)."""
+    u = g.El[:, 0].astype(np.int64)
+    v = g.El[:, 1].astype(np.int64)
+    Es = g.Es.astype(np.int64)
+    Eo = g.Eo.astype(np.int64)
+    cnt = Es[v + 1] - Eo[v]                      # |N⁺(v)| per edge
+    off = np.zeros(g.m + 1, dtype=np.int64)
+    np.cumsum(cnt, out=off[1:])
+    Nw = int(off[-1])
+    e1 = np.repeat(np.arange(g.m, dtype=np.int64), cnt)
+    intra = np.arange(Nw, dtype=np.int64) - off[e1]
+    cand_slot = Eo[v[e1]] + intra
+    lo = Eo[u[e1]]
+    hi = Es[u[e1] + 1]
+    return WedgeTable(
+        e1=e1.astype(np.int32),
+        cand_slot=cand_slot.astype(np.int32),
+        lo=lo.astype(np.int32),
+        hi=hi.astype(np.int32),
+        off=off,
+    )
+
+
+def build_peel_table(g: CSRGraph) -> WedgeTable:
+    """Full-adjacency wedge table used by the peel phase.
+
+    For edge e=(u,v): candidates w from the *smaller*-degree endpoint's full
+    adjacency, probed against the other endpoint's full adjacency — the
+    ProcessSubLevel loop nest of Algorithm 5 with the cheap side chosen
+    (the paper marks N(u) and scans N(v); we pick min-degree for the scan).
+    """
+    u = g.El[:, 0].astype(np.int64)
+    v = g.El[:, 1].astype(np.int64)
+    Es = g.Es.astype(np.int64)
+    deg = (Es[1:] - Es[:-1])
+    swap = deg[u] > deg[v]
+    cand = np.where(swap, v, u)                  # scan this side
+    probe = np.where(swap, u, v)                 # binary-search this side
+    cnt = deg[cand]
+    off = np.zeros(g.m + 1, dtype=np.int64)
+    np.cumsum(cnt, out=off[1:])
+    Nw = int(off[-1])
+    e1 = np.repeat(np.arange(g.m, dtype=np.int64), cnt)
+    intra = np.arange(Nw, dtype=np.int64) - off[e1]
+    cand_slot = Es[cand[e1]] + intra
+    lo = Es[probe[e1]]
+    hi = Es[probe[e1] + 1]
+    return WedgeTable(
+        e1=e1.astype(np.int32),
+        cand_slot=cand_slot.astype(np.int32),
+        lo=lo.astype(np.int32),
+        hi=hi.astype(np.int32),
+        off=off,
+    )
+
+
+def ranged_searchsorted(N: jnp.ndarray, w: jnp.ndarray, lo: jnp.ndarray,
+                        hi: jnp.ndarray, iters: int) -> jnp.ndarray:
+    """Vectorized lower-bound binary search of w in sorted N[lo:hi).
+
+    Returns the insertion index (== hi when all elements < w). ``iters`` must
+    be >= ceil(log2(max(hi - lo) + 1)).
+    """
+    def body(_, state):
+        lo_, hi_ = state
+        mid = (lo_ + hi_) >> 1
+        val = N[mid]
+        go_right = val < w
+        lo_ = jnp.where(go_right & (lo_ < hi_), mid + 1, lo_)
+        hi_ = jnp.where((~go_right) & (lo_ < hi_), mid, hi_)
+        return lo_, hi_
+
+    lo_f, _ = jax.lax.fori_loop(0, iters, body, (lo, hi))
+    return lo_f
+
+
+def _search_iters(g: CSRGraph, *, oriented: bool = False) -> int:
+    """Binary-search iteration bound = log2(max probe-range length).
+
+    The support path probes only N⁺(u) ranges, whose length is bounded by
+    the degeneracy after KCO relabeling — this is where the paper's
+    ordering win lands in our adaptation (17 → ~6 iterations on skewed
+    graphs). The peel path probes full adjacencies."""
+    d = g.dplus if oriented else g.degrees
+    dmax = int(d.max(initial=1))
+    return max(1, int(np.ceil(np.log2(dmax + 1))) + 1)
+
+
+@functools.partial(jax.jit, static_argnames=("iters", "m"))
+def _support_jit(N, Eid, e1, cand_slot, lo, hi, iters: int, m: int):
+    w = N[cand_slot]
+    idx = ranged_searchsorted(N, w, lo, hi, iters)
+    safe = jnp.minimum(idx, N.shape[0] - 1)
+    hit = (idx < hi) & (N[safe] == w)
+    e2 = Eid[cand_slot]
+    e3 = Eid[safe]
+    inc = hit.astype(jnp.int32)
+    S = jnp.zeros((m,), jnp.int32)
+    S = S.at[e1].add(inc)
+    S = S.at[jnp.where(hit, e2, 0)].add(inc)  # masked: inc==0 adds nothing
+    S = S.at[jnp.where(hit, e3, 0)].add(inc)
+    return S
+
+
+def compute_support(g: CSRGraph, table: WedgeTable | None = None) -> np.ndarray:
+    """Edge support (triangles per edge) via the AM4 adaptation. Returns (m,)."""
+    if g.m == 0:
+        return np.zeros(0, np.int32)
+    if table is None:
+        table = build_support_table(g)
+    S = _support_jit(
+        jnp.asarray(g.N), jnp.asarray(g.Eid),
+        jnp.asarray(table.e1), jnp.asarray(table.cand_slot),
+        jnp.asarray(table.lo), jnp.asarray(table.hi),
+        _search_iters(g, oriented=True), g.m,
+    )
+    return np.asarray(S)
+
+
+def triangle_count(g: CSRGraph) -> int:
+    """Total triangles = sum(S)/3."""
+    S = compute_support(g)
+    return int(S.sum()) // 3
+
+
+# --- Ros (Algorithm 2) support computation: edge-based, unordered -----------
+#
+# For each edge (u,v) the FULL adjacencies are intersected (no orientation),
+# so every triangle is counted once *per edge* (3x total work vs AM4 — the
+# paper's Σ d(v)^2 vs Σ d⁺(v)^2 gap). Kept as the baseline for Table 2/3.
+
+@functools.partial(jax.jit, static_argnames=("iters", "m"))
+def _support_ros_jit(N, e1, cand_slot, lo, hi, iters: int, m: int):
+    w = N[cand_slot]
+    idx = ranged_searchsorted(N, w, lo, hi, iters)
+    safe = jnp.minimum(idx, N.shape[0] - 1)
+    hit = (idx < hi) & (N[safe] == w)
+    S = jnp.zeros((m,), jnp.int32)
+    S = S.at[e1].add(hit.astype(jnp.int32))
+    return S
+
+
+def compute_support_ros(g: CSRGraph, table: WedgeTable | None = None) -> np.ndarray:
+    """Ros-style support: per-edge full intersection (work ∝ Σ d(v)^2)."""
+    if g.m == 0:
+        return np.zeros(0, np.int32)
+    if table is None:
+        table = build_peel_table(g)
+    S = _support_ros_jit(
+        jnp.asarray(g.N),
+        jnp.asarray(table.e1), jnp.asarray(table.cand_slot),
+        jnp.asarray(table.lo), jnp.asarray(table.hi),
+        _search_iters(g), g.m,
+    )
+    return np.asarray(S)

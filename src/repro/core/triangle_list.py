@@ -1,0 +1,116 @@
+"""Triangle-list truss decomposition — the O(|△|)-memory comparator.
+
+Zhang–Parthasarathy-style: enumerate every triangle once up front, then peel
+level-synchronously over the static triangle list. The paper deliberately does
+NOT parallelize this family because of its O(|△|) memory; we implement it as
+the *beyond-paper* bracketing point: it trades the paper's O(m) memory claim
+for a peel phase with perfectly regular (dense, segment-sum) data flow — on a
+TPU this regularity is worth measuring (EXPERIMENTS.md §Perf, truss side).
+
+The per-sub-level rule collapses beautifully here: a triangle "dies" the first
+sub-level any of its edges is in the frontier, and contributes exactly one
+decrement to each of its other, still-alive, not-in-frontier edges with
+S > l — which *is* the paper's tie-break, stated triangle-centrically.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.graphs.csr import CSRGraph
+from repro.core import support as support_mod
+
+
+def enumerate_triangles(g: CSRGraph) -> np.ndarray:
+    """All triangles as an (t, 3) int32 array of edge ids (canonical order)."""
+    if g.m == 0:
+        return np.zeros((0, 3), np.int32)
+    tab = support_mod.build_support_table(g)
+    N = jnp.asarray(g.N)
+    Eid = jnp.asarray(g.Eid)
+    iters = support_mod._search_iters(g, oriented=True)
+
+    @jax.jit
+    def find(e1, cand_slot, lo, hi):
+        w = N[cand_slot]
+        idx = support_mod.ranged_searchsorted(N, w, lo, hi, iters)
+        safe = jnp.minimum(idx, N.shape[0] - 1)
+        hit = (idx < hi) & (N[safe] == w)
+        return hit, Eid[cand_slot], Eid[safe]
+
+    hit, e2, e3 = find(jnp.asarray(tab.e1), jnp.asarray(tab.cand_slot),
+                       jnp.asarray(tab.lo), jnp.asarray(tab.hi))
+    hit = np.asarray(hit)
+    tri = np.stack([tab.e1[hit], np.asarray(e2)[hit], np.asarray(e3)[hit]],
+                   axis=1)
+    return tri.astype(np.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("m",))
+def _peel_trilist_jit(tri, S0, *, m: int):
+    """Dense level-synchronous peel over the triangle list."""
+    t = tri.shape[0]
+    SENT = jnp.int32(1 << 30)
+    S0 = S0.astype(jnp.int32)
+
+    def level_body(state):
+        S, processed, tri_alive, levels, subs = state
+        l = jnp.min(jnp.where(processed, SENT, S))
+        inCurr = (~processed) & (S == l)
+
+        def sub_cond(st):
+            _, _, _, inC, subs_ = st
+            return jnp.any(inC)
+
+        def sub_body(st):
+            S, processed, tri_alive, inC, subs_ = st
+            f0 = inC[tri[:, 0]]
+            f1 = inC[tri[:, 1]]
+            f2 = inC[tri[:, 2]]
+            dies = tri_alive & (f0 | f1 | f2)
+
+            def contrib(dec, col, fcol):
+                e = tri[:, col]
+                mask = dies & (~fcol) & (S[e] > l)
+                return dec.at[jnp.where(mask, e, m)].add(mask.astype(jnp.int32))
+
+            dec = jnp.zeros((m + 1,), jnp.int32)
+            dec = contrib(dec, 0, f0)
+            dec = contrib(dec, 1, f1)
+            dec = contrib(dec, 2, f2)
+            dec = dec[:m]
+            S = jnp.where((~processed) & (~inC) & (dec > 0),
+                          jnp.maximum(S - dec, l), S)
+            tri_alive = tri_alive & ~dies
+            processed = processed | inC
+            inC = (~processed) & (S == l)
+            return S, processed, tri_alive, inC, subs_ + 1
+
+        S, processed, tri_alive, _, subs = jax.lax.while_loop(
+            sub_cond, sub_body, (S, processed, tri_alive, inCurr, subs))
+        return S, processed, tri_alive, levels + 1, subs
+
+    def level_cond(state):
+        return ~jnp.all(state[1])
+
+    state = (S0, jnp.zeros((m,), jnp.bool_), jnp.ones((t,), jnp.bool_),
+             jnp.int32(0), jnp.int32(0))
+    S, _, _, levels, subs = jax.lax.while_loop(level_cond, level_body, state)
+    return S, levels, subs
+
+
+def truss_trilist(g: CSRGraph) -> np.ndarray:
+    """Trussness per edge via the triangle-list variant."""
+    if g.m == 0:
+        return np.zeros(0, np.int64)
+    S0 = support_mod.compute_support(g)
+    tri = enumerate_triangles(g)
+    if tri.shape[0] == 0:
+        return np.full(g.m, 2, np.int64)
+    S, _, _ = _peel_trilist_jit(jnp.asarray(tri), jnp.asarray(S0), m=g.m)
+    return np.asarray(S).astype(np.int64) + 2

@@ -1,0 +1,4 @@
+from repro.data.pipeline import (
+    SyntheticTokens, BinaryTokenFile, Prefetcher, make_batches)
+
+__all__ = ["SyntheticTokens", "BinaryTokenFile", "Prefetcher", "make_batches"]

@@ -1,0 +1,28 @@
+"""Graph substrate: generators, CSR construction, datasets.
+
+All graphs are undirected simple graphs held in the paper's (Fig. 2) layout:
+CSR ``(Es, N)`` plus ``Eid`` (edge id per adjacency slot), ``El`` (edge list,
+u < v), ``Eo`` (first adjacency slot whose neighbor is > the row vertex).
+"""
+
+from repro.graphs.csr import CSRGraph, build_csr, relabel, edges_from_arrays
+from repro.graphs.gen import (
+    rmat_edges,
+    erdos_renyi_edges,
+    barabasi_albert_edges,
+    ring_of_cliques_edges,
+)
+from repro.graphs.datasets import named_graph, GRAPH_SUITE
+
+__all__ = [
+    "CSRGraph",
+    "build_csr",
+    "relabel",
+    "edges_from_arrays",
+    "rmat_edges",
+    "erdos_renyi_edges",
+    "barabasi_albert_edges",
+    "ring_of_cliques_edges",
+    "named_graph",
+    "GRAPH_SUITE",
+]

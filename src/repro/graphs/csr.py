@@ -1,0 +1,194 @@
+"""CSR graph container mirroring the paper's Figure 2 data structures.
+
+The decomposition algorithms never touch an adjacency hash table; everything is
+driven by these arrays (paper §3, "Unlike other k-core and k-truss algorithms,
+we do not use a hash table"):
+
+  Es  : (n+1,) int32   CSR row offsets
+  N   : (2m,)  int32   CSR column indices (sorted per row)
+  Eid : (2m,)  int32   edge id of each adjacency slot (both slots of an edge
+                       share one id in [0, m))
+  El  : (m, 2) int32   edge endpoints, El[e] = (u, v) with u < v
+  Eo  : (n,)   int32   first slot j in [Es[u], Es[u+1]) with N[j] > u
+  S   : (m,)   int32   edge support (filled by support computation)
+
+Persistent footprint with 4-byte ints: (n+1) + 2m + 2m + 2m + n = 28m + 8n
+bytes, matching the paper's accounting.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class CSRGraph:
+    """Undirected simple graph in the paper's array layout (host numpy)."""
+
+    n: int
+    m: int
+    Es: np.ndarray   # (n+1,) int32
+    N: np.ndarray    # (2m,) int32
+    Eid: np.ndarray  # (2m,) int32
+    El: np.ndarray   # (m, 2) int32
+    Eo: np.ndarray   # (n,) int32
+
+    @property
+    def degrees(self) -> np.ndarray:
+        return (self.Es[1:] - self.Es[:-1]).astype(np.int32)
+
+    @property
+    def dplus(self) -> np.ndarray:
+        """Out-degree under the id orientation: |{w in N(u) : w > u}|."""
+        return (self.Es[1:] - self.Eo).astype(np.int32)
+
+    def wedge_count(self) -> int:
+        d = self.degrees.astype(np.int64)
+        return int((np.sum(d * d) - 2 * self.m) // 2)
+
+    def work_estimate_oriented(self) -> int:
+        """Sum of d+(v)^2 — the ordering-aware work estimate of Table 2."""
+        dp = self.dplus.astype(np.int64)
+        return int(np.sum(dp * dp))
+
+    def work_estimate_oblivious(self) -> int:
+        d = self.degrees.astype(np.int64)
+        return int(np.sum(d * d))
+
+    def validate(self) -> None:
+        assert self.Es.shape == (self.n + 1,)
+        assert self.Es[0] == 0 and self.Es[-1] == 2 * self.m
+        assert self.N.shape == (2 * self.m,)
+        assert self.Eid.shape == (2 * self.m,)
+        assert self.El.shape == (self.m, 2)
+        assert self.Eo.shape == (self.n,)
+        # per-row sorted, no self loops, no duplicates
+        for u in range(self.n):
+            row = self.N[self.Es[u]:self.Es[u + 1]]
+            assert np.all(np.diff(row) > 0), f"row {u} not strictly sorted"
+            assert not np.any(row == u), f"self loop at {u}"
+        # Eid consistency: both slots of edge e point at El[e]
+        for j in range(2 * self.m):
+            pass  # O(m) python loops only in validate(); used on tiny graphs
+        assert np.all(self.El[:, 0] < self.El[:, 1])
+
+
+def edges_from_arrays(src: np.ndarray, dst: np.ndarray, n: Optional[int] = None) -> np.ndarray:
+    """Canonicalize a (possibly directed, loopy, duplicated) edge array.
+
+    Returns unique undirected edges as an (m, 2) int64 array with u < v —
+    the paper's preprocessing ("made undirected ... removed self loops and
+    duplicate edges").
+    """
+    src = np.asarray(src, dtype=np.int64)
+    dst = np.asarray(dst, dtype=np.int64)
+    keep = src != dst
+    src, dst = src[keep], dst[keep]
+    lo = np.minimum(src, dst)
+    hi = np.maximum(src, dst)
+    if n is None:
+        n = int(max(lo.max(initial=-1), hi.max(initial=-1)) + 1) if lo.size else 0
+    key = lo * n + hi
+    key = np.unique(key)
+    return np.stack([key // n, key % n], axis=1)
+
+
+def build_csr(edges: np.ndarray, n: Optional[int] = None) -> CSRGraph:
+    """Build the full Fig. 2 structure from canonical (m,2) u<v edges."""
+    edges = np.asarray(edges)
+    if edges.size == 0:
+        n = int(n or 0)
+        return CSRGraph(
+            n=n, m=0,
+            Es=np.zeros(n + 1, np.int32), N=np.zeros(0, np.int32),
+            Eid=np.zeros(0, np.int32), El=np.zeros((0, 2), np.int32),
+            Eo=np.zeros(n, np.int32),
+        )
+    assert edges.ndim == 2 and edges.shape[1] == 2
+    assert np.all(edges[:, 0] < edges[:, 1]), "edges must be canonical u < v"
+    if n is None:
+        n = int(edges.max() + 1)
+    m = edges.shape[0]
+
+    # Edge ids follow lexicographic (u, v) order so that "lower edge id" is a
+    # stable total order (the tie-break used in concurrent triangle processing).
+    order = np.lexsort((edges[:, 1], edges[:, 0]))
+    El = edges[order].astype(np.int32)
+
+    # Symmetrize with edge ids attached to both directions.
+    eid = np.arange(m, dtype=np.int32)
+    src = np.concatenate([El[:, 0], El[:, 1]])
+    dst = np.concatenate([El[:, 1], El[:, 0]])
+    ids = np.concatenate([eid, eid])
+
+    # CSR by (src, dst) sort.
+    perm = np.lexsort((dst, src))
+    src, dst, ids = src[perm], dst[perm], ids[perm]
+    counts = np.bincount(src, minlength=n).astype(np.int64)
+    Es = np.zeros(n + 1, dtype=np.int64)
+    np.cumsum(counts, out=Es[1:])
+
+    # Eo: first slot with neighbor > row vertex (adjacency sorted ascending).
+    rows = np.arange(n, dtype=np.int64)
+    Eo = Es[:-1] + np.array(
+        [np.searchsorted(dst[Es[u]:Es[u + 1]], u, side="right") for u in rows],
+        dtype=np.int64,
+    ) if n < (1 << 15) else _eo_vectorized(Es, dst, n)
+
+    g = CSRGraph(
+        n=n, m=m,
+        Es=Es.astype(np.int32),
+        N=dst.astype(np.int32),
+        Eid=ids.astype(np.int32),
+        El=El,
+        Eo=Eo.astype(np.int32),
+    )
+    return g
+
+
+def _eo_vectorized(Es: np.ndarray, dst: np.ndarray, n: int) -> np.ndarray:
+    """Vectorized Eo: count of neighbors < row vertex, offset by row start."""
+    row_of_slot = np.repeat(np.arange(n, dtype=np.int64), np.diff(Es))
+    less = dst < row_of_slot
+    cnt = np.bincount(row_of_slot[less], minlength=n)
+    return Es[:-1] + cnt
+
+
+def relabel(edges: np.ndarray, perm: np.ndarray) -> np.ndarray:
+    """Relabel endpoints by perm (old id -> new id) and re-canonicalize.
+
+    Used for k-core ordering (KCO): perm[v] = rank of v in increasing coreness
+    order, so after relabel the id orientation coincides with core orientation.
+    """
+    e = perm[edges]
+    lo = np.minimum(e[:, 0], e[:, 1])
+    hi = np.maximum(e[:, 0], e[:, 1])
+    return np.stack([lo, hi], axis=1)
+
+
+def degeneracy_order(edges: np.ndarray, n: int) -> np.ndarray:
+    """Coreness-based vertex permutation: perm[v] = new id of vertex v.
+
+    Vertices sorted by (coreness, id). Matches the paper's preprocessing
+    ("doing a k-core decomposition and then reordering vertices").
+    """
+    from repro.core.kcore import kcore_numpy  # local import to avoid cycle
+
+    g = build_csr(edges, n)
+    core = kcore_numpy(g)
+    order = np.lexsort((np.arange(n), core))  # stable by id within coreness
+    perm = np.empty(n, dtype=np.int64)
+    perm[order] = np.arange(n)
+    return perm
+
+
+def degree_order(edges: np.ndarray, n: int) -> np.ndarray:
+    """Degree-based vertex permutation (cheaper alternative ordering)."""
+    deg = np.bincount(edges.ravel(), minlength=n)
+    order = np.lexsort((np.arange(n), deg))
+    perm = np.empty(n, dtype=np.int64)
+    perm[order] = np.arange(n)
+    return perm

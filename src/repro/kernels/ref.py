@@ -1,0 +1,16 @@
+"""Pure-jnp oracle for the Pallas intersect kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def intersect_ref(a: jnp.ndarray, b: jnp.ndarray):
+    """Same contract as kernels.intersect.intersect_blocked (no blocking)."""
+    eq = a[:, :, None] == b[:, None, :]
+    hita = jnp.any(eq, axis=2)
+    hitb = jnp.any(eq, axis=1)
+    cnt = jnp.sum(hita.astype(jnp.int32), axis=1)
+    return cnt, hita.astype(jnp.int32), hitb.astype(jnp.int32)

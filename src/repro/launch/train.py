@@ -1,0 +1,135 @@
+"""Training driver: config → mesh → data → train loop with checkpointing,
+straggler detection, heartbeat, and restart-on-failure.
+
+CPU-runnable end-to-end with reduced configs; the same driver lowers the
+production shapes on the 256/512-chip meshes (see dryrun.py for the
+compile-only proof).
+
+  PYTHONPATH=src python -m repro.launch.train --arch smollm_135m \
+      --reduced --steps 200 --batch 8 --seq 128 --ckpt-dir /tmp/ckpt
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import functools
+import os
+import time
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import get_config, reduced_config
+from repro.models.model import init_params
+from repro.models import sharding as shard_rules
+from repro.train.step import TrainState, train_step
+from repro.optim.adamw import AdamWConfig, adamw_init
+from repro.data.pipeline import SyntheticTokens, Prefetcher
+from repro.checkpoint import CheckpointManager
+from repro.runtime.fault import StragglerMonitor, Heartbeat, run_with_retries
+from repro.launch.mesh import make_host_mesh
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm_135m")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--resume", default="auto", choices=["auto", "never"])
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--fail-at-step", type=int, default=-1,
+                    help="inject one failure (fault-tolerance demo)")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = reduced_config(args.arch) if args.reduced else get_config(args.arch)
+    mesh = make_host_mesh()
+    print(f"arch={cfg.name} reduced={args.reduced} mesh={dict(mesh.shape)} "
+          f"params≈{cfg.param_count()/1e6:.1f}M")
+
+    opt_cfg = AdamWConfig(lr=args.lr, warmup_steps=max(5, args.steps // 20),
+                          total_steps=args.steps)
+    params = init_params(cfg, jax.random.PRNGKey(args.seed))
+    state = TrainState(step=jnp.zeros((), jnp.int32), params=params,
+                       opt=adamw_init(params))
+
+    pspec = shard_rules.param_specs(cfg, jax.eval_shape(lambda: params),
+                                    mesh.axis_names)
+    psh = jax.tree.map(lambda s: NamedSharding(mesh, s), pspec,
+                       is_leaf=lambda x: isinstance(x, P))
+    state_sh = TrainState(step=NamedSharding(mesh, P()), params=psh,
+                          opt={"m": psh, "v": psh})
+    jfn = jax.jit(functools.partial(train_step, cfg=cfg, opt_cfg=opt_cfg,
+                                    microbatches=args.microbatches),
+                  in_shardings=(state_sh, None), out_shardings=(state_sh,
+                                                                None),
+                  donate_argnums=(0,))
+
+    mgr = CheckpointManager(args.ckpt_dir, keep=3)
+    start = 0
+    if args.resume == "auto":
+        like = jax.eval_shape(lambda: state)
+        got = mgr.restore_latest(like, shardings=state_sh)
+        if got is not None:
+            start, state = got
+            print(f"resumed from step {start}")
+    if start == 0:
+        with mesh:
+            state = jax.device_put(state, state_sh)
+
+    src = SyntheticTokens(cfg.vocab, args.seq, args.batch, seed=args.seed)
+    mon = StragglerMonitor()
+    hb = Heartbeat(os.path.join(args.ckpt_dir, "heartbeat.json"),
+                   interval_s=2.0)
+    holder = {"state": state, "failed": False}
+
+    def one_step(step: int):
+        batch = {k: jnp.asarray(v) for k, v in src.batch_at(step).items()}
+        if step == args.fail_at_step and not holder["failed"]:
+            holder["failed"] = True
+            raise RuntimeError("injected node failure")
+        t0 = time.perf_counter()
+        with mesh:
+            holder["state"], metrics = jfn(holder["state"], batch)
+        jax.block_until_ready(holder["state"].step)
+        dt = time.perf_counter() - t0
+        slow = mon.observe(step, dt)
+        hb.beat(step, loss=float(metrics["ce"]))
+        if step % args.log_every == 0 or step == args.steps - 1:
+            print(f"step {step:5d} ce {float(metrics['ce']):.4f} "
+                  f"gnorm {float(metrics['grad_norm']):.3f} {dt*1e3:.0f}ms"
+                  f"{' STRAGGLER' if slow else ''}", flush=True)
+        if (step + 1) % args.ckpt_every == 0 or step == args.steps - 1:
+            mgr.save(step + 1, holder["state"])
+
+    def on_retry(step: int, exc: Exception) -> int:
+        print(f"step {step} failed ({exc}); restoring from checkpoint")
+        got = mgr.restore_latest(jax.eval_shape(lambda: holder["state"]),
+                                 shardings=state_sh)
+        if got is None:
+            holder["state"] = jax.device_put(
+                TrainState(step=jnp.zeros((), jnp.int32), params=init_params(
+                    cfg, jax.random.PRNGKey(args.seed)),
+                    opt=adamw_init(params)), state_sh)
+            return 0
+        s, holder["state"] = got
+        return s
+
+    run_with_retries(one_step, start_step=start, end_step=args.steps,
+                     on_retry=on_retry)
+    mgr.wait()
+    print("done; final loss above, checkpoints in", args.ckpt_dir)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,5 @@
+"""LM substrate: layers, attention, MoE, SSM, and the composable model."""
+
+from repro.models.model import ModelConfig, init_params, forward, init_cache, decode_step
+
+__all__ = ["ModelConfig", "init_params", "forward", "init_cache", "decode_step"]

@@ -1,0 +1,181 @@
+"""Attention: GQA/MQA/MHA with optional qk-norm, blocked online-softmax.
+
+``blocked_attention`` is a pure-XLA flash-style attention: a lax.scan over KV
+chunks carrying (running max, denominator, accumulator). Peak memory is
+O(Sq * kv_chunk) per head group instead of O(Sq * Skv) — this is what makes
+prefill_32k and the 500k-cache decode lowerable at production shapes. It is
+deliberately *not* a Pallas kernel so that compiled cost_analysis keeps seeing
+the real FLOPs (see kernels/__init__.py).
+
+KV heads are kept un-repeated: q is reshaped to (B, S, Hkv, G, Dh) and all
+einsums contract against (B, C, Hkv, Dh) — GQA without materializing the
+G-fold KV copy.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import layers
+
+Params = dict[str, Any]
+
+_NEG_INF = -1e30
+
+
+def attn_init(key, d_model: int, n_heads: int, n_kv: int, head_dim: int,
+              qk_norm: bool, dtype=jnp.float32) -> Params:
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    s = 1.0 / np.sqrt(d_model)
+    so = 1.0 / np.sqrt(n_heads * head_dim)
+    p = {
+        "wq": jax.random.normal(kq, (d_model, n_heads * head_dim), dtype) * s,
+        "wk": jax.random.normal(kk, (d_model, n_kv * head_dim), dtype) * s,
+        "wv": jax.random.normal(kv, (d_model, n_kv * head_dim), dtype) * s,
+        "wo": jax.random.normal(ko, (n_heads * head_dim, d_model), dtype) * so,
+    }
+    if qk_norm:
+        p["q_norm"] = jnp.ones((head_dim,), dtype)
+        p["k_norm"] = jnp.ones((head_dim,), dtype)
+    return p
+
+
+def blocked_attention(q, k, v, *, causal: bool, q_offset, kv_chunk: int,
+                      kv_len=None, unroll=1, flat_kv: bool = False):
+    """q: (B,Sq,Hkv,G,Dh); k,v: (B,Skv,Hkv,Dh). Returns (B,Sq,Hkv,G,Dh).
+
+    q_offset: scalar (may be traced) — absolute position of q[0] for causal
+    masking against absolute KV positions. kv_len: optional scalar — number of
+    valid KV entries (cache fill level).
+
+    flat_kv: run the einsums with a single flat head dim H = Hkv·G and KV
+    logically repeated G-fold. The (Hkv, G) split caps TP sharding of
+    attention at Hkv ways — on a 16-way model axis with 8 KV heads GSPMD
+    falls back to partial replication with f32 partial-sum all-reduces
+    (measured: the dominant collective in train cells). Flat heads shard
+    H-ways; the repeat is local per shard. Use when H % TP == 0.
+    """
+    B, Sq, Hkv, G, Dh = q.shape
+    Skv = k.shape[1]
+    if flat_kv and G > 1:
+        q_f = q.reshape(B, Sq, Hkv * G, Dh)
+        k_f = jnp.repeat(k, G, axis=2)
+        v_f = jnp.repeat(v, G, axis=2)
+        out = blocked_attention(
+            q_f[:, :, :, None, :], k_f, v_f, causal=causal,
+            q_offset=q_offset, kv_chunk=kv_chunk, kv_len=kv_len,
+            unroll=unroll, flat_kv=False)
+        return out.reshape(B, Sq, Hkv, G, Dh)
+    scale = 1.0 / np.sqrt(Dh)
+    C = min(kv_chunk, Skv)
+    n_chunks = -(-Skv // C)
+    pad = n_chunks * C - Skv
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+
+    # KV chunks are sliced *by index* in the scan body — no transposed copy
+    # of the cache — and fed to the MXU in their native dtype (bf16×bf16→f32
+    # accumulate); converting a 500k-token cache to f32 per step would
+    # triple the decode memory term (measured — see EXPERIMENTS.md §Perf).
+    q_in = (q * scale).astype(q.dtype)
+    qpos = q_offset + jnp.arange(Sq)
+
+    def body(carry, c_idx):
+        m, l, acc = carry
+        k_i = jax.lax.dynamic_slice_in_dim(k, c_idx * C, C, axis=1)
+        v_i = jax.lax.dynamic_slice_in_dim(v, c_idx * C, C, axis=1)
+        kpos = c_idx * C + jnp.arange(C)
+        s = jnp.einsum("bqhgd,bchd->bqhgc", q_in, k_i,
+                       preferred_element_type=jnp.float32)
+        mask = jnp.ones((Sq, C), bool)
+        if causal:
+            mask = mask & (kpos[None, :] <= qpos[:, None])
+        if kv_len is not None:
+            mask = mask & (kpos[None, :] < kv_len)
+        if pad:
+            mask = mask & (kpos[None, :] < Skv)
+        s = jnp.where(mask[None, :, None, None, :], s, _NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bqhgc,bchd->bqhgd", p.astype(v_i.dtype), v_i,
+            preferred_element_type=jnp.float32)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, Sq, Hkv, G), _NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, Sq, Hkv, G), jnp.float32)
+    a0 = jnp.zeros((B, Sq, Hkv, G, Dh), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        body, (m0, l0, a0), jnp.arange(n_chunks), unroll=unroll)
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.astype(q.dtype)
+
+
+def attn_apply(p: Params, x: jnp.ndarray, cfg, *, positions=None,
+               cache=None, cache_index=None, kv_chunk: int = 1024):
+    """Self-attention. Without cache: causal over x (train/prefill; returns
+    (out, new_kv) where new_kv is the (k, v) to seed a cache). With cache
+    (k, v, fill): single/few-token decode against the cache.
+
+    x: (B, S, D); positions: (B, S) absolute ids or (B, S, 3) for mrope.
+    """
+    B, S, D = x.shape
+    H, Hkv, Dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    G = H // Hkv
+    xb = x
+    q = jnp.einsum("bsd,de->bse", xb, p["wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,de->bse", xb, p["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,de->bse", xb, p["wv"].astype(x.dtype))
+    q = q.reshape(B, S, H, Dh)
+    k = k.reshape(B, S, Hkv, Dh)
+    v = v.reshape(B, S, Hkv, Dh)
+
+    if cfg.qk_norm:
+        q = layers.rms_norm(q, p["q_norm"])
+        k = layers.rms_norm(k, p["k_norm"])
+
+    if positions is None:
+        base = 0 if cache is None else cache[2]
+        positions = base + jnp.arange(S)[None, :]
+
+    if cfg.rope == "rope":
+        q = layers.apply_rope(q, positions, cfg.rope_theta)
+        k = layers.apply_rope(k, positions, cfg.rope_theta)
+    elif cfg.rope == "mrope":
+        q = layers.apply_mrope(q, positions, cfg.rope_theta)
+        k = layers.apply_mrope(k, positions, cfg.rope_theta)
+    # "none"/"sinusoidal": positions handled at the embedding level
+
+    qg = q.reshape(B, S, Hkv, G, Dh)
+    unroll = True if getattr(cfg, 'unroll_scans', False) else 1
+
+    flat_kv = bool(getattr(cfg, "attn_flat_kv", False))
+    if cache is None:
+        out = blocked_attention(qg, k, v, causal=True, q_offset=0,
+                                kv_chunk=kv_chunk, unroll=unroll,
+                                flat_kv=flat_kv)
+        new_kv = (k, v)
+    else:
+        ck, cv, fill = cache
+        # write the new kv at [fill, fill+S)
+        ck = jax.lax.dynamic_update_slice(ck, k.astype(ck.dtype),
+                                          (0, fill, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cv, v.astype(cv.dtype),
+                                          (0, fill, 0, 0))
+        # causal w.r.t. absolute positions: correct for multi-token prefill
+        # and reduces to "see everything ≤ fill" for single-token decode
+        out = blocked_attention(qg, ck, cv, causal=True, q_offset=fill,
+                                kv_chunk=kv_chunk, kv_len=fill + S,
+                                unroll=unroll, flat_kv=flat_kv)
+        new_kv = (ck, cv, fill + S)
+
+    out = out.reshape(B, S, H * Dh)
+    out = jnp.einsum("bse,ed->bsd", out, p["wo"].astype(x.dtype))
+    return out, new_kv

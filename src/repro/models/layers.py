@@ -1,0 +1,131 @@
+"""Shared neural layers: norms, rotary embeddings, MLPs, embeddings.
+
+Everything is a pure function over explicit param pytrees (dicts of jnp
+arrays) so that jax.eval_shape / jit.lower work without any framework magic.
+Compute dtype is bf16 by default with fp32 params and fp32 norm/softmax
+accumulation (the production-standard mixed-precision recipe).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Params = dict[str, Any]
+
+
+# ---------------------------------------------------------------- norms ----
+
+def rms_norm(x: jnp.ndarray, scale: jnp.ndarray | None, eps: float = 1e-6):
+    """RMSNorm; ``scale=None`` gives OLMo-style non-parametric normalization."""
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    y = x32 * jax.lax.rsqrt(jnp.mean(x32 * x32, axis=-1, keepdims=True) + eps)
+    if scale is not None:
+        y = y * scale.astype(jnp.float32)
+    return y.astype(dt)
+
+
+def layer_norm(x: jnp.ndarray, scale: jnp.ndarray | None,
+               bias: jnp.ndarray | None, eps: float = 1e-5):
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x32 - mu), axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    if scale is not None:
+        y = y * scale.astype(jnp.float32)
+    if bias is not None:
+        y = y + bias.astype(jnp.float32)
+    return y.astype(dt)
+
+
+# ----------------------------------------------------------------- RoPE ----
+
+def rope_freqs(head_dim: int, theta: float) -> np.ndarray:
+    return 1.0 / (theta ** (np.arange(0, head_dim, 2, dtype=np.float64)
+                            / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float):
+    """x: (..., S, H, Dh); positions: broadcastable to (..., S)."""
+    dh = x.shape[-1]
+    freqs = jnp.asarray(rope_freqs(dh, theta), jnp.float32)       # (Dh/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs     # (..., S, Dh/2)
+    cos = jnp.cos(angles)[..., None, :]                            # (..., S, 1, Dh/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x: jnp.ndarray, positions3: jnp.ndarray, theta: float,
+                sections=(16, 24, 24)):
+    """Qwen2-VL multimodal RoPE: head_dim/2 freq slots split into
+    (temporal, height, width) sections, each rotated by its own position id.
+
+    x: (B, S, H, Dh); positions3: (B, S, 3) int32.
+    ``sections`` entries sum to Dh/2 (scaled automatically if not).
+    """
+    dh = x.shape[-1]
+    half = dh // 2
+    sec = np.asarray(sections, np.int64)
+    if sec.sum() != half:
+        sec = np.maximum(1, sec * half // max(1, int(sec.sum())))
+        sec[-1] = half - sec[:-1].sum()
+    freqs = jnp.asarray(rope_freqs(dh, theta), jnp.float32)        # (half,)
+    # pick the position id for each frequency slot by section
+    sec_id = jnp.asarray(np.repeat(np.arange(3), sec), jnp.int32)  # (half,)
+    pos = positions3.astype(jnp.float32)[..., sec_id]              # (B,S,half)
+    angles = pos * freqs[None, None, :]
+    cos = jnp.cos(angles)[..., None, :]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(seq: int, d_model: int, offset=0) -> jnp.ndarray:
+    """MusicGen-style fixed sinusoidal position embeddings (S, D).
+    ``offset`` may be a traced scalar (decode fill level)."""
+    pos = (jnp.arange(seq, dtype=jnp.float32) + offset)[:, None]
+    dim = jnp.arange(0, d_model, 2, dtype=jnp.float32)[None, :]
+    inv = jnp.exp(-dim * (np.log(10000.0) / d_model))
+    ang = pos * inv
+    emb = jnp.zeros((seq, d_model), jnp.float32)
+    emb = emb.at[:, 0::2].set(jnp.sin(ang))
+    emb = emb.at[:, 1::2].set(jnp.cos(ang))
+    return emb
+
+
+# ------------------------------------------------------------------ MLP ----
+
+def mlp_apply(p: Params, x: jnp.ndarray, act: str) -> jnp.ndarray:
+    """Gated (SwiGLU) or plain (GeLU) MLP. Params: wi/(wg)/wo."""
+    if act == "swiglu":
+        h = jnp.einsum("bsd,df->bsf", x, p["wi"].astype(x.dtype))
+        g = jnp.einsum("bsd,df->bsf", x, p["wg"].astype(x.dtype))
+        h = jax.nn.silu(g) * h
+    elif act == "gelu":
+        h = jnp.einsum("bsd,df->bsf", x, p["wi"].astype(x.dtype))
+        h = jax.nn.gelu(h)
+    else:
+        raise ValueError(act)
+    return jnp.einsum("bsf,fd->bsd", h, p["wo"].astype(x.dtype))
+
+
+def mlp_init(key, d_model: int, d_ff: int, act: str, dtype=jnp.float32) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    s_in = 1.0 / np.sqrt(d_model)
+    s_out = 1.0 / np.sqrt(d_ff)
+    p = {
+        "wi": jax.random.normal(k1, (d_model, d_ff), dtype) * s_in,
+        "wo": jax.random.normal(k2, (d_ff, d_model), dtype) * s_out,
+    }
+    if act == "swiglu":
+        p["wg"] = jax.random.normal(k3, (d_model, d_ff), dtype) * s_in
+    return p

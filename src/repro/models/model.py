@@ -1,0 +1,486 @@
+"""ModelConfig + composable decoder LM covering all assigned families.
+
+One forward covers dense / MoE / SSM / hybrid / audio / vlm via config flags.
+Layers are scanned with stacked params (small HLO even at 81 layers); remat is
+configurable per block. Decode carries per-layer caches through the same scan.
+
+Inputs (the ``batch`` dict):
+  tokens      (B,S) int32          — lm families
+  embeds      (B,S,D) bf16         — audio/vlm stub frontends (assignment)
+  labels      (B,S) int32          — training
+  positions   (B,S) or (B,S,3)     — optional (mrope needs the 3-tuple)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import layers, attention, moe, ssm
+
+Params = dict[str, Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                  # dense | moe | ssm | hybrid | audio | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: int = 128
+    # MoE
+    n_experts: int = 0
+    top_k: int = 0
+    shared_expert: bool = False
+    # SSM
+    ssm_state: int = 0
+    ssm_conv: int = 4
+    ssm_expand: int = 2
+    mamba_version: int = 1
+    ssd_head_p: int = 64
+    # hybrid (zamba2): shared attention block applied every `attn_every` slots
+    attn_every: int = 0
+    # attention / misc
+    qk_norm: bool = False
+    rope: str = "rope"           # rope | mrope | sinusoidal | none
+    rope_theta: float = 1e4
+    norm: str = "rms"            # rms | layernorm | rms_nonparam
+    act: str = "swiglu"          # swiglu | gelu
+    tie_embeddings: bool = False
+    input_is_embeds: bool = False  # audio/vlm stub frontend
+    # execution knobs (perf-iterated, not architecture)
+    remat: str = "block"         # none | block
+    kv_chunk: int = 1024
+    ssm_q_chunk: int = 128
+    capacity_factor: float = 1.25
+    compute_dtype: str = "bfloat16"
+    # cost-analysis mode: fully unroll every scan so compiled.cost_analysis()
+    # sees all FLOPs (XLA counts a while-loop body exactly once — measured)
+    unroll_scans: bool = False
+    # sequence-parallel residual stream: PartitionSpec entries (as nested
+    # tuples/strs/None) applied to block-boundary activations (B, S, D).
+    # Megatron-SP: saved remat residuals shrink by the TP degree.
+    act_pspec: tuple | None = None
+    # flat-head GQA attention (shard H=Hkv·G q-heads instead of capping TP
+    # at Hkv ways — see attention.blocked_attention); §Perf lever
+    attn_flat_kv: bool = False
+    # master parameter dtype: "float32" (fp32 master + bf16 compute casts)
+    # or "bfloat16" (pure-bf16 params, fp32 optimizer moments); §Perf lever
+    param_dtype: str = "float32"
+    # serving shard policy (§Perf levers for decode cells):
+    # seq-shard the long-context KV cache over data axes vs replicate it
+    serve_seq_shard: bool = True
+    # FSDP-shard serving weights over data (per-token gathers) vs TP-only
+    serve_fsdp: bool = True
+
+    @property
+    def attn_qdim(self) -> int:
+        return self.n_heads * self.head_dim
+
+    @property
+    def dtype(self):
+        return jnp.dtype(self.compute_dtype)
+
+    def param_count(self) -> int:
+        """Analytic total parameter count (for 6ND roofline accounting)."""
+        shapes = jax.eval_shape(lambda k: init_params(self, k),
+                                jax.random.PRNGKey(0))
+        return sum(int(np.prod(x.shape)) for x in jax.tree.leaves(shapes))
+
+    def active_param_count(self) -> int:
+        """Params touched per token (MoE: top_k of n_experts + shared)."""
+        total = self.param_count()
+        if self.family != "moe" or self.n_experts == 0:
+            return total
+        expert_p = self.n_layers * self.n_experts * self.d_model * self.d_ff \
+            * (3 if self.act == "swiglu" else 2)
+        active = total - expert_p + expert_p * self.top_k / self.n_experts
+        return int(active)
+
+
+# ----------------------------------------------------------------- init ----
+
+def _norm_init(cfg) -> Params:
+    if cfg.norm == "rms_nonparam":
+        return {}
+    if cfg.norm == "layernorm":
+        return {"scale": jnp.ones((cfg.d_model,), jnp.float32),
+                "bias": jnp.zeros((cfg.d_model,), jnp.float32)}
+    return {"scale": jnp.ones((cfg.d_model,), jnp.float32)}
+
+
+def _norm_apply(p: Params, x, cfg):
+    if cfg.norm == "layernorm":
+        return layers.layer_norm(x, p.get("scale"), p.get("bias"))
+    return layers.rms_norm(x, p.get("scale"))
+
+
+def _block_init(cfg: ModelConfig, key) -> Params:
+    """One decoder block's params (unstacked)."""
+    k1, k2, k3 = jax.random.split(key, 3)
+    p: Params = {"norm1": _norm_init(cfg)}
+    if cfg.family in ("ssm",):
+        p["mamba"] = ssm.mamba1_init(k1, cfg.d_model, cfg.ssm_state,
+                                     cfg.ssm_expand, cfg.ssm_conv)
+        return p
+    if cfg.family == "hybrid":
+        p["mamba"] = ssm.mamba2_init(k1, cfg.d_model, cfg.ssm_state,
+                                     cfg.ssm_expand, cfg.ssm_conv,
+                                     cfg.ssd_head_p)
+        return p
+    p["attn"] = attention.attn_init(k1, cfg.d_model, cfg.n_heads,
+                                    cfg.n_kv_heads, cfg.head_dim, cfg.qk_norm)
+    p["norm2"] = _norm_init(cfg)
+    if cfg.family == "moe":
+        p["moe"] = moe.moe_init(k2, cfg.d_model, cfg.d_ff, cfg.n_experts,
+                                cfg.act, cfg.shared_expert)
+    else:
+        p["mlp"] = layers.mlp_init(k2, cfg.d_model, cfg.d_ff, cfg.act)
+    return p
+
+
+def init_params(cfg: ModelConfig, key) -> Params:
+    ke, kl, kh, ka = jax.random.split(key, 4)
+    pdt = jnp.dtype(cfg.param_dtype)
+    p: Params = {}
+    p["embed"] = (jax.random.normal(
+        ke, (cfg.vocab, cfg.d_model), jnp.float32) * 0.02).astype(pdt)
+    # stacked per-layer params for scan
+    p["layers"] = jax.vmap(lambda k: _block_init(cfg, k))(
+        jax.random.split(kl, cfg.n_layers))
+    if cfg.family == "hybrid" and cfg.attn_every:
+        p["shared_attn"] = {
+            "norm": _norm_init(cfg),
+            "attn": attention.attn_init(ka, cfg.d_model, cfg.n_heads,
+                                        cfg.n_kv_heads, cfg.head_dim,
+                                        cfg.qk_norm),
+        }
+    p["final_norm"] = _norm_init(cfg)
+    if not cfg.tie_embeddings:
+        p["lm_head"] = (jax.random.normal(
+            kh, (cfg.d_model, cfg.vocab), jnp.float32) * 0.02).astype(pdt)
+    # stacked/attention/norm leaves follow the master dtype too
+    if pdt != jnp.float32:
+        for k in ("layers", "shared_attn"):
+            if k in p:
+                p[k] = jax.tree.map(lambda a: a.astype(pdt), p[k])
+        p["final_norm"] = jax.tree.map(lambda a: a.astype(pdt),
+                                       p["final_norm"])
+    return p
+
+
+# ---------------------------------------------------------------- cache ----
+
+def n_attn_apps(cfg: ModelConfig) -> int:
+    """How many attention applications exist (hybrid: shared-block count)."""
+    if cfg.family in ("ssm",):
+        return 0
+    if cfg.family == "hybrid":
+        return 0 if not cfg.attn_every else len(
+            [i for i in range(cfg.n_layers)
+             if i % cfg.attn_every == cfg.attn_every - 1])
+    return cfg.n_layers
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int, dtype=None):
+    """Decode cache pytree: attention KV (+fill) and/or SSM states."""
+    dtype = dtype or cfg.dtype
+    cache: Params = {}
+    na = n_attn_apps(cfg)
+    if na:
+        kvd = cfg.n_kv_heads
+        cache["kv"] = {
+            "k": jnp.zeros((na, batch, max_seq, kvd, cfg.head_dim), dtype),
+            "v": jnp.zeros((na, batch, max_seq, kvd, cfg.head_dim), dtype),
+            "fill": jnp.zeros((), jnp.int32),
+        }
+    if cfg.family in ("ssm", "hybrid"):
+        conv, h = ssm.ssm_state_shapes(cfg, batch, cfg.ssd_head_p)
+        cache["ssm"] = {
+            "conv": jnp.zeros((cfg.n_layers,) + conv, dtype),
+            "h": jnp.zeros((cfg.n_layers,) + h, jnp.float32),
+        }
+    return cache
+
+
+# -------------------------------------------------------------- forward ----
+
+def _constrain_act(x, cfg: ModelConfig):
+    """Apply the configured residual-stream sharding constraint (SP)."""
+    if cfg.act_pspec is None:
+        return x
+    from repro.models.moe import _in_mesh_context
+    if not _in_mesh_context():
+        return x
+    spec = jax.sharding.PartitionSpec(*cfg.act_pspec)
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+def _gather_act(x, cfg: ModelConfig):
+    """SP → replicated-sequence transition, placed explicitly on the bf16
+    hidden states entering attention. Without this GSPMD floats the gather
+    to the f32 RoPE/score intermediates inside attention — 3 gathers at 2×
+    the bytes (measured; §Perf)."""
+    if cfg.act_pspec is None:
+        return x
+    from repro.models.moe import _in_mesh_context
+    if not _in_mesh_context():
+        return x
+    dp = cfg.act_pspec[0]
+    spec = jax.sharding.PartitionSpec(dp, None, None)
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+def _attn_block(bp: Params, x, cfg, positions, kv_cache):
+    h = _gather_act(_norm_apply(bp["norm1"], x, cfg), cfg)
+    out, new_kv = attention.attn_apply(
+        bp["attn"], h, cfg, positions=positions, cache=kv_cache,
+        kv_chunk=cfg.kv_chunk)
+    # constrain the row-parallel projection output to the SP spec *at the
+    # psum source* so GSPMD emits reduce-scatter instead of all-reduce+slice
+    x = x + _constrain_act(out, cfg)
+    h = _norm_apply(bp["norm2"], x, cfg)
+    if cfg.family == "moe":
+        out, aux = moe.moe_apply(bp["moe"], h, cfg,
+                                 capacity_factor=cfg.capacity_factor)
+    else:
+        out, aux = layers.mlp_apply(bp["mlp"], h, cfg.act), 0.0
+    return x + _constrain_act(out, cfg), new_kv, aux
+
+
+def _mamba_block(bp: Params, x, cfg, state):
+    h = _norm_apply(bp["norm1"], x, cfg)
+    fn = ssm.mamba1_apply if cfg.mamba_version == 1 else ssm.mamba2_apply
+    kw = {} if cfg.mamba_version == 1 else {"head_p": cfg.ssd_head_p}
+    out, new_state = fn(bp["mamba"], h, cfg, state=state,
+                        q_chunk=cfg.ssm_q_chunk, **kw)
+    return x + out, new_state
+
+
+def forward(params: Params, cfg: ModelConfig, batch: dict, *,
+            cache: Optional[Params] = None):
+    """Returns (logits (B,S,V), aux dict with 'moe_aux', new cache or None)."""
+    if cfg.input_is_embeds:
+        x = batch["embeds"].astype(cfg.dtype)
+        B, S = x.shape[0], x.shape[1]
+    else:
+        tokens = batch["tokens"]
+        B, S = tokens.shape
+        x = params["embed"][tokens].astype(cfg.dtype)
+    positions = batch.get("positions")
+    fill0 = cache["kv"]["fill"] if (cache and "kv" in cache) else None
+    if cfg.rope == "sinusoidal":
+        off = 0 if fill0 is None else fill0
+        pos_emb = layers.sinusoidal_positions(S, cfg.d_model, off)
+        x = x + pos_emb[None].astype(cfg.dtype)
+
+    decode = cache is not None
+    unroll = True if cfg.unroll_scans else 1
+    new_cache: Params = {} if decode else None
+    moe_aux = jnp.zeros((), jnp.float32)
+
+    def maybe_ckpt(f):
+        return jax.checkpoint(f) if (cfg.remat == "block" and not decode) else f
+
+    if cfg.family in ("dense", "moe", "audio", "vlm"):
+        if decode:
+            fills = cache["kv"]["fill"]
+
+            # full cache rides the carry; per-layer slices are read/written
+            # with dynamic_index/update — in-place friendly for XLA buffer
+            # assignment (a stacked-ys formulation costs ~2× cache in temp)
+            def body2(carry, xs_):
+                x, aux, ks, vs = carry
+                x = _constrain_act(x, cfg)
+                bp, i = xs_
+                k_l = jax.lax.dynamic_index_in_dim(ks, i, keepdims=False)
+                v_l = jax.lax.dynamic_index_in_dim(vs, i, keepdims=False)
+                x, new_kv, a = _attn_block(bp, x, cfg, positions,
+                                           (k_l, v_l, fills))
+                ks = jax.lax.dynamic_update_index_in_dim(ks, new_kv[0], i, 0)
+                vs = jax.lax.dynamic_update_index_in_dim(vs, new_kv[1], i, 0)
+                return (x, aux + a, ks, vs), None
+            (x, moe_aux, nk, nv), _ = jax.lax.scan(
+                body2, (x, moe_aux, cache["kv"]["k"], cache["kv"]["v"]),
+                (params["layers"], jnp.arange(cfg.n_layers)),
+                unroll=unroll)
+            new_cache["kv"] = {"k": nk, "v": nv, "fill": fills + S}
+        else:
+            def body3(carry, bp):
+                x, aux = carry
+                x = _constrain_act(x, cfg)
+                x, _, a = _attn_block(bp, x, cfg, positions, None)
+                return (x, aux + a), None
+            (x, moe_aux), _ = jax.lax.scan(
+                maybe_ckpt(body3), (x, moe_aux), params["layers"],
+                unroll=unroll)
+
+    elif cfg.family == "ssm":
+        if decode:
+            def body4(x, xs_):
+                x = _constrain_act(x, cfg)
+                bp, (conv_l, h_l) = xs_
+                x, st = _mamba_block(bp, x, cfg, (conv_l, h_l))
+                return x, st
+            x, (ncv, nh) = jax.lax.scan(
+                body4, x, (params["layers"],
+                           (cache["ssm"]["conv"], cache["ssm"]["h"])),
+                unroll=unroll)
+            new_cache["ssm"] = {"conv": ncv, "h": nh}
+        else:
+            def body5(x, bp):
+                x = _constrain_act(x, cfg)
+                x, _ = _mamba_block(bp, x, cfg, None)
+                return x, None
+            x, _ = jax.lax.scan(maybe_ckpt(body5), x, params["layers"],
+                                unroll=unroll)
+
+    elif cfg.family == "hybrid":
+        period = cfg.attn_every
+        sap = params.get("shared_attn")
+
+        def shared_attn_apply(x, j, kv_all, fills):
+            """The shared attention block at application slot j."""
+            h = _norm_apply(sap["norm"], x, cfg)
+            kv = None
+            if kv_all is not None:
+                k_j = jax.lax.dynamic_index_in_dim(kv_all[0], j,
+                                                   keepdims=False)
+                v_j = jax.lax.dynamic_index_in_dim(kv_all[1], j,
+                                                   keepdims=False)
+                kv = (k_j, v_j, fills)
+            out, new_kv = attention.attn_apply(
+                sap["attn"], h, cfg, positions=positions, cache=kv,
+                kv_chunk=cfg.kv_chunk)
+            if kv_all is not None:
+                kv_all = (
+                    jax.lax.dynamic_update_index_in_dim(
+                        kv_all[0], new_kv[0], j, 0),
+                    jax.lax.dynamic_update_index_in_dim(
+                        kv_all[1], new_kv[1], j, 0))
+            return x + out, kv_all
+
+        if cfg.unroll_scans:
+            # literal python loop: no lax.cond, so HLO cost analysis sees
+            # exactly the 13 real shared-attn applications, not both branches
+            # of all n_layers conds (6× memory-term overcount measured)
+            if decode:
+                kv_all = (cache["kv"]["k"], cache["kv"]["v"])
+                fills = cache["kv"]["fill"]
+            else:
+                kv_all, fills = None, None
+            new_conv, new_h = [], []
+            for i in range(cfg.n_layers):
+                bp = jax.tree.map(lambda a: a[i], params["layers"])
+                st = None
+                if decode:
+                    st = (cache["ssm"]["conv"][i], cache["ssm"]["h"][i])
+                x = _constrain_act(x, cfg)
+                x, st_out = _mamba_block(bp, x, cfg, st)
+                if decode:
+                    new_conv.append(st_out[0])
+                    new_h.append(st_out[1])
+                if sap is not None and i % period == period - 1:
+                    x, kv_all = shared_attn_apply(x, i // period, kv_all,
+                                                  fills)
+            if decode:
+                new_cache["ssm"] = {"conv": jnp.stack(new_conv),
+                                    "h": jnp.stack(new_h)}
+                new_cache["kv"] = {"k": kv_all[0], "v": kv_all[1],
+                                   "fill": fills + S}
+            x = _finish_lm(params, cfg, x)
+            return x, {"moe_aux": moe_aux}, new_cache
+
+        def hybrid_step(x, bp, idx, ssm_st, kv_all, fills):
+            x, new_st = _mamba_block(bp, x, cfg, ssm_st)
+            if sap is not None:
+                j = idx // period
+                use = (idx % period) == (period - 1)
+
+                def do_attn(op):
+                    x, kv_all = op
+                    h = _norm_apply(sap["norm"], x, cfg)
+                    kv = None
+                    if kv_all is not None:
+                        k_j = jax.lax.dynamic_index_in_dim(
+                            kv_all[0], j, keepdims=False)
+                        v_j = jax.lax.dynamic_index_in_dim(
+                            kv_all[1], j, keepdims=False)
+                        kv = (k_j, v_j, fills)
+                    out, new_kv = attention.attn_apply(
+                        sap["attn"], h, cfg, positions=positions, cache=kv,
+                        kv_chunk=cfg.kv_chunk)
+                    if kv_all is not None:
+                        kv_all = (
+                            jax.lax.dynamic_update_index_in_dim(
+                                kv_all[0], new_kv[0], j, 0),
+                            jax.lax.dynamic_update_index_in_dim(
+                                kv_all[1], new_kv[1], j, 0))
+                    return (x + out, kv_all)
+
+                x, kv_all = jax.lax.cond(use, do_attn, lambda op: op,
+                                         (x, kv_all))
+            return x, new_st, kv_all
+
+        if decode:
+            kv_all = (cache["kv"]["k"], cache["kv"]["v"])
+            fills = cache["kv"]["fill"]
+
+            def body6(carry, xs_):
+                x, kv_all = carry
+                x = _constrain_act(x, cfg)
+                bp, (conv_l, h_l), idx = xs_
+                x, st, kv_all = hybrid_step(x, bp, idx, (conv_l, h_l),
+                                            kv_all, fills)
+                return (x, kv_all), st
+            (x, kv_all), (ncv, nh) = jax.lax.scan(
+                body6, (x, kv_all),
+                (params["layers"],
+                 (cache["ssm"]["conv"], cache["ssm"]["h"]),
+                 jnp.arange(cfg.n_layers)), unroll=unroll)
+            new_cache["ssm"] = {"conv": ncv, "h": nh}
+            new_cache["kv"] = {"k": kv_all[0], "v": kv_all[1],
+                               "fill": fills + S}
+        else:
+            def body7(x, xs_):
+                x = _constrain_act(x, cfg)
+                bp, idx = xs_
+                x, _, _ = hybrid_step(x, bp, idx, None, None, None)
+                return x, None
+            x, _ = jax.lax.scan(maybe_ckpt(body7), x,
+                                (params["layers"],
+                                 jnp.arange(cfg.n_layers)), unroll=unroll)
+    else:
+        raise ValueError(cfg.family)
+
+    logits = _finish_lm(params, cfg, x)
+    return logits, {"moe_aux": moe_aux}, new_cache
+
+
+def _finish_lm(params: Params, cfg: ModelConfig, x):
+    x = _constrain_act(x, cfg)
+    x = _norm_apply(params["final_norm"], x, cfg)
+    head = (params["embed"].T if cfg.tie_embeddings
+            else params["lm_head"]).astype(cfg.dtype)
+    return jnp.einsum("bsd,dv->bsv", x, head)
+
+
+def decode_step(params: Params, cfg: ModelConfig, tokens_or_embeds,
+                cache: Params, positions=None):
+    """One decode step (S new tokens, usually 1). Returns (logits, cache)."""
+    if cfg.input_is_embeds:
+        batch = {"embeds": tokens_or_embeds}
+    else:
+        batch = {"tokens": tokens_or_embeds}
+    if positions is not None:
+        batch["positions"] = positions
+    logits, _, new_cache = forward(params, cfg, batch, cache=cache)
+    return logits, new_cache

@@ -1,0 +1,135 @@
+"""Mixture-of-Experts layer: top-k routing, sort-based capacity dispatch.
+
+Dispatch is *group-local sort* (MegaBlocks-lite): tokens are grouped by the
+batch dim (which is data-sharded), sorted by assigned expert inside each
+group, clamped to a per-group capacity, gathered into (B, E, C, D) expert
+batches, and pushed through per-expert matmuls. Under GSPMD the
+(tokens: data-sharded) → (experts: model-sharded) regroup lowers to an
+all-to-all — exactly the EP communication pattern we want the dry-run to
+surface (and the roofline to price).
+
+A capacity-dropped token contributes nothing (its combine weight is zero) —
+standard Switch/GShard semantics. Router aux loss (load-balancing) is
+returned for the train loss.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Params = dict[str, Any]
+
+
+def moe_init(key, d_model: int, d_ff: int, n_experts: int, act: str,
+             shared_expert: bool, dtype=jnp.float32) -> Params:
+    ks = jax.random.split(key, 6)
+    s_in = 1.0 / np.sqrt(d_model)
+    s_out = 1.0 / np.sqrt(d_ff)
+    p: Params = {
+        "router": jax.random.normal(ks[0], (d_model, n_experts), dtype) * s_in,
+        "w1": jax.random.normal(ks[1], (n_experts, d_model, d_ff), dtype) * s_in,
+        "w2": jax.random.normal(ks[2], (n_experts, d_ff, d_model), dtype) * s_out,
+    }
+    if act == "swiglu":
+        p["wg"] = jax.random.normal(ks[3], (n_experts, d_model, d_ff),
+                                    dtype) * s_in
+    if shared_expert:
+        from repro.models.layers import mlp_init
+        p["shared"] = mlp_init(ks[4], d_model, d_ff, act, dtype)
+    return p
+
+
+def moe_apply(p: Params, x: jnp.ndarray, cfg, *, capacity_factor: float = 1.25):
+    """x: (B, S, D) → (out (B,S,D), aux_loss scalar)."""
+    B, S, D = x.shape
+    E, K = cfg.n_experts, cfg.top_k
+    C = int(np.ceil(S * K / E * capacity_factor))
+    C = max(8, -(-C // 8) * 8)  # pad capacity to a lane-friendly multiple
+
+    logits = jnp.einsum("bsd,de->bse", x, p["router"].astype(x.dtype))
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, K)          # (B,S,K)
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9)
+
+    # load-balance aux loss (Switch): E * Σ_e mean(frac_tokens_e)·mean(prob_e)
+    # (scatter-add bincount — no (B,S,E) one-hot materialization)
+    me = jnp.mean(probs, axis=(0, 1))                        # (E,)
+    ce = jnp.zeros((E,), jnp.float32).at[
+        expert_idx[..., 0].reshape(-1)].add(1.0) / (B * S)
+    aux = E * jnp.sum(me * ce)
+
+    # ---- group-local sort dispatch (group = batch row) ----
+    SK = S * K
+    e_flat = expert_idx.reshape(B, SK)                        # (B, SK)
+    g_flat = gate_vals.reshape(B, SK).astype(jnp.float32)
+    tok = jnp.broadcast_to(jnp.arange(S)[:, None], (S, K)).reshape(SK)
+    tok = jnp.broadcast_to(tok[None], (B, SK))                # (B, SK)
+
+    order = jnp.argsort(e_flat, axis=1, stable=True)          # (B, SK)
+    e_sorted = jnp.take_along_axis(e_flat, order, axis=1)
+    tok_sorted = jnp.take_along_axis(tok, order, axis=1)
+    g_sorted = jnp.take_along_axis(g_flat, order, axis=1)
+
+    # per-expert start offsets from the sorted ids (no (B,SK,E) one-hot)
+    starts = jax.vmap(
+        lambda row: jnp.searchsorted(row, jnp.arange(E)))(e_sorted)
+    rank = jnp.arange(SK)[None, :] - jnp.take_along_axis(
+        starts, e_sorted, axis=1)
+    keep = rank < C
+    slot = jnp.where(keep, e_sorted * C + rank, E * C)        # (B, SK)
+
+    # invert: expert slot -> source token (sentinel S = zero row)
+    src = jnp.full((B, E * C + 1), S, jnp.int32)
+    src = jax.vmap(lambda s_, sl_, t_: s_.at[sl_].set(
+        jnp.where(sl_ < E * C, t_, S).astype(jnp.int32)))(src, slot, tok_sorted)
+    src = src[:, : E * C]
+
+    x_pad = jnp.concatenate([x, jnp.zeros((B, 1, D), x.dtype)], axis=1)
+    xe = jnp.take_along_axis(x_pad, src[..., None], axis=1)   # (B, E*C, D)
+    xe = xe.reshape(B, E, C, D)
+    if _in_mesh_context():
+        # EP regroup: tokens (data-sharded) → experts (model-sharded); the
+        # batch axes come from the configured activation spec so the pod
+        # axis is respected on multi-pod meshes
+        dp = cfg.act_pspec[0] if getattr(cfg, "act_pspec", None) else "data"
+        xe = jax.lax.with_sharding_constraint(
+            xe, jax.sharding.PartitionSpec(dp, "model", None, None))
+
+    h = jnp.einsum("becd,edf->becf", xe, p["w1"].astype(x.dtype))
+    if "wg" in p:
+        g = jnp.einsum("becd,edf->becf", xe, p["wg"].astype(x.dtype))
+        h = jax.nn.silu(g) * h
+    else:
+        h = jax.nn.gelu(h)
+    ye = jnp.einsum("becf,efd->becd", h, p["w2"].astype(x.dtype))
+    y_flat = ye.reshape(B, E * C, D)
+
+    # combine: each kept (token copy) adds gate * y[slot] at its token
+    y_pad = jnp.concatenate([y_flat, jnp.zeros((B, 1, D), y_flat.dtype)],
+                            axis=1)
+    safe_slot = jnp.minimum(slot, E * C)
+    y_sorted = jnp.take_along_axis(y_pad, safe_slot[..., None], axis=1)
+    w = (g_sorted * keep.astype(jnp.float32))[..., None]
+    contrib = (y_sorted.astype(jnp.float32) * w).astype(x.dtype)
+    out = jnp.zeros((B, S, D), x.dtype)
+    out = jax.vmap(lambda o, t, c: o.at[t].add(c))(out, tok_sorted, contrib)
+
+    if "shared" in p:
+        from repro.models.layers import mlp_apply
+        out = out + mlp_apply(p["shared"], x, cfg.act)
+    return out, aux.astype(jnp.float32)
+
+
+def _in_mesh_context() -> bool:
+    """True when called under an active mesh (so constraints are legal)."""
+    try:
+        from jax._src import mesh as mesh_lib
+        env_mesh = mesh_lib.thread_resources.env.physical_mesh
+        return not env_mesh.empty
+    except Exception:
+        return False

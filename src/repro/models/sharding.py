@@ -1,0 +1,167 @@
+"""Sharding rules: param/activation PartitionSpecs for the production mesh.
+
+Axes (DESIGN.md §5): "data" = DP/FSDP, "model" = TP/EP, optional leading
+"pod" = cross-pod DP. Strategy:
+
+  * TP over "model" on the flattened head dims (q_dim / kv_dim / d_ff /
+    vocab) — divisibility by 16 holds for every assigned arch on the flat
+    dims even when head counts (40, 24, 9, 12) do not divide 16;
+  * FSDP over ("pod","data") on the other large dim of each ≥2-D param
+    (ZeRO-3-style; XLA inserts the pipelined all-gathers around the scan);
+  * activations: batch over ("pod","data");
+  * MoE experts over "model" (EP, 1 expert/shard at E=16);
+  * SSM: TP over d_inner-derived dims, scan stays local.
+
+`param_specs` walks the param pytree by path; `batch_specs` shards inputs.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.model import ModelConfig
+
+
+def _fsdp_axes(mesh_axes) -> tuple:
+    return tuple(a for a in ("pod", "data") if a in mesh_axes)
+
+
+def _leaf_spec(path: str, shape: tuple, cfg: ModelConfig, fsdp, *,
+               fsdp_enabled: bool = True) -> P:
+    """Spec for one param leaf. ``path`` is '/'-joined key names (no layer
+    index — stacked leaves get their leading L dim unsharded)."""
+    f = fsdp if fsdp_enabled else ()
+    nd = len(shape)
+
+    def spec(*dims):
+        # pad with None for any leading stacked-layer dim
+        return P(*([None] * (nd - len(dims)) + list(dims)))
+
+    if "embed" in path:
+        # vocab-parallel: lookup lowers to masked-gather + psum, and the tied
+        # LM head yields vocab-sharded logits (keeps CE transients 1/TP)
+        return P("model", None)
+    if "lm_head" in path:
+        return P(f or None, "model")
+    if "router" in path:
+        return spec(f or None, None)
+    if path.endswith(("moe/w1", "moe/wg")):
+        return spec("model", f or None, None)       # (E, D, F): EP
+    if path.endswith("moe/w2"):
+        return spec("model", None, f or None)       # (E, F, D): EP
+    if "attn" in path and path.endswith(("wq", "wk", "wv")):
+        return spec(f or None, "model")
+    if "attn" in path and path.endswith("wo"):
+        return spec("model", f or None)
+    if path.endswith(("mlp/wi", "mlp/wg", "shared/wi", "shared/wg")):
+        return spec(f or None, "model")
+    if path.endswith(("mlp/wo", "shared/wo")):
+        return spec("model", f or None)
+    if path.endswith(("mamba/in_proj", "mamba/x_proj")):
+        return spec(f or None, "model")
+    if path.endswith(("mamba/out_proj", "mamba/dt_proj")):
+        return spec("model", f or None)
+    if path.endswith("mamba/A_log") and cfg.mamba_version == 1:
+        return spec("model", None)                  # (DI, N) mamba1
+    if path.endswith(("mamba/conv_w", "mamba/conv_b")) and nd >= 1:
+        return spec("model")                        # channel dim last
+    if path.endswith(("mamba/D", "mamba/dt_bias", "mamba/A_log",
+                      "mamba/norm_scale")):
+        return spec("model") if nd >= 1 and shape[-1] % 16 == 0 else spec(None)
+    # norms, small vectors: replicated
+    return P(*([None] * nd))
+
+
+def param_specs(cfg: ModelConfig, params_shape: Any, mesh_axes,
+                *, fsdp_enabled: bool = True) -> Any:
+    """PartitionSpec pytree matching params (works on shapes or arrays)."""
+    fsdp = _fsdp_axes(mesh_axes)
+    fsdp = fsdp if len(fsdp) > 0 else ()
+
+    def walk(tree, prefix):
+        if isinstance(tree, dict):
+            return {k: walk(v, f"{prefix}/{k}" if prefix else k)
+                    for k, v in tree.items()}
+        shape = tuple(tree.shape)
+        return _leaf_spec(prefix, shape, cfg, fsdp,
+                          fsdp_enabled=fsdp_enabled)
+
+    return walk(params_shape, "")
+
+
+def batch_specs(cfg: ModelConfig, batch_shape: dict, mesh_axes,
+                mesh_shape: dict | None = None) -> dict:
+    """Inputs: batch dim over (pod, data); replicate if not divisible
+    (long_500k has global_batch=1)."""
+    dp = tuple(a for a in ("pod", "data") if a in mesh_axes)
+    out = {}
+    for k, v in batch_shape.items():
+        nd = len(v.shape)
+        spec_dp = dp
+        if mesh_shape is not None:
+            n_dp = 1
+            for a in dp:
+                n_dp *= mesh_shape[a]
+            if v.shape[0] % max(n_dp, 1) != 0:
+                spec_dp = None
+        out[k] = P(spec_dp, *([None] * (nd - 1)))
+    return out
+
+
+def cache_specs(cfg: ModelConfig, cache_shape: Any, mesh_axes,
+                *, seq_shard: bool = False,
+                mesh_shape: dict | None = None) -> Any:
+    """Decode-cache specs: batch over data axes, kv/state channels over model.
+
+    seq_shard=True shards the KV cache *sequence* dim over the data axes
+    instead of batch (long-context, batch=1 — the long_500k cells).
+    seq_shard=False with batch==1 replicates the cache over the data axes
+    (it fits — and keeps decode attention collective-free on that axis).
+    """
+    dp = tuple(a for a in ("pod", "data") if a in mesh_axes)
+    n_dp = 1
+    for a in dp:
+        n_dp *= (mesh_shape or {}).get(a, 1)
+
+    def bdp(batch_size: int):
+        """data axes for a batch dim, or None if not divisible."""
+        if mesh_shape is not None and batch_size % max(n_dp, 1) != 0:
+            return None
+        return dp
+
+    def walk(tree, prefix):
+        if isinstance(tree, dict):
+            return {k: walk(v, f"{prefix}/{k}" if prefix else k)
+                    for k, v in tree.items()}
+        nd = len(tree.shape)
+        if prefix.endswith(("kv/k", "kv/v")):
+            # (L, B, S, Hkv, Dh): head_dim over "model" (always divisible —
+            # kv-head counts are not), batch or seq over the data axes
+            if seq_shard:
+                return P(None, None, dp, None, "model")
+            return P(None, bdp(tree.shape[1]), None, None, "model")
+        if prefix.endswith("kv/fill"):
+            return P()
+        if prefix.endswith("ssm/conv"):
+            # (L, B, Kw-1, C)
+            return P(None, bdp(tree.shape[1]), None, "model") \
+                if not seq_shard else P(None, None, None, "model")
+        if prefix.endswith("ssm/h"):
+            # mamba1 (L,B,DI,N) / mamba2 (L,B,NH,P,N)
+            base = [None] * nd
+            base[1] = bdp(tree.shape[1]) if not seq_shard else None
+            if nd >= 3:
+                base[2] = "model"
+            return P(*base)
+        return P(*([None] * nd))
+
+    return walk(cache_shape, "")
+
+
+def logical_out_spec(mesh_axes) -> P:
+    dp = tuple(a for a in ("pod", "data") if a in mesh_axes)
+    return P(dp, None, "model")

@@ -1,0 +1,271 @@
+"""State-space blocks: Mamba1 (selective scan) and Mamba2 (SSD, chunked).
+
+Mamba1 (falcon-mamba): diagonal A (d_inner, d_state); the recurrence is
+inherently elementwise (VPU-bound on TPU — no MXU structure exists; this is
+the honest hardware story and partly why Mamba2 reformulates it). We scan
+over sequence *chunks* with rematerialized inner position scans so backward
+memory is O(S/Q · state) instead of O(S · state).
+
+Mamba2 (zamba2): scalar-per-head A enables the SSD chunked algorithm —
+intra-chunk work becomes attention-like matmuls (MXU-friendly) and
+inter-chunk work a short scan over chunk states.
+
+Both expose decode_step-compatible single-token recurrences with carried
+(conv_state, ssm_state).
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Params = dict[str, Any]
+
+
+# -------------------------------------------------------------- helpers ----
+
+def causal_conv1d(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray | None,
+                  state: jnp.ndarray | None = None):
+    """Depthwise causal conv. x: (B,S,C), w: (Kw,C). state: (B,Kw-1,C) tail of
+    previous inputs (decode). Returns (y, new_state)."""
+    Kw = w.shape[0]
+    if state is None:
+        xp = jnp.pad(x, ((0, 0), (Kw - 1, 0), (0, 0)))
+    else:
+        xp = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1], :] * w[i][None, None, :]
+            for i in range(Kw))
+    if b is not None:
+        y = y + b[None, None, :]
+    new_state = xp[:, -(Kw - 1):, :] if Kw > 1 else jnp.zeros_like(x[:, :0])
+    return y, new_state
+
+
+# --------------------------------------------------------------- Mamba1 ----
+
+def mamba1_init(key, d_model: int, d_state: int, expand: int, d_conv: int,
+                dtype=jnp.float32) -> Params:
+    di = expand * d_model
+    dt_rank = max(1, -(-d_model // 16))
+    ks = jax.random.split(key, 7)
+    s = 1.0 / np.sqrt(d_model)
+    si = 1.0 / np.sqrt(di)
+    return {
+        "in_proj": jax.random.normal(ks[0], (d_model, 2 * di), dtype) * s,
+        "conv_w": jax.random.normal(ks[1], (d_conv, di), dtype) * 0.1,
+        "conv_b": jnp.zeros((di,), dtype),
+        "x_proj": jax.random.normal(ks[2], (di, dt_rank + 2 * d_state),
+                                    dtype) * si,
+        "dt_proj": jax.random.normal(ks[3], (dt_rank, di), dtype)
+        * (1.0 / np.sqrt(dt_rank)),
+        "dt_bias": jnp.zeros((di,), dtype) + np.log(np.expm1(0.01)),
+        "A_log": jnp.log(jnp.broadcast_to(
+            jnp.arange(1, d_state + 1, dtype=dtype), (di, d_state))),
+        "D": jnp.ones((di,), dtype),
+        "out_proj": jax.random.normal(ks[4], (di, d_model), dtype) * si,
+    }
+
+
+def _mamba1_scan(xc, dt, Bm, Cm, A, h0, q_chunk: int, unroll=1):
+    """Selective scan. xc,dt: (B,S,DI); Bm,Cm: (B,S,N); A: (DI,N); h0: (B,DI,N).
+    Returns (y (B,S,DI), h_final).
+
+    Within a chunk the diagonal recurrence h_t = d_t·h_{t-1} + u_t runs as a
+    log-depth ``associative_scan`` (TPU-friendly: wide elementwise ops, no
+    position-wise while loop — and visible to HLO cost analysis); chunks are
+    chained by a short lax.scan carrying the boundary state.
+    """
+    B, S, DI = xc.shape
+    N = Bm.shape[-1]
+    Q = min(q_chunk, S)
+    nq = -(-S // Q)
+    pad = nq * Q - S
+    if pad:
+        xc = jnp.pad(xc, ((0, 0), (0, pad), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+
+    def chunk_body(h, inp):
+        xq, dtq, bq, cq = inp          # (B,Q,DI) / (B,Q,N)
+        d = jnp.exp(dtq[..., None] * A[None, None])            # (B,Q,DI,N)
+        u = (dtq * xq)[..., None] * bq[:, :, None, :]          # (B,Q,DI,N)
+
+        def comb(a, b):
+            d1, u1 = a
+            d2, u2 = b
+            return d1 * d2, d2 * u1 + u2
+
+        dcum, ucum = jax.lax.associative_scan(comb, (d, u), axis=1)
+        hs = dcum * h[:, None] + ucum                          # (B,Q,DI,N)
+        yq = jnp.einsum("bqdn,bqn->bqd", hs, cq)
+        return hs[:, -1], yq
+
+    chunk_body = jax.checkpoint(chunk_body)
+    xs = tuple(a.reshape(B, nq, Q, -1).transpose(1, 0, 2, 3)
+               for a in (xc, dt, Bm, Cm))
+    h, ys = jax.lax.scan(chunk_body, h0.astype(jnp.float32), xs,
+                         unroll=unroll)
+    y = ys.transpose(1, 0, 2, 3).reshape(B, nq * Q, DI)
+    return y[:, :S], h
+
+
+def mamba1_apply(p: Params, x: jnp.ndarray, cfg, *, state=None,
+                 q_chunk: int = 64, unroll=1):
+    """x: (B,S,D). state: (conv_state, h) for decode or None for train.
+    Returns (out, new_state)."""
+    B, S, D = x.shape
+    di = cfg.ssm_expand * cfg.d_model
+    N = cfg.ssm_state
+    dt_rank = max(1, -(-cfg.d_model // 16))
+
+    xz = jnp.einsum("bsd,de->bse", x, p["in_proj"].astype(x.dtype))
+    xs, z = jnp.split(xz, 2, axis=-1)
+    conv_state = None if state is None else state[0]
+    xs, new_conv = causal_conv1d(xs, p["conv_w"].astype(x.dtype),
+                                 p["conv_b"].astype(x.dtype), conv_state)
+    xs = jax.nn.silu(xs)
+
+    proj = jnp.einsum("bse,ef->bsf", xs, p["x_proj"].astype(x.dtype))
+    dt_in = proj[..., :dt_rank]
+    Bm = proj[..., dt_rank:dt_rank + N].astype(jnp.float32)
+    Cm = proj[..., dt_rank + N:].astype(jnp.float32)
+    dt = jax.nn.softplus(
+        jnp.einsum("bsr,re->bse", dt_in, p["dt_proj"].astype(x.dtype))
+        .astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+
+    h0 = (jnp.zeros((B, di, N), jnp.float32) if state is None
+          else state[1].astype(jnp.float32))
+    y, h = _mamba1_scan(xs.astype(jnp.float32), dt, Bm, Cm, A, h0, q_chunk,
+                        unroll)
+    y = y + p["D"].astype(jnp.float32)[None, None] * xs.astype(jnp.float32)
+    y = (y.astype(x.dtype)) * jax.nn.silu(z)
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"].astype(x.dtype))
+    return out, (new_conv, h.astype(jnp.float32))
+
+
+# --------------------------------------------------------------- Mamba2 ----
+
+def mamba2_init(key, d_model: int, d_state: int, expand: int, d_conv: int,
+                head_p: int = 64, dtype=jnp.float32) -> Params:
+    di = expand * d_model
+    nh = di // head_p
+    ks = jax.random.split(key, 6)
+    s = 1.0 / np.sqrt(d_model)
+    si = 1.0 / np.sqrt(di)
+    # in_proj emits [x (di), z (di), B (N), C (N), dt (nh)]
+    return {
+        "in_proj": jax.random.normal(
+            ks[0], (d_model, 2 * di + 2 * d_state + nh), dtype) * s,
+        "conv_w": jax.random.normal(ks[1], (d_conv, di + 2 * d_state),
+                                    dtype) * 0.1,
+        "conv_b": jnp.zeros((di + 2 * d_state,), dtype),
+        "A_log": jnp.zeros((nh,), dtype),
+        "dt_bias": jnp.zeros((nh,), dtype) + np.log(np.expm1(0.05)),
+        "D": jnp.ones((nh,), dtype),
+        "norm_scale": jnp.ones((di,), dtype),
+        "out_proj": jax.random.normal(ks[2], (di, d_model), dtype) * si,
+    }
+
+
+def _ssd_chunked(xh, dt, A, Bm, Cm, h0, q_chunk: int, unroll=1):
+    """SSD. xh: (B,S,NH,P); dt: (B,S,NH); A: (NH,); Bm,Cm: (B,S,N);
+    h0: (B,NH,P,N). Returns (y (B,S,NH,P), h_final)."""
+    B, S, NH, P = xh.shape
+    N = Bm.shape[-1]
+    Q = min(q_chunk, S)
+    nq = -(-S // Q)
+    pad = nq * Q - S
+    if pad:
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+
+    # chunked views: (nq, B, Q, ...)
+    xq = xh.reshape(B, nq, Q, NH, P).transpose(1, 0, 2, 3, 4)
+    dtq = dt.reshape(B, nq, Q, NH).transpose(1, 0, 2, 3)
+    bq = Bm.reshape(B, nq, Q, N).transpose(1, 0, 2, 3)
+    cq = Cm.reshape(B, nq, Q, N).transpose(1, 0, 2, 3)
+
+    def chunk_body(h, inp):
+        xq_, dtq_, bq_, cq_ = inp
+        da = dtq_ * A[None, None, :]                  # (B,Q,NH) negative
+        cum = jnp.cumsum(da, axis=1)                  # (B,Q,NH)
+        # intra-chunk: attention-like lower-triangular
+        rel = cum[:, :, None, :] - cum[:, None, :, :]  # (B,Qi,Qj,NH)
+        tri = jnp.tril(jnp.ones((Q, Q), bool))
+        L = jnp.where(tri[None, :, :, None], jnp.exp(rel), 0.0)
+        cb = jnp.einsum("bin,bjn->bij", cq_, bq_)      # (B,Qi,Qj)
+        w = cb[..., None] * L * dtq_[:, None, :, :]    # (B,Qi,Qj,NH)
+        y_intra = jnp.einsum("bijh,bjhp->bihp", w, xq_)
+        # inter-chunk: contribution of carried state
+        y_inter = jnp.einsum("bin,bhpn,bih->bihp",
+                             cq_, h, jnp.exp(cum))
+        # new chunk state
+        tail = jnp.exp(cum[:, -1:, :] - cum)           # (B,Q,NH)
+        h_new = jnp.einsum("bjn,bjhp,bjh->bhpn",
+                           bq_, xq_, tail * dtq_)
+        h = jnp.exp(da.sum(axis=1))[:, :, None, None] * h + h_new
+        return h, y_intra + y_inter
+
+    chunk_body = jax.checkpoint(chunk_body)
+    h, ys = jax.lax.scan(chunk_body, h0.astype(jnp.float32),
+                         (xq.astype(jnp.float32), dtq.astype(jnp.float32),
+                          bq.astype(jnp.float32), cq.astype(jnp.float32)),
+                         unroll=unroll)
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(B, nq * Q, NH, P)
+    return y[:, :S], h
+
+
+def mamba2_apply(p: Params, x: jnp.ndarray, cfg, *, state=None,
+                 q_chunk: int = 256, head_p: int = 64, unroll=1):
+    """Mamba2/SSD block. x: (B,S,D); state: (conv_state, h) or None."""
+    B, S, D = x.shape
+    di = cfg.ssm_expand * cfg.d_model
+    N = cfg.ssm_state
+    NH = di // head_p
+
+    zxbcdt = jnp.einsum("bsd,de->bse", x, p["in_proj"].astype(x.dtype))
+    z = zxbcdt[..., :di]
+    xbc = zxbcdt[..., di:di + di + 2 * N]
+    dt_in = zxbcdt[..., di + di + 2 * N:]
+    conv_state = None if state is None else state[0]
+    xbc, new_conv = causal_conv1d(xbc, p["conv_w"].astype(x.dtype),
+                                  p["conv_b"].astype(x.dtype), conv_state)
+    xbc = jax.nn.silu(xbc)
+    xs = xbc[..., :di]
+    Bm = xbc[..., di:di + N].astype(jnp.float32)
+    Cm = xbc[..., di + N:].astype(jnp.float32)
+    dt = jax.nn.softplus(dt_in.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+
+    xh = xs.reshape(B, S, NH, head_p)
+    h0 = (jnp.zeros((B, NH, head_p, N), jnp.float32) if state is None
+          else state[1].astype(jnp.float32))
+    y, h = _ssd_chunked(xh, dt, A, Bm, Cm, h0, q_chunk, unroll)
+    y = y + (p["D"].astype(jnp.float32)[None, None, :, None]
+             * xh.astype(jnp.float32))
+    y = y.reshape(B, S, di).astype(x.dtype)
+    # gated RMSNorm (Mamba2)
+    from repro.models.layers import rms_norm
+    y = rms_norm(y * jax.nn.silu(z), p["norm_scale"])
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"].astype(x.dtype))
+    return out, (new_conv, h.astype(jnp.float32))
+
+
+def ssm_state_shapes(cfg, batch: int, head_p: int = 64):
+    """Decode-cache shapes per layer for a given config family."""
+    di = cfg.ssm_expand * cfg.d_model
+    if cfg.mamba_version == 1:
+        conv = (batch, cfg.ssm_conv - 1, di)
+        h = (batch, di, cfg.ssm_state)
+    else:
+        conv = (batch, cfg.ssm_conv - 1, di + 2 * cfg.ssm_state)
+        h = (batch, di // head_p, head_p, cfg.ssm_state)
+    return conv, h

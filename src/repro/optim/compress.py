@@ -1,0 +1,62 @@
+"""Gradient compression for cross-pod reduction (int8 + error feedback).
+
+On a 2-pod (or N-pod) deployment the `pod`-axis gradient all-reduce crosses
+the slow inter-pod links; quantizing that traffic to int8 cuts it 4× vs f32
+(2× vs bf16). Scheme (1-bit-Adam-style simplified):
+
+  q = round(clip(g / s, ±127)),  s = max|g| / 127   (per-tensor symmetric)
+  e' = g - dequant(q)                                (error feedback, carried)
+
+The within-pod reduction stays bf16 (cheap links); only the pod-axis
+exchange is quantized. In pjit-land we express this as a grad transform
+(quantize → dequant with the EF residual folded into the next step) — the
+wire format the collective would carry; tests prove optimizer-trajectory
+parity within tolerance and strict improvement over no-EF quantization.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_int8(g: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    s = jnp.maximum(jnp.max(jnp.abs(g.astype(jnp.float32))), 1e-20) / 127.0
+    q = jnp.clip(jnp.round(g.astype(jnp.float32) / s), -127, 127)
+    return q.astype(jnp.int8), s
+
+
+def dequantize_int8(q: jnp.ndarray, s: jnp.ndarray) -> jnp.ndarray:
+    return q.astype(jnp.float32) * s
+
+
+def compress_grads(grads: Any, error: Any | None = None):
+    """Quantize a grad pytree with error feedback.
+
+    Returns (dequantized grads, new error pytree). ``error`` carries the
+    per-leaf quantization residual from the previous step (or None).
+    """
+    flat, tdef = jax.tree.flatten(grads)
+    err = (jax.tree.leaves(error) if error is not None
+           else [jnp.zeros_like(g, jnp.float32) for g in flat])
+    out, new_err = [], []
+    for g, e in zip(flat, err):
+        corrected = g.astype(jnp.float32) + e
+        q, s = quantize_int8(corrected)
+        deq = dequantize_int8(q, s)
+        out.append(deq.astype(g.dtype))
+        new_err.append(corrected - deq)
+    return jax.tree.unflatten(tdef, out), jax.tree.unflatten(tdef, new_err)
+
+
+def init_error(params: Any) -> Any:
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def wire_bytes(grads: Any) -> tuple[int, int]:
+    """(compressed, uncompressed-f32) bytes the pod link would carry."""
+    flat = jax.tree.leaves(grads)
+    n = sum(int(g.size) for g in flat)
+    return n + 4 * len(flat), 4 * n

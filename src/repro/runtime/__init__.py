@@ -1,0 +1,3 @@
+from repro.runtime.fault import StragglerMonitor, Heartbeat, run_with_retries
+
+__all__ = ["StragglerMonitor", "Heartbeat", "run_with_retries"]

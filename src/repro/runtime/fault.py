@@ -1,0 +1,91 @@
+"""Fault-tolerance runtime pieces: heartbeat, straggler detection, retry loop.
+
+On a real fleet these hooks drive the controller (restart a slow/dead host
+from the last checkpoint); on this box the same machinery is exercised
+end-to-end by tests and the examples with simulated failures.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Callable
+
+
+class Heartbeat:
+    """Writes {step, time} to a file every beat — the liveness signal a
+    fleet controller (launch/run_elastic.sh) watches."""
+
+    def __init__(self, path: str, interval_s: float = 5.0):
+        self.path = path
+        self.interval = interval_s
+        self._last = 0.0
+        os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+
+    def beat(self, step: int, **extra) -> None:
+        now = time.time()
+        if now - self._last < self.interval:
+            return
+        self._last = now
+        tmp = self.path + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump({"step": step, "time": now, **extra}, f)
+        os.replace(tmp, self.path)
+
+
+class StragglerMonitor:
+    """EWMA step-time tracker: flags steps slower than ``k`` × the average.
+
+    In multi-controller deployments every host reports; the controller
+    compares across hosts and evicts persistent stragglers. Here we expose
+    the per-host primitive plus its decision rule.
+    """
+
+    def __init__(self, alpha: float = 0.1, k: float = 3.0,
+                 warmup_steps: int = 5):
+        self.alpha = alpha
+        self.k = k
+        self.warmup = warmup_steps
+        self.ewma: float | None = None
+        self.n = 0
+        self.flagged: list[tuple[int, float, float]] = []
+
+    def observe(self, step: int, step_time_s: float) -> bool:
+        """Returns True if this step is a straggler."""
+        self.n += 1
+        if self.ewma is None:
+            self.ewma = step_time_s
+            return False
+        is_straggler = (self.n > self.warmup
+                        and step_time_s > self.k * self.ewma)
+        if is_straggler:
+            self.flagged.append((step, step_time_s, self.ewma))
+        else:
+            # don't poison the average with outliers
+            self.ewma = (1 - self.alpha) * self.ewma \
+                + self.alpha * step_time_s
+        return is_straggler
+
+
+def run_with_retries(step_fn: Callable[[int], None], *, start_step: int,
+                     end_step: int, max_retries: int = 3,
+                     on_retry: Callable[[int, Exception], int] | None = None):
+    """Drives step_fn(step) with restart-on-failure semantics.
+
+    ``on_retry(step, exc) -> resume_step`` is where the caller restores from
+    the last checkpoint (see examples/train_lm.py); the loop then replays
+    deterministically from there (data pipeline is step-keyed).
+    """
+    step = start_step
+    retries = 0
+    while step < end_step:
+        try:
+            step_fn(step)
+            step += 1
+            retries = 0
+        except Exception as e:
+            retries += 1
+            if retries > max_retries or on_retry is None:
+                raise
+            step = on_retry(step, e)

@@ -1,0 +1,63 @@
+"""Serving: prefill and decode steps with sharded KV/SSM caches.
+
+The decode shapes of the assignment (decode_32k, long_500k) lower
+``decode_step`` — one new token against a pre-filled cache. Sampling is greedy
+or temperature-categorical; batching is static (the batch dim is the data-
+sharded axis).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models.model import ModelConfig, forward, init_cache
+from repro.models import sharding as shard_rules
+
+
+def prefill(params, cfg: ModelConfig, batch: dict, cache):
+    """Run the prompt through the model, writing the cache; returns
+    (last-token logits, cache)."""
+    logits, _, new_cache = forward(params, cfg, batch, cache=cache)
+    return logits[:, -1], new_cache
+
+
+def decode(params, cfg: ModelConfig, tokens, cache, *, positions=None,
+           temperature: float = 0.0, key=None):
+    """One-token decode + sampling. tokens: (B, 1) int32 (or embeds)."""
+    if cfg.input_is_embeds:
+        batch = {"embeds": tokens}
+    else:
+        batch = {"tokens": tokens}
+    if positions is not None:
+        batch["positions"] = positions
+    logits, _, new_cache = forward(params, cfg, batch, cache=cache)
+    last = logits[:, -1].astype(jnp.float32)
+    if temperature > 0.0 and key is not None:
+        nxt = jax.random.categorical(key, last / temperature, axis=-1)
+    else:
+        nxt = jnp.argmax(last, axis=-1)
+    return nxt.astype(jnp.int32), last, new_cache
+
+
+def make_prefill_step(cfg: ModelConfig, mesh):
+    fn = functools.partial(prefill, cfg=cfg)
+    return jax.jit(fn)
+
+
+def make_decode_step(cfg: ModelConfig, mesh, *, seq_shard: bool = False):
+    """jitted decode with explicit cache shardings (seq_shard for long ctx)."""
+    fn = functools.partial(decode, cfg=cfg)
+    return jax.jit(fn)
+
+
+def cache_shardings(cfg: ModelConfig, mesh, batch: int, max_seq: int,
+                    *, seq_shard: bool = False):
+    shape = jax.eval_shape(lambda: init_cache(cfg, batch, max_seq))
+    spec = shard_rules.cache_specs(cfg, shape, mesh.axis_names,
+                                   seq_shard=seq_shard)
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec,
+                        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,24 @@
+import os
+
+# Tests run on the single real CPU device (the dry-run and multi-device tests
+# spawn subprocesses that set XLA_FLAGS themselves — per the assignment this
+# must NOT be set globally).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+def random_edges(rng, n_lo=5, n_hi=40, p_lo=0.05, p_hi=0.5):
+    """Canonical random undirected simple graph edges."""
+    from repro.graphs.csr import edges_from_arrays
+    n = int(rng.integers(n_lo, n_hi))
+    p = rng.uniform(p_lo, p_hi)
+    mask = rng.random((n, n)) < p
+    src, dst = np.nonzero(np.triu(mask, 1))
+    return edges_from_arrays(src, dst, n), n

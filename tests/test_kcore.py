@@ -1,0 +1,46 @@
+"""k-core: ParK (JAX) vs Batagelj–Zaversnik (numpy oracle)."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st, HealthCheck
+
+from repro.graphs.csr import build_csr, edges_from_arrays
+from repro.graphs.gen import rmat_edges, ring_of_cliques_edges
+from repro.core.kcore import kcore_numpy, kcore_park
+
+
+def test_clique_ring_coreness():
+    g = build_csr(ring_of_cliques_edges(4, 5))
+    core = kcore_numpy(g)
+    # clique vertices have coreness k-1 = 4
+    assert (core == 4).all()
+    assert np.array_equal(kcore_park(g), core)
+
+
+def test_rmat_park_vs_bz():
+    E = rmat_edges(8, edge_factor=8, seed=3)
+    g = build_csr(E)
+    assert np.array_equal(kcore_park(g), kcore_numpy(g))
+
+
+@st.composite
+def graphs(draw):
+    n = draw(st.integers(4, 30))
+    density = draw(st.floats(0.05, 0.5))
+    seed = draw(st.integers(0, 2**31 - 1))
+    rng = np.random.default_rng(seed)
+    mask = rng.random((n, n)) < density
+    src, dst = np.nonzero(np.triu(mask, 1))
+    return edges_from_arrays(src, dst, n)
+
+
+@given(graphs())
+@settings(max_examples=25, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+def test_property_park_equals_bz(E):
+    if E.size == 0:
+        return
+    g = build_csr(E)
+    core = kcore_numpy(g)
+    assert np.array_equal(kcore_park(g), core)
+    # coreness ≤ degree, and the max k-core is non-empty
+    assert (core <= g.degrees).all()

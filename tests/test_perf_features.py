@@ -1,0 +1,107 @@
+"""Equivalence tests for §Perf levers: every optimization must be exact (or
+within mixed-precision tolerance) vs its baseline formulation."""
+
+import dataclasses
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import jax.random as jr
+
+from repro.configs import reduced_config
+from repro.models.model import init_params, forward
+from repro.models.attention import blocked_attention
+from repro.train.step import TrainState, train_step
+from repro.optim.adamw import AdamWConfig, adamw_init
+from repro.launch.dryrun import parse_collectives
+
+
+def test_flat_kv_attention_equivalence():
+    key = jr.PRNGKey(0)
+    B, Sq, Hkv, G, Dh = 2, 24, 4, 3, 16
+    q = jr.normal(key, (B, Sq, Hkv, G, Dh))
+    k = jr.normal(jr.fold_in(key, 1), (B, Sq, Hkv, Dh))
+    v = jr.normal(jr.fold_in(key, 2), (B, Sq, Hkv, Dh))
+    a = blocked_attention(q, k, v, causal=True, q_offset=0, kv_chunk=8,
+                          flat_kv=False)
+    b = blocked_attention(q, k, v, causal=True, q_offset=0, kv_chunk=8,
+                          flat_kv=True)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+
+
+def test_flat_kv_model_equivalence():
+    cfg = dataclasses.replace(reduced_config("qwen3_8b"),
+                              compute_dtype="float32")
+    cfgF = dataclasses.replace(cfg, attn_flat_kv=True)
+    params = init_params(cfg, jr.PRNGKey(1))
+    toks = jr.randint(jr.PRNGKey(2), (2, 16), 0, cfg.vocab)
+    l1, _, _ = forward(params, cfg, {"tokens": toks})
+    l2, _, _ = forward(params, cfgF, {"tokens": toks})
+    np.testing.assert_allclose(np.asarray(l1), np.asarray(l2), atol=1e-4)
+
+
+def test_cast_params_once_equivalence():
+    """bf16-once vs per-use casting: same loss, same (bf16-rounded) step."""
+    cfg = reduced_config("smollm_135m")  # bf16 compute
+    params = init_params(cfg, jr.PRNGKey(3))
+    state = TrainState(step=jnp.zeros((), jnp.int32), params=params,
+                       opt=adamw_init(params))
+    opt_cfg = AdamWConfig(lr=1e-3)
+    batch = {
+        "tokens": jr.randint(jr.PRNGKey(4), (4, 32), 0, cfg.vocab),
+        "labels": jr.randint(jr.PRNGKey(5), (4, 32), 0, cfg.vocab),
+    }
+    s1, m1 = train_step(state, batch, cfg, opt_cfg, cast_params_once=True)
+    s2, m2 = train_step(state, batch, cfg, opt_cfg, cast_params_once=False)
+    assert abs(float(m1["ce"]) - float(m2["ce"])) < 1e-5
+    err = max(jax.tree.leaves(jax.tree.map(
+        lambda a, b: float(jnp.max(jnp.abs(a - b))), s1.params, s2.params)))
+    assert err < 1e-5, err
+
+
+def test_bf16_param_dtype_trains():
+    cfg = dataclasses.replace(reduced_config("smollm_135m"),
+                              param_dtype="bfloat16")
+    params = init_params(cfg, jr.PRNGKey(6))
+    assert params["embed"].dtype == jnp.bfloat16
+    state = TrainState(step=jnp.zeros((), jnp.int32), params=params,
+                       opt=adamw_init(params))
+    assert jax.tree.leaves(state.opt["m"])[0].dtype == jnp.float32
+    opt_cfg = AdamWConfig(lr=1e-3)
+    batch = {
+        "tokens": jr.randint(jr.PRNGKey(7), (4, 32), 0, cfg.vocab),
+        "labels": jr.randint(jr.PRNGKey(8), (4, 32), 0, cfg.vocab),
+    }
+    s, m = train_step(state, batch, cfg, opt_cfg)
+    assert np.isfinite(float(m["ce"]))
+    assert jax.tree.leaves(s.params)[0].dtype == jnp.bfloat16
+
+
+def test_parse_collectives():
+    hlo = """
+  %ag = f32[128,256]{1,0} all-gather(f32[8,256]{1,0} %x), replica_groups=...
+  %ar.1 = bf16[64]{0} all-reduce(bf16[64]{0} %y), to_apply=%add
+  %t = (f32[32]{0}, f32[32]{0}) all-reduce-start(f32[32]{0} %a, f32[32]{0} %b)
+  %d = f32[32]{0} all-reduce-done((f32[32],f32[32]) %t)
+  %rs = f32[4,8]{1,0} reduce-scatter(f32[64,8]{1,0} %z), dimensions={0}
+"""
+    out = parse_collectives(hlo)
+    assert out["all-gather"]["count"] == 1
+    assert out["all-gather"]["bytes"] == 128 * 256 * 4
+    assert out["all-reduce"]["count"] == 2
+    # ar.1: 2x result; tuple start: 2x both results; done line skipped
+    assert out["all-reduce"]["bytes"] == 2 * 64 * 2 + 2 * (32 * 4 * 2)
+    assert out["reduce-scatter"]["bytes"] == 64 * 8 * 4  # operand bytes
+
+
+def test_hybrid_python_unroll_cost_visibility():
+    """The unrolled hybrid path must not contain lax.cond (cost analysis
+    sums both branches — measured 6× overcount)."""
+    cfg = dataclasses.replace(reduced_config("zamba2_7b"),
+                              compute_dtype="float32", unroll_scans=True)
+    params = init_params(cfg, jr.PRNGKey(9))
+    toks = jr.randint(jr.PRNGKey(10), (1, 8), 0, cfg.vocab)
+    jaxpr = jax.make_jaxpr(
+        lambda p, b: forward(p, cfg, b)[0])(params, {"tokens": toks})
+    prims = {e.primitive.name for e in jaxpr.eqns}
+    assert "cond" not in prims, prims
