@@ -1,23 +1,38 @@
-"""Paper Fig. 4: breakdown of PKT execution among phases.
+"""Paper Fig. 4: breakdown of PKT execution among phases, per peel mode.
 
 Phases mirrored: support computation / SCAN+processing (peel) — plus the
 wedge-table construction our shape-static SPMD adaptation adds (DESIGN.md
 §7.3), reported honestly as its own phase.
+
+The peel phase is timed once per executor mode (dense / chunked / pallas) so
+the support-vs-peel split exposes where each mode's time goes.  On non-TPU
+backends the Pallas kernel runs in *interpret* mode, which is orders of
+magnitude slower than compiled XLA — so the pallas rows are only emitted for
+graphs whose peel table fits ``PALLAS_MAX_WEDGES`` (the row is about lowering
+coverage and shape behaviour there, not competitive time; on a TPU runner the
+cap is ignored).
 """
 
 from __future__ import annotations
 
 import time
 
+import jax
 import jax.numpy as jnp
 
 from repro.core import support as support_mod
-from repro.core.pkt import _pkt_peel_jit, _pad_tables
+from repro.core.pkt import _pkt_peel_jit, prepare_peel
 from repro.graphs.datasets import GRAPH_SUITE
 from benchmarks.common import prep_graph, timeit, row
 
+#: interpret-mode pallas is only timed below this peel-table size on CPU
+PALLAS_MAX_WEDGES = 1 << 16
 
-def run(suite=None) -> list[str]:
+MODES = ("dense", "chunked", "pallas")
+
+
+def run(suite=None, modes=MODES) -> list[str]:
+    on_tpu = jax.default_backend() == "tpu"
     out = []
     for name in suite or GRAPH_SUITE:
         g, stats = prep_graph(name, order="kco")
@@ -30,25 +45,29 @@ def run(suite=None) -> list[str]:
         t_support = timeit(lambda: support_mod.compute_support(g, stab))
         S0 = support_mod.compute_support(g, stab)
 
-        chunk = min(1 << 14, max(1, ptab.size))
-        tabs = _pad_tables(ptab, g.m, chunk)
-        n_chunks = tabs.e1.shape[0] // chunk
+        tabs, chunk, n_chunks = prepare_peel(ptab, g.m, 1 << 14)
         N, Eid, S0j = jnp.asarray(g.N), jnp.asarray(g.Eid), jnp.asarray(S0)
         iters = support_mod._search_iters(g)
 
-        def peel():
-            S, a, b = _pkt_peel_jit(N, Eid, S0j, tabs, m=g.m, chunk=chunk,
-                                    n_chunks=n_chunks, iters=iters,
-                                    dense=False)
-            S.block_until_ready()
+        for mode in modes:
+            if mode == "pallas" and not on_tpu \
+                    and ptab.size > PALLAS_MAX_WEDGES:
+                continue
 
-        t_peel = timeit(peel, warmup=1, reps=2)
-        tot = t_tables + t_support + t_peel
-        out.append(row(
-            f"fig4/{name}", tot,
-            f"support%={100 * t_support / tot:.1f}"
-            f";peel%={100 * t_peel / tot:.1f}"
-            f";tables%={100 * t_tables / tot:.1f}"))
+            def peel():
+                S, _, _ = _pkt_peel_jit(N, Eid, S0j, tabs, m=g.m, chunk=chunk,
+                                        n_chunks=n_chunks, iters=iters,
+                                        mode=mode, interpret=not on_tpu)
+                S.block_until_ready()
+
+            t_peel = timeit(peel, warmup=1, reps=2)
+            tot = t_tables + t_support + t_peel
+            out.append(row(
+                f"fig4/{name}/{mode}", tot,
+                f"support%={100 * t_support / tot:.1f}"
+                f";peel%={100 * t_peel / tot:.1f}"
+                f";tables%={100 * t_tables / tot:.1f}"
+                f";peel_us={t_peel * 1e6:.1f}"))
     return out
 
 

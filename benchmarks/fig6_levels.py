@@ -16,7 +16,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import support as support_mod
-from repro.core.pkt import _pad_tables, PeelTables, _SENTINEL_S
+from repro.core.pkt import prepare_peel, PeelTables, _SENTINEL_S
 from benchmarks.common import prep_graph, row
 
 
@@ -24,7 +24,6 @@ from benchmarks.common import prep_graph, row
                                              "iters"))
 def _one_level(N, Eid, S_ext, processed, tabs, *, m, chunk, n_chunks, iters):
     """Peel one full level (all sub-levels); returns updated state + level."""
-    from repro.core.pkt import _pkt_peel_jit  # reuse chunk_contrib via copy
     two_m = N.shape[0]
     l = jnp.min(jnp.where(processed, _SENTINEL_S, S_ext))
     inCurr = (~processed) & (S_ext == l)
@@ -87,9 +86,7 @@ def run(suite=("rmat-small", "cliques-small", "ba-small")) -> list[str]:
         stab = support_mod.build_support_table(g)
         ptab = support_mod.build_peel_table(g)
         S0 = support_mod.compute_support(g, stab)
-        chunk = min(1 << 14, max(1, ptab.size))
-        tabs = _pad_tables(ptab, g.m, chunk)
-        n_chunks = tabs.e1.shape[0] // chunk
+        tabs, chunk, n_chunks = prepare_peel(ptab, g.m, 1 << 14)
         N, Eid = jnp.asarray(g.N), jnp.asarray(g.Eid)
         iters = support_mod._search_iters(g)
 

@@ -1,32 +1,109 @@
 # One function per paper table/figure. Prints ``name,us_per_call,derived`` CSV.
-"""Benchmark harness entry: python -m benchmarks.run [--quick]
+"""Benchmark harness entry: python -m benchmarks.run [--quick|--smoke]
 
   table2  — ordering impact on support computation      (paper Table 2)
   table3  — PKT vs WC vs Ros decomposition + GWeps      (paper Table 3)
   table4  — parallel scaling over host devices          (paper Table 4/Fig 5)
-  fig4    — phase breakdown                             (paper Fig 4)
+  fig4    — phase breakdown per peel mode               (paper Fig 4)
   fig6    — per-level time vs trussness distribution    (paper Fig 6)
+  engine  — batched multi-graph throughput (graphs/sec)
   roofline— LM arch × shape roofline terms from dry-run (deliverable g)
+
+``--smoke`` is the CI gate: a tiny RMAT graph decomposed by every peel mode,
+Ros, and the numpy oracle; agreement is asserted (exit 1 on mismatch) and a
+machine-readable BENCH_smoke.json is written for workflow artifacts.
 """
 
 import argparse
+import json
 import sys
+import time
+
+
+def smoke(out_path: str = "BENCH_smoke.json") -> int:
+    """Tiny cross-engine agreement gate + timing snapshot. Returns exit code."""
+    import numpy as np
+
+    from repro.graphs.gen import rmat_edges
+    from repro.graphs.csr import build_csr, relabel, degeneracy_order
+    from repro.core import pkt, truss_ros, truss_numpy
+    from repro.core.pkt import PEEL_MODES, align_to_input
+    from repro.serve.truss_engine import TrussEngine
+
+    E = rmat_edges(6, edge_factor=5, seed=0)
+    n = int(E.max()) + 1
+    E = relabel(E, degeneracy_order(E, n))
+    g = build_csr(E, n)
+
+    report = {"graph": "rmat-6-5", "n": g.n, "m": g.m, "modes": {}, "ok": True}
+    ref = truss_numpy(g.El)
+    report["t_max"] = int(ref.max(initial=2))
+
+    def check(name, t):
+        same = bool(np.array_equal(np.asarray(t, np.int64), ref))
+        report["ok"] = report["ok"] and same
+        return same
+
+    for mode in PEEL_MODES:
+        t0 = time.perf_counter()
+        res = pkt(g, mode=mode)
+        dt = time.perf_counter() - t0
+        report["modes"][mode] = {
+            "seconds": dt, "agrees": check(f"pkt/{mode}", res.trussness),
+            "levels": res.levels, "sublevels": res.sublevels,
+        }
+
+    t0 = time.perf_counter()
+    ros = truss_ros(g)
+    report["ros"] = {"seconds": time.perf_counter() - t0,
+                     "agrees": check("ros", ros)}
+
+    # batched engine: the same graph plus a truncated copy, order-aligned
+    # (engine results align to each submission's own row order, so the
+    # g.El-ordered oracle is mapped back to E's rows for comparison)
+    ref_rows = align_to_input(np.asarray(ref), g, E, n)
+    eng = TrussEngine()
+    fleet = [E, E[: max(1, g.m // 2)], E]
+    outs = eng.map(fleet)
+    eng_ok = (np.array_equal(outs[0], ref_rows)
+              and np.array_equal(outs[2], ref_rows)
+              and outs[1].shape[0] == fleet[1].shape[0])
+    eng.map(fleet)  # second pass hits warm buckets → steady-state throughput
+    report["engine"] = {"agrees": bool(eng_ok),
+                        "graphs_per_sec": eng.throughput,
+                        "buckets": len(eng.stats["buckets"])}
+    report["ok"] = report["ok"] and eng_ok
+
+    with open(out_path, "w") as f:
+        json.dump(report, f, indent=2, sort_keys=True)
+    print(json.dumps(report, indent=2, sort_keys=True))
+    if not report["ok"]:
+        print("SMOKE FAILED: engine disagreement", file=sys.stderr)
+        return 1
+    return 0
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
                     help="small graph suite only")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI agreement gate on a tiny graph; writes "
+                         "BENCH_smoke.json and exits nonzero on mismatch")
+    ap.add_argument("--smoke-out", default="BENCH_smoke.json")
     ap.add_argument("--only", default=None,
                     help="comma-separated subset of benches")
     args = ap.parse_args()
+
+    if args.smoke:
+        raise SystemExit(smoke(args.smoke_out))
 
     from repro.graphs.datasets import GRAPH_SUITE
     suite = GRAPH_SUITE[:5] if args.quick else GRAPH_SUITE
     only = set(args.only.split(",")) if args.only else None
 
     from benchmarks import (table2_support, table3_decomp, table4_parallel,
-                            fig4_phases, fig6_levels, roofline)
+                            fig4_phases, fig6_levels, engine_bench, roofline)
     benches = {
         "table2": lambda: table2_support.run(suite),
         "table3": lambda: table3_decomp.run(suite),
@@ -36,6 +113,8 @@ def main() -> None:
             device_counts=(1, 2, 4) if args.quick else (1, 2, 4, 8)),
         "fig4": lambda: fig4_phases.run(suite),
         "fig6": lambda: fig6_levels.run(),
+        "engine": lambda: engine_bench.run(
+            n_graphs=12 if args.quick else 24),
         "roofline": lambda: roofline.run(),
     }
     print("name,us_per_call,derived")

@@ -1,8 +1,12 @@
 """Community detection via truss decomposition (paper's motivating use case).
 
 k-trusses as community seeds: peel to a target k, take connected components
-of the surviving edges. Compares the PKT engine against the triangle-list
-variant and the distributed engine on the same graph.
+of the surviving edges.  The decomposition now goes through the batched
+``TrussEngine``: the planted-communities graph, an RMAT instance, and a batch
+of per-"user" ego-net-style subgraphs are all submitted to one engine, which
+buckets them by padded size class and decomposes each bucket in a single
+vmapped dispatch.  Single-graph engines (PKT, triangle-list) cross-check the
+engine's output.
 
     PYTHONPATH=src python examples/truss_communities.py
 """
@@ -13,7 +17,9 @@ import numpy as np
 
 from repro.graphs.gen import ring_of_cliques_edges, rmat_edges
 from repro.graphs.csr import build_csr, relabel, degeneracy_order
-from repro.core import pkt, truss_trilist, pkt_dist
+from repro.core import pkt, truss_trilist
+from repro.core.pkt import align_to_input
+from repro.serve.truss_engine import TrussEngine
 
 
 def connected_components(edges: np.ndarray, n: int) -> np.ndarray:
@@ -33,46 +39,72 @@ def connected_components(edges: np.ndarray, n: int) -> np.ndarray:
     return np.array([find(v) for v in range(n)])
 
 
+def communities(edges: np.ndarray, trussness: np.ndarray, k: int):
+    """Vertex sets of the k-truss components."""
+    keep = trussness >= k
+    if keep.sum() == 0:
+        return keep, np.zeros(0, np.int64)
+    n = int(edges.max()) + 1
+    comp = connected_components(edges[keep], n)
+    verts = np.unique(edges[keep])
+    sizes = np.sort(np.bincount(comp[verts]))[::-1]
+    return keep, sizes[sizes > 0]
+
+
 def main():
+    eng = TrussEngine(mode="chunked")
+
     # planted communities: 12 cliques of 12, chained in a ring
-    E = ring_of_cliques_edges(12, 12)
-    n = int(E.max()) + 1
-    E = relabel(E, degeneracy_order(E, n))
-    g = build_csr(E, n)
+    E_ring = ring_of_cliques_edges(12, 12)
+    # a noisier instance: RMAT social-like graph
+    E_rmat = rmat_edges(scale=9, edge_factor=10, seed=3)
+    # "traffic": a stream of small ego-net-ish windows of the RMAT graph
+    rng = np.random.default_rng(0)
+    windows = []
+    for _ in range(8):
+        lo = int(rng.integers(0, max(1, E_rmat.shape[0] - 400)))
+        windows.append(E_rmat[lo:lo + 400])
 
     t0 = time.perf_counter()
-    res = pkt(g)
-    print(f"PKT: {time.perf_counter() - t0:.3f}s, t_max={res.trussness.max()}")
+    tickets = [eng.submit(E_ring), eng.submit(E_rmat)]
+    tickets += [eng.submit(w) for w in windows]
+    eng.flush()
+    dt = time.perf_counter() - t0
+    print(f"engine: {len(tickets)} graphs in {dt:.3f}s "
+          f"({eng.throughput:.1f} graphs/s across "
+          f"{len(eng.stats['buckets'])} buckets)")
 
-    # cross-check with the two other engines
+    t_ring = eng.result(tickets[0])
+    t_rmat = eng.result(tickets[1])
+
+    # cross-check the engine against the single-graph engines
+    n = int(E_ring.max()) + 1
+    E_r = relabel(E_ring, degeneracy_order(E_ring, n))
+    g = build_csr(E_r, n)
+    res = pkt(g)
+    assert np.array_equal(align_to_input(res.trussness, g, E_r, n),
+                          eng.map([E_r])[0])
     assert np.array_equal(truss_trilist(g), res.trussness)
-    assert np.array_equal(pkt_dist(g, chunk=1 << 10), res.trussness)
-    print("engines agree (pkt == trilist == dist)")
+    print("engines agree (batched == pkt == trilist)")
 
     # extract k-truss communities for k = 12: exactly the planted cliques
     k = 12
-    keep = res.trussness >= k
-    comp = connected_components(g.El[keep], g.n)
-    labels = np.unique(comp[np.unique(g.El[keep])])
-    print(f"{k}-truss communities: {len(labels)} (planted: 12)")
-    assert len(labels) == 12
+    _, sizes = communities(E_ring, t_ring, k)
+    print(f"{k}-truss communities: {len(sizes)} (planted: 12)")
+    assert len(sizes) == 12
+    assert int(t_ring.max()) == 12
 
-    # a noisier instance: RMAT + report community-size spectrum at several k
-    E = rmat_edges(scale=9, edge_factor=10, seed=3)
-    n = int(E.max()) + 1
-    E = relabel(E, degeneracy_order(E, n))
-    g = build_csr(E, n)
-    res = pkt(g)
+    # community-size spectrum of the RMAT instance at several k
     for k in (3, 4, 6, 8):
-        keep = res.trussness >= k
-        if keep.sum() == 0:
+        keep, sizes = communities(E_rmat, t_rmat, k)
+        if sizes.size == 0:
             continue
-        comp = connected_components(g.El[keep], g.n)
-        verts = np.unique(g.El[keep])
-        sizes = np.sort(np.bincount(comp[verts]))[::-1]
-        sizes = sizes[sizes > 0]
         print(f"k={k}: {keep.sum():6d} edges, {len(sizes):4d} communities, "
               f"largest {sizes[:3]}")
+
+    # per-window max trussness (the "serving" answer a caller would read)
+    tws = [int(eng.result(t).max(initial=2)) for t in tickets[2:]]
+    print(f"window t_max spectrum: {sorted(tws)}")
 
 
 if __name__ == "__main__":

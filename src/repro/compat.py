@@ -1,0 +1,63 @@
+"""Version tolerance for the span of jax releases this repo runs under.
+
+The repo is exercised on anything from jax 0.4.3x (this container, CPU-only)
+up to current releases (TPU pods). Three API moves are papered over here so
+that *importing* any repro module never requires a bleeding-edge jax:
+
+  * ``shard_map`` lived in ``jax.experimental.shard_map`` before being
+    promoted to ``jax.shard_map``;
+  * its replication-check kwarg was renamed ``check_rep`` → ``check_vma``;
+  * ``jax.sharding.AxisType`` (explicit-sharding axis annotations) does not
+    exist before 0.5; meshes fall back to untyped axes.
+"""
+
+from __future__ import annotations
+
+import jax
+
+try:  # jax >= 0.5-ish: top-level function
+    from jax import shard_map as _shard_map
+
+    if not callable(_shard_map):  # pragma: no cover - defensive
+        raise ImportError
+except ImportError:  # older: experimental module
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+try:
+    from jax.sharding import AxisType
+except ImportError:
+    AxisType = None
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool | None = None):
+    """``jax.shard_map`` across the kwarg rename and module move."""
+    kwargs = dict(mesh=mesh, in_specs=in_specs, out_specs=out_specs)
+    if check_vma is None:
+        return _shard_map(f, **kwargs)
+    try:
+        return _shard_map(f, check_vma=check_vma, **kwargs)
+    except TypeError:
+        return _shard_map(f, check_rep=check_vma, **kwargs)
+
+
+def cost_analysis(compiled) -> dict:
+    """``Compiled.cost_analysis()`` normalized to a dict.
+
+    jax 0.4.x returns a one-element list of per-computation dicts; newer
+    releases return the dict directly (and may return None off-CPU).
+    """
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return ca or {}
+
+
+def make_mesh(shape, axes) -> jax.sharding.Mesh:
+    """``jax.make_mesh`` with Auto axis types where the release supports them."""
+    if AxisType is not None:
+        try:
+            return jax.make_mesh(shape, axes,
+                                 axis_types=(AxisType.Auto,) * len(axes))
+        except TypeError:  # release has AxisType but older make_mesh signature
+            pass
+    return jax.make_mesh(shape, axes)

@@ -15,10 +15,19 @@ JAX/TPU adaptation of the OpenMP original (see DESIGN.md §2 for the mapping):
                       frontier edges' ranges (work-efficiency: each triangle's
                       wedge entries are scanned O(1) times over the whole run)
 
-Two modes:
+Three modes:
   mode="chunked" (default): work-efficient chunk-skipping while_loop.
   mode="dense":  every sub-level scans the whole wedge table with frontier
                  masking — the naive SPMD port, kept as a benchmark foil.
+  mode="pallas": the chunk scan runs as a VMEM-blocked Pallas kernel
+                 (kernels/peel.py) — one wedge-table chunk per grid step,
+                 chunk-skipping degraded to compute masking (grids are
+                 static).  Bitwise-identical results to the other two modes.
+
+The peel loop is written against *padded* edge state so the batched engine
+(serve/truss_engine.py) can vmap it across many graphs of one size class:
+slot ``m`` is the sentinel, and any edge slot marked processed in
+``processed0`` with sentinel support in ``S_ext0`` is inert padding.
 """
 
 from __future__ import annotations
@@ -36,6 +45,8 @@ from repro.graphs.csr import CSRGraph
 from repro.core import support as support_mod
 
 _SENTINEL_S = jnp.int32(1 << 30)
+
+PEEL_MODES = ("chunked", "dense", "pallas")
 
 
 class PeelTables(NamedTuple):
@@ -58,6 +69,27 @@ class PKTResult:
     sublevels: int          # total sub-level iterations (paper's S)
 
 
+def chunk_ranges(off: np.ndarray, chunk: int,
+                 m_out: int | None = None) -> tuple[np.ndarray, np.ndarray,
+                                                    np.ndarray]:
+    """Per-edge chunk-range bookkeeping from a wedge-table offset array.
+
+    Returns (has_entries, c_start, c_end), each of length ``m_out`` (edges
+    beyond ``off``'s m are inert padding: no entries, range 0).  Shared by
+    the single-graph tables and the batched engine so the two paths cannot
+    drift.
+    """
+    m = off.shape[0] - 1
+    m_out = m if m_out is None else m_out
+    has = np.zeros(m_out, bool)
+    c_start = np.zeros(m_out, np.int32)
+    c_end = np.zeros(m_out, np.int32)
+    has[:m] = off[1:] > off[:-1]
+    c_start[:m] = off[:-1] // chunk
+    c_end[:m] = np.maximum(off[1:] - 1, 0) // chunk
+    return has, c_start, c_end
+
+
 def _pad_tables(tab: support_mod.WedgeTable, m: int, chunk: int) -> PeelTables:
     nw = tab.size
     n_chunks = max(1, -(-nw // chunk))
@@ -66,10 +98,7 @@ def _pad_tables(tab: support_mod.WedgeTable, m: int, chunk: int) -> PeelTables:
     cand = np.concatenate([tab.cand_slot, np.zeros(pad, np.int32)])
     lo = np.concatenate([tab.lo, np.zeros(pad, np.int32)])
     hi = np.concatenate([tab.hi, np.zeros(pad, np.int32)])
-    off = tab.off
-    has = off[1:] > off[:-1]
-    c_start = (off[:-1] // chunk).astype(np.int32)
-    c_end = (np.maximum(off[1:] - 1, 0) // chunk).astype(np.int32)
+    has, c_start, c_end = chunk_ranges(tab.off, chunk)
     return PeelTables(
         e1=jnp.asarray(e1), cand_slot=jnp.asarray(cand),
         lo=jnp.asarray(lo), hi=jnp.asarray(hi),
@@ -78,18 +107,45 @@ def _pad_tables(tab: support_mod.WedgeTable, m: int, chunk: int) -> PeelTables:
     )
 
 
-@functools.partial(
-    jax.jit,
-    static_argnames=("m", "chunk", "n_chunks", "iters", "dense"),
-)
-def _pkt_peel_jit(N, Eid, S0, tabs: PeelTables, *, m: int, chunk: int,
-                  n_chunks: int, iters: int, dense: bool):
-    """Runs the full level/sub-level peel; returns (S_final, levels, sublevels)."""
-    two_m = N.shape[0]
+def prepare_peel(tab: support_mod.WedgeTable, m: int,
+                 chunk: int) -> tuple[PeelTables, int, int]:
+    """Clamp ``chunk`` to the table, pad, and derive ``n_chunks``.
 
-    # extended edge state: slot m is a sentinel (processed, never in frontier)
-    S_ext0 = jnp.concatenate([S0.astype(jnp.int32), jnp.full((1,), _SENTINEL_S)])
-    processed0 = jnp.zeros((m + 1,), jnp.bool_).at[m].set(True)
+    The single place where the chunk size is sanitized: a user-passed chunk
+    larger than the (padded) table, zero, or negative is clamped so that
+    ``n_chunks >= 1`` always holds — tiny graphs (m <= 2, a handful of wedge
+    entries) used to be able to reach ``n_chunks == 0`` through the old
+    call-site-local ``min(chunk, size)`` dance.
+    """
+    size = max(1, tab.size)
+    chunk = max(1, min(chunk, size))
+    tabs = _pad_tables(tab, m, chunk)
+    n_chunks = tabs.e1.shape[0] // chunk
+    assert n_chunks >= 1
+    return tabs, chunk, n_chunks
+
+
+def _active_chunk_mask(inCurr, tabs: PeelTables, m: int, n_chunks: int):
+    """Chunks overlapping any frontier edge's wedge-entry range (bool mask)."""
+    curr_edges = inCurr[:m] & tabs.has_entries
+    delta = jnp.zeros((n_chunks + 1,), jnp.int32)
+    delta = delta.at[jnp.where(curr_edges, tabs.c_start, n_chunks)].add(
+        curr_edges.astype(jnp.int32))
+    delta = delta.at[jnp.where(curr_edges, tabs.c_end + 1, n_chunks)].add(
+        -curr_edges.astype(jnp.int32))
+    return jnp.cumsum(delta[:n_chunks]) > 0
+
+
+def _peel_loop(N, Eid, S_ext0, processed0, tabs: PeelTables, *, m: int,
+               chunk: int, n_chunks: int, iters: int, mode: str,
+               interpret: bool = True):
+    """Full level/sub-level peel over extended (m+1,) edge state.
+
+    ``S_ext0``/``processed0`` define which slots are live: slot m must be the
+    processed sentinel, and callers may pre-mark extra padding slots as
+    processed (batched engine).  Returns (S_ext[:m], levels, sublevels).
+    """
+    two_m = N.shape[0]
 
     def chunk_contrib(c, dec, S_ext, processed, inCurr, l):
         """Decrement contributions from one chunk of the wedge table."""
@@ -119,19 +175,24 @@ def _pkt_peel_jit(N, Eid, S0, tabs: PeelTables, *, m: int, chunk: int,
     def sublevel(S_ext, processed, inCurr, l):
         """One ProcessSubLevel: aggregate decrements, apply, mark processed."""
         dec0 = jnp.zeros((m + 1,), jnp.int32)
-        if dense:
+        if mode == "dense":
             def body(c, dec):
                 return chunk_contrib(c, dec, S_ext, processed, inCurr, l)
             dec = jax.lax.fori_loop(0, n_chunks, body, dec0)
-        else:
-            # mark chunks overlapping any frontier edge's entry range
-            curr_edges = inCurr[:m] & tabs.has_entries
-            delta = jnp.zeros((n_chunks + 1,), jnp.int32)
-            delta = delta.at[jnp.where(curr_edges, tabs.c_start, n_chunks)].add(
-                curr_edges.astype(jnp.int32))
-            delta = delta.at[jnp.where(curr_edges, tabs.c_end + 1, n_chunks)].add(
-                -curr_edges.astype(jnp.int32))
-            active = jnp.cumsum(delta[:n_chunks]) > 0
+        elif mode == "pallas":
+            from repro.kernels.peel import peel_decrement_targets
+            active = _active_chunk_mask(inCurr, tabs, m, n_chunks)
+            tgt2, tgt3 = peel_decrement_targets(
+                active.astype(jnp.int32),
+                jnp.reshape(l, (1,)).astype(jnp.int32),
+                tabs.e1, tabs.cand_slot, tabs.lo, tabs.hi, N, Eid,
+                S_ext, processed.astype(jnp.int32),
+                inCurr.astype(jnp.int32),
+                chunk=chunk, n_chunks=n_chunks, iters=iters, m=m,
+                interpret=interpret)
+            dec = dec0.at[tgt2].add(1).at[tgt3].add(1)
+        else:  # chunked: visit only chunks overlapping the frontier
+            active = _active_chunk_mask(inCurr, tabs, m, n_chunks)
             n_active = jnp.sum(active.astype(jnp.int32))
             (ids,) = jnp.nonzero(active, size=n_chunks, fill_value=n_chunks - 1)
 
@@ -180,28 +241,52 @@ def _pkt_peel_jit(N, Eid, S0, tabs: PeelTables, *, m: int, chunk: int,
     def level_cond(state):
         return state[3] > 0
 
-    state = (S_ext0, processed0, jnp.int32(0), jnp.int32(m), jnp.int32(0),
+    todo0 = (m + 1) - jnp.sum(processed0.astype(jnp.int32))
+    state = (S_ext0, processed0, jnp.int32(0), todo0, jnp.int32(0),
              jnp.int32(0))
     S_ext, _, _, _, levels, subs = jax.lax.while_loop(
         level_cond, level_body, state)
     return S_ext[:m], levels, subs
 
 
+@functools.partial(
+    jax.jit,
+    static_argnames=("m", "chunk", "n_chunks", "iters", "mode", "interpret"),
+)
+def _pkt_peel_jit(N, Eid, S0, tabs: PeelTables, *, m: int, chunk: int,
+                  n_chunks: int, iters: int, mode: str = "chunked",
+                  interpret: bool = True):
+    """Runs the full level/sub-level peel; returns (S_final, levels, sublevels)."""
+    # extended edge state: slot m is a sentinel (processed, never in frontier)
+    S_ext0 = jnp.concatenate([S0.astype(jnp.int32), jnp.full((1,), _SENTINEL_S)])
+    processed0 = jnp.zeros((m + 1,), jnp.bool_).at[m].set(True)
+    return _peel_loop(N, Eid, S_ext0, processed0, tabs, m=m, chunk=chunk,
+                      n_chunks=n_chunks, iters=iters, mode=mode,
+                      interpret=interpret)
+
+
 def pkt(g: CSRGraph, *, chunk: int = 1 << 14, mode: str = "chunked",
         support_table: support_mod.WedgeTable | None = None,
-        peel_table: support_mod.WedgeTable | None = None) -> PKTResult:
-    """Full PKT truss decomposition. Returns trussness per edge (S+2)."""
+        peel_table: support_mod.WedgeTable | None = None,
+        interpret: bool | None = None) -> PKTResult:
+    """Full PKT truss decomposition. Returns trussness per edge (S+2).
+
+    ``mode`` selects the peel executor (see module docstring); ``interpret``
+    forces/forbids Pallas interpret mode (default: interpret off-TPU).
+    """
+    if mode not in PEEL_MODES:
+        raise ValueError(f"mode must be one of {PEEL_MODES}, got {mode!r}")
     if g.m == 0:
         return PKTResult(np.zeros(0, np.int32), np.zeros(0, np.int32), 0, 0)
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
     S0 = support_mod.compute_support(g, support_table)
     ptab = peel_table if peel_table is not None else support_mod.build_peel_table(g)
-    chunk = min(chunk, max(1, ptab.size))
-    tabs = _pad_tables(ptab, g.m, chunk)
-    n_chunks = tabs.e1.shape[0] // chunk
+    tabs, chunk, n_chunks = prepare_peel(ptab, g.m, chunk)
     S, levels, subs = _pkt_peel_jit(
         jnp.asarray(g.N), jnp.asarray(g.Eid), jnp.asarray(S0), tabs,
         m=g.m, chunk=chunk, n_chunks=n_chunks,
-        iters=support_mod._search_iters(g), dense=(mode == "dense"),
+        iters=support_mod._search_iters(g), mode=mode, interpret=interpret,
     )
     return PKTResult(
         trussness=np.asarray(S) + 2,
@@ -209,6 +294,24 @@ def pkt(g: CSRGraph, *, chunk: int = 1 << 14, mode: str = "chunked",
         levels=int(levels),
         sublevels=int(subs),
     )
+
+
+def align_to_input(trussness: np.ndarray, g: CSRGraph,
+                   edges: np.ndarray | None, n: int, *,
+                   keys: np.ndarray | None = None) -> np.ndarray:
+    """Map per-``g.El``-row trussness back to the caller's edge order.
+
+    ``edges`` must be the canonical (u<v) edge array ``g`` was built from
+    (possibly in a different row order); ``g.El`` rows are lexicographically
+    sorted, so each input edge is located by key search.  Callers that
+    already hold per-row keys (``u*n + v`` in g's id space) may pass ``keys``
+    instead of ``edges``.
+    """
+    key_g = g.El[:, 0].astype(np.int64) * n + g.El[:, 1]
+    if keys is None:
+        keys = edges[:, 0].astype(np.int64) * n + edges[:, 1]
+    pos = np.searchsorted(key_g, keys)
+    return trussness[pos].astype(np.int64)
 
 
 def truss_pkt(edges: np.ndarray, *, reorder: bool = True,
@@ -231,8 +334,4 @@ def truss_pkt(edges: np.ndarray, *, reorder: bool = True,
         r_edges = edges
     g = build_csr(r_edges, n)
     res = pkt(g, chunk=chunk, mode=mode)
-    # map back: g.El rows are sorted lexicographically; locate each input edge
-    key_g = g.El[:, 0].astype(np.int64) * n + g.El[:, 1]
-    key_in = r_edges[:, 0] * n + r_edges[:, 1]
-    pos = np.searchsorted(key_g, key_in)
-    return res.trussness[pos].astype(np.int64)
+    return align_to_input(res.trussness, g, r_edges, n)

@@ -28,7 +28,8 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
-from jax import shard_map
+
+from repro.compat import shard_map
 
 from repro.graphs.csr import CSRGraph
 from repro.core import support as support_mod

@@ -1,12 +1,15 @@
 """Pallas TPU kernels (validated in interpret mode on CPU).
 
-The paper's one custom-kernel-worthy hot spot is adjacency-set intersection
-(support computation, Alg. 3); see intersect.py. The LM stack deliberately
-stays pure-XLA so compiled cost_analysis stays honest for the roofline.
+The paper's two custom-kernel-worthy hot spots are adjacency-set intersection
+(support computation, Alg. 3; intersect.py) and the peel phase's wedge-table
+SCAN (Alg. 5; peel.py). The LM stack deliberately stays pure-XLA so compiled
+cost_analysis stays honest for the roofline.
 """
 
 from repro.kernels.intersect import intersect_blocked
 from repro.kernels.ops import compute_support_kernel
+from repro.kernels.peel import peel_decrements, peel_decrement_targets
 from repro.kernels.ref import intersect_ref
 
-__all__ = ["intersect_blocked", "compute_support_kernel", "intersect_ref"]
+__all__ = ["intersect_blocked", "compute_support_kernel", "intersect_ref",
+           "peel_decrements", "peel_decrement_targets"]

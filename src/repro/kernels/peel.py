@@ -1,0 +1,124 @@
+"""Pallas TPU kernel for the PKT peel phase (Algorithm 5's SCAN hot loop).
+
+One grid step evaluates one wedge-table chunk: the chunk's ``e1 / cand_slot /
+lo / hi`` rows are staged in VMEM next to the (replicated) adjacency arrays
+and edge-state vectors, the ranged binary search runs branch-free on the VPU,
+and the frontier / processed / tie-break predicates of ProcessSubLevel are
+evaluated as dense masks.  The kernel emits, per wedge entry, the *decrement
+target* for each of the two non-anchor triangle edges — the edge id when the
+paper's AtomicSub would fire, or the sentinel ``m`` otherwise.  The caller
+folds the two target streams into the decrement vector with two scatter-adds
+(slot ``m`` absorbs the no-ops), which keeps the kernel store-contention-free:
+every output slot is written by exactly one grid step.
+
+Chunk skipping (the paper's dynamic scheduling) survives as an ``active``
+mask input: a Pallas grid is static, so sub-levels that only touch a few
+chunks still *stream* every block, but inactive blocks short-circuit to
+sentinel writes — compute is masked even though DMA is not.  The
+work-efficient ``mode="chunked"`` while_loop in ``core/pkt.py`` remains the
+right choice for very sparse frontiers; this kernel wins when frontiers are
+wide (dense sub-levels dominate total peel time, paper Fig. 6).
+
+VMEM per grid step ≈ 4·(chunk + two_m·2 + 3·(m+1)) bytes plus the output
+blocks; callers pick ``chunk`` so this stays well under the ~16 MiB budget.
+On non-TPU backends the kernel runs in interpret mode (the CI contract: the
+lowering is exercised on every PR, the Mosaic path on TPU runners).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core import support as support_mod
+
+
+def _interpret_default() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _peel_chunk_kernel(act_ref, l_ref, e1_ref, cand_ref, lo_ref, hi_ref,
+                       n_ref, eid_ref, s_ref, proc_ref, curr_ref,
+                       tgt2_ref, tgt3_ref, *, iters: int, m: int):
+    """One wedge-table chunk → decrement targets (edge id, or m for no-op)."""
+    N = n_ref[...]                 # (two_m,) int32 adjacency values
+    Eid = eid_ref[...]             # (two_m,) int32 slot → edge id
+    S = s_ref[...]                 # (m+1,)  int32 extended support
+    proc = proc_ref[...] != 0      # (m+1,)  processed mask
+    curr = curr_ref[...] != 0      # (m+1,)  current-frontier mask
+    act = act_ref[0] != 0          # chunk overlaps a frontier edge's range
+    l = l_ref[0]                   # current peel level
+
+    e1 = e1_ref[...]               # (chunk,) anchor edge ids (m = padding)
+    cand = cand_ref[...]           # (chunk,) CSR slot of candidate w
+    lo = lo_ref[...]               # (chunk,) probe range start
+    hi = hi_ref[...]               # (chunk,) probe range end (lo==hi → miss)
+
+    two_m = N.shape[0]
+    in1 = curr[e1]                 # padding rows carry e1 == m → curr[m] False
+    w = N[cand]
+    idx = support_mod.ranged_searchsorted(N, w, lo, hi, iters)
+    safe = jnp.minimum(idx, two_m - 1)
+    hit = (idx < hi) & (N[safe] == w)
+    e2 = Eid[cand]
+    e3 = Eid[safe]
+    valid = act & in1 & hit & (~proc[e2]) & (~proc[e3])
+    # the paper's tie-break: of two frontier edges sharing a triangle, the
+    # lower edge id processes it (each triangle decremented exactly once)
+    dec2 = valid & (S[e2] > l) & ((~curr[e3]) | (e1 < e3))
+    dec3 = valid & (S[e3] > l) & ((~curr[e2]) | (e1 < e2))
+    tgt2_ref[...] = jnp.where(dec2, e2, m).astype(jnp.int32)
+    tgt3_ref[...] = jnp.where(dec3, e3, m).astype(jnp.int32)
+
+
+def peel_decrement_targets(active, l, e1, cand, lo, hi, N, Eid,
+                           S_ext, processed, inCurr, *, chunk: int,
+                           n_chunks: int, iters: int, m: int,
+                           interpret: bool = True):
+    """Decrement targets for every wedge-table entry at sub-level ``l``.
+
+    active: (n_chunks,) int32 chunk mask; l: (1,) int32; table arrays
+    (n_chunks*chunk,) int32; N/Eid: (two_m,) int32; S_ext/processed/inCurr:
+    (m+1,) int32.  Returns (tgt2, tgt3), each (n_chunks*chunk,) int32 in
+    [0, m] — scatter ``+1`` at both and read the result below index m.
+    """
+    two_m = N.shape[0]
+    nw = n_chunks * chunk
+    kernel = functools.partial(_peel_chunk_kernel, iters=iters, m=m)
+    chunk_spec = pl.BlockSpec((chunk,), lambda i: (i,))
+    full = lambda size: pl.BlockSpec((size,), lambda i: (0,))
+    return pl.pallas_call(
+        kernel,
+        grid=(n_chunks,),
+        in_specs=[
+            pl.BlockSpec((1,), lambda i: (i,)),   # active (per chunk)
+            full(1),                              # l (replicated scalar)
+            chunk_spec, chunk_spec, chunk_spec, chunk_spec,
+            full(two_m), full(two_m),             # N, Eid
+            full(m + 1), full(m + 1), full(m + 1),  # S_ext, processed, inCurr
+        ],
+        out_specs=[chunk_spec, chunk_spec],
+        out_shape=[jax.ShapeDtypeStruct((nw,), jnp.int32)] * 2,
+        interpret=interpret,
+    )(active, l, e1, cand, lo, hi, N, Eid, S_ext, processed, inCurr)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "n_chunks", "iters",
+                                             "m", "interpret"))
+def peel_decrements(active, l, e1, cand, lo, hi, N, Eid, S_ext, processed,
+                    inCurr, *, chunk: int, n_chunks: int, iters: int, m: int,
+                    interpret: bool = True):
+    """Jitted convenience wrapper: targets folded into the (m+1,) decrement
+    vector (slot m absorbs sentinel writes). Used directly by tests and the
+    CI interpret-compile gate; ``core/pkt.py`` traces the unjitted version
+    inside its peel loop."""
+    tgt2, tgt3 = peel_decrement_targets(
+        active, l, e1, cand, lo, hi, N, Eid, S_ext, processed, inCurr,
+        chunk=chunk, n_chunks=n_chunks, iters=iters, m=m, interpret=interpret)
+    dec = jnp.zeros((m + 1,), jnp.int32)
+    dec = dec.at[tgt2].add(1)
+    dec = dec.at[tgt3].add(1)
+    return dec

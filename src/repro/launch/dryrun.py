@@ -34,6 +34,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro.compat import cost_analysis
 from repro.launch.mesh import make_production_mesh
 from repro.configs import (ARCHS, SHAPES, get_config, input_specs,
                            cell_is_valid)
@@ -221,7 +222,7 @@ def lower_cell(cfg, shape, mesh, *, microbatches=1, want_hlo=False,
         compiled = lowered.compile()
     dt = time.time() - t0
     ma = compiled.memory_analysis()
-    ca = compiled.cost_analysis() or {}
+    ca = cost_analysis(compiled)
     hlo = compiled.as_text()
     coll = parse_collectives(hlo)
     rec = {
@@ -329,7 +330,7 @@ def truss_cell(mesh, *, log_m: int = 27, chunk: int = 1 << 14) -> dict:
         t0 = time.time()
         c = sup.lower(N, Eid, e1, cs, lo, hi).compile()
         ma = c.memory_analysis()
-        ca = c.cost_analysis() or {}
+        ca = cost_analysis(c)
         rec["support"] = {
             "compile_s": round(time.time() - t0, 2),
             "temp_bytes": int(ma.temp_size_in_bytes),

@@ -9,19 +9,18 @@ with gradient all-reduce over the (slow) cross-pod links.
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType
+
+from repro.compat import make_mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def make_host_mesh(n_data: int | None = None) -> jax.sharding.Mesh:
     """Small mesh over whatever devices exist (tests / CPU examples)."""
     n = len(jax.devices())
     n_data = n_data or n
-    return jax.make_mesh((n_data, n // n_data), ("data", "model"),
-                         axis_types=(AxisType.Auto, AxisType.Auto))
+    return make_mesh((n_data, n // n_data), ("data", "model"))

@@ -24,7 +24,8 @@ def main(argv=None):
     ap.add_argument("--engine", default="pkt",
                     choices=["pkt", "dist", "trilist", "wc", "ros"])
     ap.add_argument("--chunk", type=int, default=1 << 14)
-    ap.add_argument("--mode", default="chunked", choices=["chunked", "dense"])
+    from repro.core.pkt import PEEL_MODES
+    ap.add_argument("--mode", default="chunked", choices=list(PEEL_MODES))
     ap.add_argument("--verify", action="store_true",
                     help="check against the numpy oracle (small graphs!)")
     args = ap.parse_args(argv)

@@ -1,3 +1,5 @@
 from repro.serve.engine import make_prefill_step, make_decode_step
+from repro.serve.truss_engine import TrussEngine, truss_batched
 
-__all__ = ["make_prefill_step", "make_decode_step"]
+__all__ = ["make_prefill_step", "make_decode_step",
+           "TrussEngine", "truss_batched"]

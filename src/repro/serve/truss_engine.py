@@ -1,0 +1,320 @@
+"""Batched multi-graph truss engine — many small graphs through one compile.
+
+The serving story for truss decomposition is the opposite of the paper's
+single-giant-graph benchmark: heavy traffic means a *stream* of modest graphs
+(per-user ego nets, transaction neighborhoods, rolling windows) where XLA
+compile time and per-dispatch overhead dominate if each graph is decomposed
+alone. This engine amortizes both:
+
+  * **Bucketing** — every submission is preprocessed on host (canonicalize,
+    optional k-core reorder, CSR + wedge tables) and assigned to a *size
+    class*: all dimensions padded up to powers of two —
+    ``(m_pad, sup_pad, peel_pad, chunk)``.  Graphs in one class share one
+    compiled executable; the pow2 policy bounds the number of distinct
+    compiles to O(log m · log wedges) over any workload.
+  * **Batching** — a bucket is decomposed by a single ``jax.vmap`` of the
+    support + peel pipeline from ``core/pkt.py`` over the stacked, padded
+    operands.  Padding edges are pre-marked processed with sentinel support,
+    so they are inert in the level loop; padded wedge entries carry empty
+    probe ranges (lo == hi) and the anchor sentinel, so they never hit.
+  * **Order-aligned results** — ``submit`` returns a ticket; results are
+    delivered aligned to each submission's own edge-row order regardless of
+    bucket membership or flush timing.
+
+Usage:
+
+    eng = TrussEngine(mode="chunked")
+    t1 = eng.submit(edges_a)          # queued
+    t2 = eng.submit(edges_b)          # queued (maybe same bucket)
+    trussness_b = eng.result(t2)      # flushes pending work once
+    trussness_a = eng.result(t1)      # already computed
+
+``mode`` selects the peel executor exactly as in ``core.pkt.pkt`` —
+"chunked", "dense", or "pallas" (the kernel path vmaps too: Pallas grids gain
+a leading batch dimension).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+from typing import NamedTuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.graphs.csr import CSRGraph, build_csr, degeneracy_order, relabel
+from repro.core import support as support_mod
+from repro.core.pkt import (PEEL_MODES, PeelTables, _SENTINEL_S, _peel_loop,
+                            align_to_input, chunk_ranges)
+
+_PAD_N = np.int32(1 << 30)   # adjacency padding: larger than any vertex id
+_MIN_M_PAD = 8
+
+
+def _next_pow2(x: int) -> int:
+    return 1 << max(0, int(x - 1).bit_length())
+
+
+class SizeClass(NamedTuple):
+    """Bucket key: every compiled shape the batched pipeline depends on."""
+
+    m_pad: int        # padded edge count (pow2)
+    sup_pad: int      # padded support-table length (pow2)
+    peel_pad: int     # padded peel-table length (pow2, multiple of chunk)
+    chunk: int        # peel chunk size (pow2, <= peel_pad)
+    n_chunks: int     # peel_pad // chunk
+    iters: int        # binary-search iteration bound for 2*m_pad-length rows
+
+
+class BatchOperand(NamedTuple):
+    """Per-graph padded device operands; stacked along axis 0 per bucket."""
+
+    N: jnp.ndarray          # (2*m_pad,) adjacency values
+    Eid: jnp.ndarray        # (2*m_pad,) slot → edge id
+    s_e1: jnp.ndarray       # (sup_pad,) support-table anchor edges
+    s_cand: jnp.ndarray     # (sup_pad,)
+    s_lo: jnp.ndarray       # (sup_pad,)
+    s_hi: jnp.ndarray       # (sup_pad,)
+    p_e1: jnp.ndarray       # (peel_pad,) peel-table anchor edges
+    p_cand: jnp.ndarray     # (peel_pad,)
+    p_lo: jnp.ndarray       # (peel_pad,)
+    p_hi: jnp.ndarray       # (peel_pad,)
+    c_start: jnp.ndarray    # (m_pad,) first chunk of edge's entry range
+    c_end: jnp.ndarray      # (m_pad,) last chunk (inclusive)
+    has_entries: jnp.ndarray  # (m_pad,) bool
+    m_real: jnp.ndarray     # () int32 — live edge count of this graph
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("m", "chunk", "n_chunks", "iters", "mode", "interpret"),
+)
+def _batched_truss(ops: BatchOperand, *, m: int, chunk: int, n_chunks: int,
+                   iters: int, mode: str, interpret: bool):
+    """vmap of (support → peel) across one bucket of padded graphs."""
+
+    def one(op: BatchOperand):
+        S0 = support_mod._support_jit(
+            op.N, op.Eid, op.s_e1, op.s_cand, op.s_lo, op.s_hi, iters, m)
+        edge_ok = jnp.arange(m + 1, dtype=jnp.int32) < op.m_real
+        S_ext0 = jnp.where(
+            edge_ok,
+            jnp.concatenate([S0, jnp.zeros((1,), jnp.int32)]),
+            _SENTINEL_S)
+        processed0 = ~edge_ok
+        tabs = PeelTables(op.p_e1, op.p_cand, op.p_lo, op.p_hi,
+                          op.c_start, op.c_end, op.has_entries)
+        S, levels, subs = _peel_loop(
+            op.N, op.Eid, S_ext0, processed0, tabs, m=m, chunk=chunk,
+            n_chunks=n_chunks, iters=iters, mode=mode, interpret=interpret)
+        return S, S0, levels, subs
+
+    return jax.vmap(one)(ops)
+
+
+def _pad1(x: np.ndarray, size: int, fill) -> np.ndarray:
+    out = np.full(size, fill, np.int32)
+    out[: x.shape[0]] = x
+    return out
+
+
+@dataclasses.dataclass
+class _Pending:
+    ticket: int
+    g: CSRGraph
+    n: int
+    in_keys: np.ndarray       # per input row: canonical key in relabeled space
+    key: SizeClass
+    operand: BatchOperand | None = None
+
+
+class TrussEngine:
+    """Queue API over the batched decomposition pipeline."""
+
+    def __init__(self, *, mode: str = "chunked", chunk: int = 1 << 12,
+                 reorder: bool = True, max_pending: int = 32,
+                 interpret: bool | None = None):
+        if mode not in PEEL_MODES:
+            raise ValueError(f"mode must be one of {PEEL_MODES}, got {mode!r}")
+        if chunk < 1:
+            raise ValueError("chunk must be positive")
+        self.mode = mode
+        self.chunk = _next_pow2(chunk)
+        self.reorder = reorder
+        self.max_pending = max_pending
+        self.interpret = (jax.default_backend() != "tpu"
+                          if interpret is None else interpret)
+        self._pending: list[_Pending] = []
+        self._results: dict[int, np.ndarray] = {}
+        self._next_ticket = 0
+        self.stats = {
+            "submitted": 0, "flushes": 0, "batches": 0,
+            "buckets": set(), "graph_seconds": 0.0, "graphs_done": 0,
+            # warm_* counts only dispatches whose bucket was seen before
+            # (compile already cached) — the steady-state throughput basis
+            "warm_seconds": 0.0, "warm_graphs": 0,
+        }
+
+    # ------------------------------------------------------------- submit --
+    def submit(self, edges: np.ndarray) -> int:
+        """Queue one graph; returns a ticket for ``result``.
+
+        ``edges`` is any (k, 2) integer array of undirected edges (either
+        endpoint order; duplicate rows allowed; self-loops rejected).  The
+        result is aligned to the input rows: ``result(t)[i]`` is the
+        trussness of ``edges[i]``.
+        """
+        edges = np.asarray(edges, dtype=np.int64)
+        ticket = self._next_ticket
+        self._next_ticket += 1
+        self.stats["submitted"] += 1
+
+        if edges.size == 0:
+            self._results[ticket] = np.zeros(0, np.int64)
+            return ticket
+        if edges.ndim != 2 or edges.shape[1] != 2:
+            raise ValueError("edges must be (k, 2)")
+        if (edges[:, 0] == edges[:, 1]).any():
+            raise ValueError("self-loops are not allowed")
+
+        n = int(edges.max()) + 1
+        lo = np.minimum(edges[:, 0], edges[:, 1])
+        hi = np.maximum(edges[:, 0], edges[:, 1])
+        uniq = np.unique(lo * n + hi)
+        E = np.stack([uniq // n, uniq % n], axis=1)
+
+        if self.reorder:
+            perm = degeneracy_order(E, n)
+            r_edges = relabel(E, perm)
+        else:
+            perm = np.arange(n, dtype=np.int64)
+            r_edges = E
+        # key of each *input row* in the relabeled space (handles duplicate
+        # and endpoint-swapped rows: they map onto the same canonical edge)
+        rl, rh = perm[lo], perm[hi]
+        in_keys = (np.minimum(rl, rh) * n + np.maximum(rl, rh))
+
+        g = build_csr(r_edges, n)
+        stab = support_mod.build_support_table(g)
+        ptab = support_mod.build_peel_table(g)
+        key = self._size_class(g, stab, ptab)
+        self._pending.append(_Pending(
+            ticket=ticket, g=g, n=n, in_keys=in_keys,
+            key=key, operand=self._make_operand(g, key, stab, ptab)))
+        if len(self._pending) >= self.max_pending:
+            self.flush()
+        return ticket
+
+    def submit_many(self, graphs) -> list[int]:
+        return [self.submit(e) for e in graphs]
+
+    # ------------------------------------------------------------ results --
+    def result(self, ticket: int) -> np.ndarray:
+        """Trussness for one ticket, flushing pending work if needed.
+
+        Single-read: each ticket's result is released when collected (keeps
+        engine memory bounded under streaming traffic); a second read, or an
+        unknown ticket, raises KeyError.
+        """
+        if ticket not in self._results:
+            if any(p.ticket == ticket for p in self._pending):
+                self.flush()
+            else:
+                raise KeyError(
+                    f"unknown or already-collected ticket {ticket!r}")
+        return self._results.pop(ticket)
+
+    def map(self, graphs) -> list[np.ndarray]:
+        """Submit a list of graphs, flush once, return order-aligned results."""
+        tickets = self.submit_many(graphs)
+        self.flush()
+        return [self.result(t) for t in tickets]
+
+    # ------------------------------------------------------------ internals --
+    def _size_class(self, g: CSRGraph, stab, ptab) -> SizeClass:
+        m_pad = max(_MIN_M_PAD, _next_pow2(g.m))
+        sup_pad = _next_pow2(max(1, stab.size))
+        peel_pad = _next_pow2(max(1, ptab.size))
+        chunk = min(self.chunk, peel_pad)
+        n_chunks = peel_pad // chunk
+        iters = int(np.ceil(np.log2(2 * m_pad + 1))) + 1
+        return SizeClass(m_pad, sup_pad, peel_pad, chunk, n_chunks, iters)
+
+    def _make_operand(self, g: CSRGraph, key: SizeClass, stab,
+                      ptab) -> BatchOperand:
+        m_pad = key.m_pad
+        has_p, c_start, c_end = chunk_ranges(ptab.off, key.chunk, m_out=m_pad)
+        return BatchOperand(
+            N=jnp.asarray(_pad1(g.N, 2 * m_pad, _PAD_N)),
+            Eid=jnp.asarray(_pad1(g.Eid, 2 * m_pad, m_pad)),
+            s_e1=jnp.asarray(_pad1(stab.e1, key.sup_pad, 0)),
+            s_cand=jnp.asarray(_pad1(stab.cand_slot, key.sup_pad, 0)),
+            s_lo=jnp.asarray(_pad1(stab.lo, key.sup_pad, 0)),
+            s_hi=jnp.asarray(_pad1(stab.hi, key.sup_pad, 0)),
+            p_e1=jnp.asarray(_pad1(ptab.e1, key.peel_pad, m_pad)),
+            p_cand=jnp.asarray(_pad1(ptab.cand_slot, key.peel_pad, 0)),
+            p_lo=jnp.asarray(_pad1(ptab.lo, key.peel_pad, 0)),
+            p_hi=jnp.asarray(_pad1(ptab.hi, key.peel_pad, 0)),
+            c_start=jnp.asarray(c_start),
+            c_end=jnp.asarray(c_end),
+            has_entries=jnp.asarray(has_p),
+            m_real=jnp.int32(g.m),
+        )
+
+    def flush(self) -> None:
+        """Decompose every pending graph, bucket by bucket."""
+        if not self._pending:
+            return
+        by_key: dict[SizeClass, list[_Pending]] = {}
+        for p in self._pending:
+            by_key.setdefault(p.key, []).append(p)
+        self._pending = []
+
+        for key, group in by_key.items():
+            warm = key in self.stats["buckets"]
+            t0 = time.perf_counter()
+            ops = jax.tree.map(lambda *xs: jnp.stack(xs),
+                               *[p.operand for p in group])
+            S, S0, levels, subs = _batched_truss(
+                ops, m=key.m_pad, chunk=key.chunk, n_chunks=key.n_chunks,
+                iters=key.iters, mode=self.mode, interpret=self.interpret)
+            S = np.asarray(S)
+            for i, p in enumerate(group):
+                truss = (S[i][: p.g.m] + 2).astype(np.int64)
+                self._results[p.ticket] = align_to_input(
+                    truss, p.g, None, p.n, keys=p.in_keys)
+            dt = time.perf_counter() - t0
+            self.stats["batches"] += 1
+            self.stats["buckets"].add(key)
+            self.stats["graphs_done"] += len(group)
+            self.stats["graph_seconds"] += dt
+            if warm:
+                self.stats["warm_seconds"] += dt
+                self.stats["warm_graphs"] += len(group)
+        self.stats["flushes"] += 1
+
+    @property
+    def throughput(self) -> float:
+        """Graphs decomposed per second of engine compute.
+
+        Based on warm dispatches only (buckets whose executable was already
+        compiled); falls back to the all-in rate — which is dominated by XLA
+        compile time — until any bucket has gone warm.
+        """
+        if self.stats["warm_seconds"] > 0:
+            return self.stats["warm_graphs"] / self.stats["warm_seconds"]
+        secs = self.stats["graph_seconds"]
+        return self.stats["graphs_done"] / secs if secs > 0 else 0.0
+
+
+def truss_batched(graphs, *, mode: str = "chunked", chunk: int = 1 << 12,
+                  reorder: bool = True) -> list[np.ndarray]:
+    """One-shot convenience: decompose a list of edge arrays, order-aligned."""
+    graphs = list(graphs)
+    eng = TrussEngine(mode=mode, chunk=chunk, reorder=reorder,
+                      max_pending=len(graphs) or 1)
+    return eng.map(graphs)

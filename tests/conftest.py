@@ -1,9 +1,25 @@
 import os
+import sys
 
 # Tests run on the single real CPU device (the dry-run and multi-device tests
 # spawn subprocesses that set XLA_FLAGS themselves — per the assignment this
 # must NOT be set globally).
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+# Make `import repro` work whether or not PYTHONPATH=src was exported.
+_SRC = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                    "src")
+if os.path.isdir(_SRC) and _SRC not in sys.path:
+    sys.path.insert(0, _SRC)
+
+# Property tests prefer real hypothesis; offline environments fall back to the
+# deterministic N-example shim so the suite still collects and runs.
+try:
+    import hypothesis  # noqa: F401
+except ModuleNotFoundError:
+    from repro.testing.hypothesis_fallback import install as _install_hyp
+
+    _install_hyp()
 
 import numpy as np
 import pytest

@@ -1,0 +1,149 @@
+"""Peel-phase Pallas kernel: bitwise parity with the chunked/dense executors
+and the numpy oracle, on random and adversarial graphs; plus the chunk-clamp
+regression for tiny graphs."""
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.graphs.csr import build_csr, edges_from_arrays
+from repro.graphs.gen import ring_of_cliques_edges, rmat_edges
+from repro.core.pkt import pkt, prepare_peel, PEEL_MODES
+from repro.core import support as support_mod
+from repro.core.ref import truss_numpy
+
+
+def _er_edges(n, p, seed):
+    rng = np.random.default_rng(seed)
+    mask = rng.random((n, n)) < p
+    src, dst = np.nonzero(np.triu(mask, 1))
+    return edges_from_arrays(src, dst, n)
+
+
+def _star_edges(k=12):
+    """Hub + k spokes: zero triangles, every edge trussness 2."""
+    return np.stack([np.zeros(k, np.int64), np.arange(1, k + 1)], axis=1)
+
+
+def _disconnected_edges():
+    """Clique ⊔ path ⊔ isolated triangle ⊔ single edge."""
+    parts = [
+        [(0, 1), (0, 2), (0, 3), (1, 2), (1, 3), (2, 3)],   # K4
+        [(10, 11), (11, 12), (12, 13)],                     # path
+        [(20, 21), (20, 22), (21, 22)],                     # triangle
+        [(30, 31)],                                         # lone edge
+    ]
+    e = np.array([p for part in parts for p in part], dtype=np.int64)
+    return e
+
+
+ADVERSARIAL = {
+    "star": _star_edges(),
+    "clique": edges_from_arrays(*np.nonzero(np.triu(np.ones((8, 8)), 1)), 8),
+    "disconnected": _disconnected_edges(),
+    "ring_of_cliques": ring_of_cliques_edges(4, 6),
+    "rmat": rmat_edges(6, edge_factor=5, seed=9),
+}
+
+
+# ---------------------------------------------------------------- parity ----
+
+@pytest.mark.parametrize("seed", range(5))
+def test_pallas_parity_random(seed):
+    E = _er_edges(12 + 8 * seed, 0.15 + 0.08 * seed, 100 + seed)
+    if E.size == 0:
+        return
+    g = build_csr(E)
+    ref = truss_numpy(g.El)
+    chunked = pkt(g, mode="chunked")
+    pallas = pkt(g, mode="pallas")
+    # bitwise-equal across every field of the result, and oracle-correct
+    assert np.array_equal(pallas.trussness, chunked.trussness)
+    assert np.array_equal(pallas.support, chunked.support)
+    assert (pallas.levels, pallas.sublevels) == \
+        (chunked.levels, chunked.sublevels)
+    assert np.array_equal(pallas.trussness, ref)
+
+
+@pytest.mark.parametrize("name", sorted(ADVERSARIAL))
+def test_pallas_parity_adversarial(name):
+    g = build_csr(ADVERSARIAL[name])
+    ref = truss_numpy(g.El)
+    for chunk in (8, 1 << 14):
+        chunked = pkt(g, mode="chunked", chunk=chunk).trussness
+        pallas = pkt(g, mode="pallas", chunk=chunk).trussness
+        assert np.array_equal(pallas, chunked), (name, chunk)
+        assert np.array_equal(pallas, ref), (name, chunk)
+
+
+def test_all_modes_agree_multi_chunk():
+    g = build_csr(_er_edges(40, 0.3, 7))
+    ref = truss_numpy(g.El)
+    for mode in PEEL_MODES:
+        for chunk in (16, 128):
+            assert np.array_equal(pkt(g, mode=mode, chunk=chunk).trussness,
+                                  ref), (mode, chunk)
+
+
+def test_invalid_mode_rejected():
+    g = build_csr(np.array([[0, 1]], np.int64))
+    with pytest.raises(ValueError, match="mode"):
+        pkt(g, mode="warp")
+
+
+# ------------------------------------------------- chunk-clamp regression ----
+
+@pytest.mark.parametrize("edges", [
+    np.array([[0, 1]], np.int64),                     # m == 1
+    np.array([[0, 1], [1, 2]], np.int64),             # m == 2, no triangle
+    np.array([[0, 1], [0, 2], [1, 2]], np.int64),     # smallest triangle
+])
+@pytest.mark.parametrize("chunk", [1, 3, 1 << 20])
+def test_tiny_graph_huge_chunk(edges, chunk):
+    """chunk >> table size must clamp, not produce n_chunks == 0."""
+    g = build_csr(edges)
+    ref = truss_numpy(g.El)
+    for mode in PEEL_MODES:
+        assert np.array_equal(pkt(g, mode=mode, chunk=chunk).trussness, ref), \
+            (mode, chunk)
+
+
+def test_prepare_peel_always_one_chunk():
+    g = build_csr(np.array([[0, 1], [1, 2]], np.int64))
+    ptab = support_mod.build_peel_table(g)
+    for chunk in (1, ptab.size, ptab.size + 1, 1 << 20):
+        tabs, c, n_chunks = prepare_peel(ptab, g.m, chunk)
+        assert n_chunks >= 1
+        assert c >= 1
+        assert tabs.e1.shape[0] == n_chunks * c
+
+
+# ------------------------------------------------------- kernel lowering ----
+
+def test_peel_kernel_compiles_interpret():
+    """The CI lowering gate: jit + interpret-mode pallas_call end-to-end."""
+    from repro.kernels.peel import peel_decrements
+
+    g = build_csr(ring_of_cliques_edges(3, 4))
+    ptab = support_mod.build_peel_table(g)
+    tabs, chunk, n_chunks = prepare_peel(ptab, g.m, 16)
+    m = g.m
+    S0 = support_mod.compute_support(g)
+    S_ext = jnp.concatenate([jnp.asarray(S0),
+                             jnp.full((1,), 1 << 30, jnp.int32)])
+    processed = jnp.zeros((m + 1,), jnp.int32).at[m].set(1)
+    l = int(S0.min())
+    inCurr = ((processed == 0) & (S_ext == l)).astype(jnp.int32)
+    dec = peel_decrements(
+        jnp.ones((n_chunks,), jnp.int32), jnp.full((1,), l, jnp.int32),
+        tabs.e1, tabs.cand_slot, tabs.lo, tabs.hi,
+        jnp.asarray(g.N), jnp.asarray(g.Eid),
+        S_ext, processed, inCurr,
+        chunk=chunk, n_chunks=n_chunks,
+        iters=support_mod._search_iters(g), m=m, interpret=True)
+    dec = np.asarray(dec)
+    assert dec.shape == (m + 1,)
+    # decrements only land on live edges above the frontier level
+    live = np.asarray(S_ext[:m]) > l
+    assert (dec[:m][~live] == 0).all()
