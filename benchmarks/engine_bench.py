@@ -6,6 +6,11 @@ distinct shape recompiles, then dispatches one-at-a-time).  Batched = the
 ``TrussEngine`` bucketing the stream into pow2 size classes and vmapping one
 compiled pipeline per class.  Both are measured post-warmup (compiles paid),
 so the gap isolates dispatch/batching efficiency.
+
+The batched rows carry a support-executor column: one row per support mode
+(jnp vs the Pallas kernel), so the kernel-vs-jnp cost of the support phase
+is visible per stream.  Off-TPU the kernel rows run in interpret mode —
+expect them slower there; on a TPU runner they are the competitive path.
 """
 
 from __future__ import annotations
@@ -36,7 +41,8 @@ def _fleet(n_graphs: int, seed: int = 0) -> list[np.ndarray]:
     return [e for e in out if e.size]
 
 
-def run(n_graphs: int = 24, mode: str = "chunked", seed: int = 0) -> list[str]:
+def run(n_graphs: int = 24, mode: str = "chunked", seed: int = 0,
+        support_modes=("jnp", "pallas")) -> list[str]:
     graphs = _fleet(n_graphs, seed)
 
     def serial():
@@ -44,25 +50,25 @@ def run(n_graphs: int = 24, mode: str = "chunked", seed: int = 0) -> list[str]:
             truss_pkt(e, mode=mode)
 
     t_serial = timeit(serial, warmup=1, reps=2)
-
-    # warmup pays per-bucket compiles (cached in jax's global jit cache);
-    # the timed pass on a fresh engine measures steady-state batched dispatch
-    TrussEngine(mode=mode).map(graphs)
-
-    def batched():
-        TrussEngine(mode=mode).map(graphs)
-
-    t_batched = timeit(batched, warmup=0, reps=2)
-
     gps_serial = len(graphs) / t_serial
-    gps_batched = len(graphs) / t_batched
-    return [
-        row(f"engine/serial/{mode}", t_serial,
-            f"graphs={len(graphs)};graphs_per_sec={gps_serial:.2f}"),
-        row(f"engine/batched/{mode}", t_batched,
+    out = [row(f"engine/serial/{mode}", t_serial,
+               f"graphs={len(graphs)};graphs_per_sec={gps_serial:.2f}")]
+
+    for smode in support_modes:
+        # warmup pays per-bucket compiles (cached in jax's global jit cache);
+        # the timed pass on a fresh engine measures steady-state dispatch
+        TrussEngine(mode=mode, support_mode=smode).map(graphs)
+
+        def batched():
+            TrussEngine(mode=mode, support_mode=smode).map(graphs)
+
+        t_batched = timeit(batched, warmup=0, reps=2)
+        gps_batched = len(graphs) / t_batched
+        out.append(row(
+            f"engine/batched/{mode}/sup-{smode}", t_batched,
             f"graphs={len(graphs)};graphs_per_sec={gps_batched:.2f}"
-            f";speedup={t_serial / t_batched:.2f}x"),
-    ]
+            f";speedup={t_serial / t_batched:.2f}x"))
+    return out
 
 
 if __name__ == "__main__":

@@ -1,16 +1,18 @@
-"""Paper Fig. 4: breakdown of PKT execution among phases, per peel mode.
+"""Paper Fig. 4: breakdown of PKT execution among phases, per execution mode.
 
 Phases mirrored: support computation / SCAN+processing (peel) — plus the
 wedge-table construction our shape-static SPMD adaptation adds (DESIGN.md
 §7.3), reported honestly as its own phase.
 
-The peel phase is timed once per executor mode (dense / chunked / pallas) so
-the support-vs-peel split exposes where each mode's time goes.  On non-TPU
-backends the Pallas kernel runs in *interpret* mode, which is orders of
-magnitude slower than compiled XLA — so the pallas rows are only emitted for
-graphs whose peel table fits ``PALLAS_MAX_WEDGES`` (the row is about lowering
-coverage and shape behaviour there, not competitive time; on a TPU runner the
-cap is ignored).
+Both phases now carry their own mode axis: support is timed per support
+executor (jnp / pallas, ``core/support.py`` vs ``kernels/support.py``) and
+peel per peel executor (dense / chunked / pallas), and a row is emitted for
+every (support_mode, peel_mode) combination so the support-vs-peel split
+exposes where each pipeline's time goes.  On non-TPU backends the Pallas
+kernels run in *interpret* mode, which is orders of magnitude slower than
+compiled XLA — so pallas rows are only emitted for graphs whose wedge table
+fits ``PALLAS_MAX_WEDGES`` (those rows are about lowering coverage and shape
+behaviour, not competitive time; on a TPU runner the cap is ignored).
 """
 
 from __future__ import annotations
@@ -25,13 +27,14 @@ from repro.core.pkt import _pkt_peel_jit, prepare_peel
 from repro.graphs.datasets import GRAPH_SUITE
 from benchmarks.common import prep_graph, timeit, row
 
-#: interpret-mode pallas is only timed below this peel-table size on CPU
+#: interpret-mode pallas is only timed below this wedge-table size on CPU
 PALLAS_MAX_WEDGES = 1 << 16
 
 MODES = ("dense", "chunked", "pallas")
+SUPPORT_MODES = support_mod.SUPPORT_MODES
 
 
-def run(suite=None, modes=MODES) -> list[str]:
+def run(suite=None, modes=MODES, support_modes=SUPPORT_MODES) -> list[str]:
     on_tpu = jax.default_backend() == "tpu"
     out = []
     for name in suite or GRAPH_SUITE:
@@ -42,32 +45,43 @@ def run(suite=None, modes=MODES) -> list[str]:
         ptab = support_mod.build_peel_table(g)
         t_tables = time.perf_counter() - t0
 
-        t_support = timeit(lambda: support_mod.compute_support(g, stab))
+        t_support = {}
+        for smode in support_modes:
+            if smode == "pallas" and not on_tpu \
+                    and stab.size > PALLAS_MAX_WEDGES:
+                continue
+            t_support[smode] = timeit(
+                lambda: support_mod.compute_support(g, stab, mode=smode))
         S0 = support_mod.compute_support(g, stab)
 
         tabs, chunk, n_chunks = prepare_peel(ptab, g.m, 1 << 14)
         N, Eid, S0j = jnp.asarray(g.N), jnp.asarray(g.Eid), jnp.asarray(S0)
         iters = support_mod._search_iters(g)
 
-        for mode in modes:
-            if mode == "pallas" and not on_tpu \
+        t_peel = {}
+        for pmode in modes:
+            if pmode == "pallas" and not on_tpu \
                     and ptab.size > PALLAS_MAX_WEDGES:
                 continue
 
             def peel():
                 S, _, _ = _pkt_peel_jit(N, Eid, S0j, tabs, m=g.m, chunk=chunk,
                                         n_chunks=n_chunks, iters=iters,
-                                        mode=mode, interpret=not on_tpu)
+                                        mode=pmode, interpret=not on_tpu)
                 S.block_until_ready()
 
-            t_peel = timeit(peel, warmup=1, reps=2)
-            tot = t_tables + t_support + t_peel
-            out.append(row(
-                f"fig4/{name}/{mode}", tot,
-                f"support%={100 * t_support / tot:.1f}"
-                f";peel%={100 * t_peel / tot:.1f}"
-                f";tables%={100 * t_tables / tot:.1f}"
-                f";peel_us={t_peel * 1e6:.1f}"))
+            t_peel[pmode] = timeit(peel, warmup=1, reps=2)
+
+        for smode, t_sup in t_support.items():
+            for pmode, t_p in t_peel.items():
+                tot = t_tables + t_sup + t_p
+                out.append(row(
+                    f"fig4/{name}/sup-{smode}+peel-{pmode}", tot,
+                    f"support%={100 * t_sup / tot:.1f}"
+                    f";peel%={100 * t_p / tot:.1f}"
+                    f";tables%={100 * t_tables / tot:.1f}"
+                    f";support_us={t_sup * 1e6:.1f}"
+                    f";peel_us={t_p * 1e6:.1f}"))
     return out
 
 

@@ -9,9 +9,10 @@
   engine  — batched multi-graph throughput (graphs/sec)
   roofline— LM arch × shape roofline terms from dry-run (deliverable g)
 
-``--smoke`` is the CI gate: a tiny RMAT graph decomposed by every peel mode,
-Ros, and the numpy oracle; agreement is asserted (exit 1 on mismatch) and a
-machine-readable BENCH_smoke.json is written for workflow artifacts.
+``--smoke`` is the CI gate: a tiny RMAT graph decomposed by every
+(peel mode × support mode) executor pair, Ros, and the numpy oracle;
+agreement is asserted (exit 1 on mismatch) and a machine-readable
+BENCH_smoke.json is written for workflow artifacts.
 """
 
 import argparse
@@ -44,14 +45,19 @@ def smoke(out_path: str = "BENCH_smoke.json") -> int:
         report["ok"] = report["ok"] and same
         return same
 
+    from repro.core.support import SUPPORT_MODES
+
     for mode in PEEL_MODES:
-        t0 = time.perf_counter()
-        res = pkt(g, mode=mode)
-        dt = time.perf_counter() - t0
-        report["modes"][mode] = {
-            "seconds": dt, "agrees": check(f"pkt/{mode}", res.trussness),
-            "levels": res.levels, "sublevels": res.sublevels,
-        }
+        for support_mode in SUPPORT_MODES:
+            t0 = time.perf_counter()
+            res = pkt(g, mode=mode, support_mode=support_mode)
+            dt = time.perf_counter() - t0
+            key = mode if support_mode == "jnp" \
+                else f"{mode}+sup-{support_mode}"
+            report["modes"][key] = {
+                "seconds": dt, "agrees": check(f"pkt/{key}", res.trussness),
+                "levels": res.levels, "sublevels": res.sublevels,
+            }
 
     t0 = time.perf_counter()
     ros = truss_ros(g)

@@ -15,7 +15,7 @@ JAX/TPU adaptation of the OpenMP original (see DESIGN.md §2 for the mapping):
                       frontier edges' ranges (work-efficiency: each triangle's
                       wedge entries are scanned O(1) times over the whole run)
 
-Three modes:
+Three peel modes (``mode`` / ``peel_mode``):
   mode="chunked" (default): work-efficient chunk-skipping while_loop.
   mode="dense":  every sub-level scans the whole wedge table with frontier
                  masking — the naive SPMD port, kept as a benchmark foil.
@@ -23,6 +23,12 @@ Three modes:
                  (kernels/peel.py) — one wedge-table chunk per grid step,
                  chunk-skipping degraded to compute masking (grids are
                  static).  Bitwise-identical results to the other two modes.
+
+The support phase has its own independent executor axis
+(``support_mode`` ∈ ``core.support.SUPPORT_MODES``): "jnp" is the flat XLA
+program, "pallas" the chunked kernel in kernels/support.py.  Any
+(support_mode × peel_mode) combination is valid and all six produce
+bitwise-identical trussness (tests/test_parity_matrix.py asserts it).
 
 The peel loop is written against *padded* edge state so the batched engine
 (serve/truss_engine.py) can vmap it across many graphs of one size class:
@@ -43,6 +49,7 @@ import jax.numpy as jnp
 
 from repro.graphs.csr import CSRGraph
 from repro.core import support as support_mod
+from repro.kernels import wedge_common
 
 _SENTINEL_S = jnp.int32(1 << 30)
 
@@ -84,20 +91,21 @@ def chunk_ranges(off: np.ndarray, chunk: int,
     has = np.zeros(m_out, bool)
     c_start = np.zeros(m_out, np.int32)
     c_end = np.zeros(m_out, np.int32)
+    if m == 0 or off[-1] == 0:
+        # explicit early-exit: empty graph, or a table with no entries
+        # (triangle-free orientation) — every edge has an empty chunk range
+        return has, c_start, c_end
     has[:m] = off[1:] > off[:-1]
     c_start[:m] = off[:-1] // chunk
     c_end[:m] = np.maximum(off[1:] - 1, 0) // chunk
     return has, c_start, c_end
 
 
-def _pad_tables(tab: support_mod.WedgeTable, m: int, chunk: int) -> PeelTables:
-    nw = tab.size
-    n_chunks = max(1, -(-nw // chunk))
-    pad = n_chunks * chunk - nw
-    e1 = np.concatenate([tab.e1, np.full(pad, m, np.int32)])
-    cand = np.concatenate([tab.cand_slot, np.zeros(pad, np.int32)])
-    lo = np.concatenate([tab.lo, np.zeros(pad, np.int32)])
-    hi = np.concatenate([tab.hi, np.zeros(pad, np.int32)])
+def _pad_tables(tab: support_mod.WedgeTable, m: int, chunk: int,
+                n_chunks: int) -> PeelTables:
+    e1, cand, lo, hi = wedge_common.pad_chunked(
+        tab.e1, tab.cand_slot, tab.lo, tab.hi,
+        m=m, chunk=chunk, n_chunks=n_chunks)
     has, c_start, c_end = chunk_ranges(tab.off, chunk)
     return PeelTables(
         e1=jnp.asarray(e1), cand_slot=jnp.asarray(cand),
@@ -111,17 +119,32 @@ def prepare_peel(tab: support_mod.WedgeTable, m: int,
                  chunk: int) -> tuple[PeelTables, int, int]:
     """Clamp ``chunk`` to the table, pad, and derive ``n_chunks``.
 
-    The single place where the chunk size is sanitized: a user-passed chunk
-    larger than the (padded) table, zero, or negative is clamped so that
-    ``n_chunks >= 1`` always holds — tiny graphs (m <= 2, a handful of wedge
-    entries) used to be able to reach ``n_chunks == 0`` through the old
-    call-site-local ``min(chunk, size)`` dance.
+    The single place where the chunk size is sanitized (the layout policy
+    itself lives in ``kernels.wedge_common.chunk_layout``): a user-passed
+    chunk larger than the (padded) table, zero, or negative is clamped so
+    that ``n_chunks >= 1`` always holds — tiny graphs (m <= 2, a handful of
+    wedge entries) used to be able to reach ``n_chunks == 0`` through the
+    old call-site-local ``min(chunk, size)`` dance.
+
+    A table with no entries at all — the empty graph (m == 0), or a support
+    table of a triangle-free orientation — takes an explicit early-exit
+    rather than relying on the clamping arithmetic: one all-padding chunk of
+    size 1, every edge marked entry-less.
     """
-    size = max(1, tab.size)
-    chunk = max(1, min(chunk, size))
-    tabs = _pad_tables(tab, m, chunk)
-    n_chunks = tabs.e1.shape[0] // chunk
-    assert n_chunks >= 1
+    if tab.size == 0:
+        tabs = PeelTables(
+            e1=jnp.full((1,), m, jnp.int32),
+            cand_slot=jnp.zeros((1,), jnp.int32),
+            lo=jnp.zeros((1,), jnp.int32),
+            hi=jnp.zeros((1,), jnp.int32),
+            c_start=jnp.zeros((m,), jnp.int32),
+            c_end=jnp.zeros((m,), jnp.int32),
+            has_entries=jnp.zeros((m,), jnp.bool_),
+        )
+        return tabs, 1, 1
+    chunk, n_chunks = wedge_common.chunk_layout(tab.size, chunk)
+    tabs = _pad_tables(tab, m, chunk, n_chunks)
+    assert tabs.e1.shape[0] == n_chunks * chunk
     return tabs, chunk, n_chunks
 
 
@@ -145,7 +168,6 @@ def _peel_loop(N, Eid, S_ext0, processed0, tabs: PeelTables, *, m: int,
     processed sentinel, and callers may pre-mark extra padding slots as
     processed (batched engine).  Returns (S_ext[:m], levels, sublevels).
     """
-    two_m = N.shape[0]
 
     def chunk_contrib(c, dec, S_ext, processed, inCurr, l):
         """Decrement contributions from one chunk of the wedge table."""
@@ -155,10 +177,7 @@ def _peel_loop(N, Eid, S_ext0, processed0, tabs: PeelTables, *, m: int,
         lo = jax.lax.dynamic_slice(tabs.lo, (base,), (chunk,))
         hi = jax.lax.dynamic_slice(tabs.hi, (base,), (chunk,))
         in1 = inCurr[e1]
-        w = N[cand]
-        idx = support_mod.ranged_searchsorted(N, w, lo, hi, iters)
-        safe = jnp.minimum(idx, two_m - 1)
-        hit = (idx < hi) & (N[safe] == w)
+        hit, safe = wedge_common.probe(N, cand, lo, hi, iters=iters)
         e2 = Eid[cand]
         e3 = Eid[safe]
         valid = in1 & hit & ~processed[e2] & ~processed[e3]
@@ -266,21 +285,29 @@ def _pkt_peel_jit(N, Eid, S0, tabs: PeelTables, *, m: int, chunk: int,
 
 
 def pkt(g: CSRGraph, *, chunk: int = 1 << 14, mode: str = "chunked",
+        peel_mode: str | None = None, support_mode: str = "jnp",
         support_table: support_mod.WedgeTable | None = None,
         peel_table: support_mod.WedgeTable | None = None,
         interpret: bool | None = None) -> PKTResult:
     """Full PKT truss decomposition. Returns trussness per edge (S+2).
 
-    ``mode`` selects the peel executor (see module docstring); ``interpret``
+    ``mode`` (alias ``peel_mode``, which wins when both are given) selects
+    the peel executor and ``support_mode`` the support executor — the two
+    axes are independent (see module docstring); ``interpret``
     forces/forbids Pallas interpret mode (default: interpret off-TPU).
     """
+    mode = mode if peel_mode is None else peel_mode
     if mode not in PEEL_MODES:
         raise ValueError(f"mode must be one of {PEEL_MODES}, got {mode!r}")
+    if support_mode not in support_mod.SUPPORT_MODES:
+        raise ValueError(f"support_mode must be one of "
+                         f"{support_mod.SUPPORT_MODES}, got {support_mode!r}")
     if g.m == 0:
         return PKTResult(np.zeros(0, np.int32), np.zeros(0, np.int32), 0, 0)
     if interpret is None:
-        interpret = jax.default_backend() != "tpu"
-    S0 = support_mod.compute_support(g, support_table)
+        interpret = wedge_common.interpret_default()
+    S0 = support_mod.compute_support(g, support_table, mode=support_mode,
+                                     chunk=chunk, interpret=interpret)
     ptab = peel_table if peel_table is not None else support_mod.build_peel_table(g)
     tabs, chunk, n_chunks = prepare_peel(ptab, g.m, chunk)
     S, levels, subs = _pkt_peel_jit(
@@ -315,7 +342,8 @@ def align_to_input(trussness: np.ndarray, g: CSRGraph,
 
 
 def truss_pkt(edges: np.ndarray, *, reorder: bool = True,
-              chunk: int = 1 << 14, mode: str = "chunked") -> np.ndarray:
+              chunk: int = 1 << 14, mode: str = "chunked",
+              support_mode: str = "jnp") -> np.ndarray:
     """Convenience entry: canonical edges → trussness aligned to input order.
 
     With ``reorder`` (the paper's preprocessing) vertices are relabeled by
@@ -333,5 +361,5 @@ def truss_pkt(edges: np.ndarray, *, reorder: bool = True,
     else:
         r_edges = edges
     g = build_csr(r_edges, n)
-    res = pkt(g, chunk=chunk, mode=mode)
+    res = pkt(g, chunk=chunk, mode=mode, support_mode=support_mode)
     return align_to_input(res.trussness, g, r_edges, n)

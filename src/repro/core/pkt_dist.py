@@ -10,7 +10,10 @@ idiom natural to an SPMD mesh:
     decrement vector per sub-level is the only communication — the distributed
     analogue of the paper's per-sub-level barrier;
   * support computation fans out the same way (shard the oriented wedge
-    table, psum the partial supports once).
+    table, psum the partial supports once); per shard it runs either as the
+    flat jnp program or — ``support_mode="pallas"`` — as the chunked VMEM
+    kernel from ``kernels/support.py``, each device lowering the kernel over
+    its own table slice.  Both modes are bitwise identical.
 
 Work per sub-level per device: O(local_table) dense (each device scans its
 slice with frontier masking). Communication per sub-level: one all-reduce of
@@ -33,6 +36,7 @@ from repro.compat import shard_map
 
 from repro.graphs.csr import CSRGraph
 from repro.core import support as support_mod
+from repro.kernels import wedge_common
 
 _SENT = jnp.int32(1 << 30)
 
@@ -42,7 +46,6 @@ def _dist_peel_body(N, Eid, S0, e1, cand, lo, hi, *, m: int, iters: int,
     """Runs inside shard_map: local table slices, replicated edge state."""
     local = e1.shape[0]
     n_chunks = max(1, local // chunk)
-    two_m = N.shape[0]
 
     def chunk_contrib(c, dec, S_ext, processed, inCurr, l):
         base = c * chunk
@@ -51,10 +54,7 @@ def _dist_peel_body(N, Eid, S0, e1, cand, lo, hi, *, m: int, iters: int,
         ll = jax.lax.dynamic_slice(lo, (base,), (chunk,))
         hh = jax.lax.dynamic_slice(hi, (base,), (chunk,))
         in1 = inCurr[ee1]
-        w = N[cc]
-        idx = support_mod.ranged_searchsorted(N, w, ll, hh, iters)
-        safe = jnp.minimum(idx, two_m - 1)
-        hit = (idx < hh) & (N[safe] == w)
+        hit, safe = wedge_common.probe(N, cc, ll, hh, iters=iters)
         e2 = Eid[cc]
         e3 = Eid[safe]
         valid = in1 & hit & ~processed[e2] & ~processed[e3]
@@ -105,18 +105,33 @@ def _dist_peel_body(N, Eid, S0, e1, cand, lo, hi, *, m: int, iters: int,
 
 
 def _dist_support_body(N, Eid, e1, cand, lo, hi, *, m: int, iters: int,
-                       axes: Sequence[str]):
-    """Sharded AM4 support computation (inside shard_map)."""
-    w = N[cand]
-    idx = support_mod.ranged_searchsorted(N, w, lo, hi, iters)
-    safe = jnp.minimum(idx, N.shape[0] - 1)
-    hit = (idx < hi) & (N[safe] == w)
-    # sentinel entries carry e1 == m
-    inc = hit.astype(jnp.int32)
-    S = jnp.zeros((m + 1,), jnp.int32)
-    S = S.at[e1].add(inc)
-    S = S.at[jnp.where(hit, Eid[cand], m)].add(inc)
-    S = S.at[jnp.where(hit, Eid[safe], m)].add(inc)
+                       axes: Sequence[str], mode: str = "jnp",
+                       chunk: int = 0, interpret: bool = True):
+    """Sharded AM4 support computation (inside shard_map).
+
+    ``mode="pallas"`` evaluates the local table slice with the chunked
+    support kernel (the caller guarantees the slice length is a multiple of
+    ``chunk``); the folded scatter and one psum make the two modes bitwise
+    identical.
+    """
+    if mode == "pallas":
+        from repro.kernels.support import (fold_support_targets,
+                                           support_hit_targets)
+
+        local = e1.shape[0]
+        assert chunk >= 1 and local % chunk == 0, (local, chunk)
+        tgt1, tgt2, tgt3, _ = support_hit_targets(
+            e1, cand, lo, hi, N, Eid, chunk=chunk,
+            n_chunks=local // chunk, iters=iters, m=m, interpret=interpret)
+        S = fold_support_targets(tgt1, tgt2, tgt3, m=m)
+    else:
+        hit, safe = wedge_common.probe(N, cand, lo, hi, iters=iters)
+        # sentinel entries carry e1 == m
+        inc = hit.astype(jnp.int32)
+        S = jnp.zeros((m + 1,), jnp.int32)
+        S = S.at[e1].add(inc)
+        S = S.at[jnp.where(hit, Eid[cand], m)].add(inc)
+        S = S.at[jnp.where(hit, Eid[safe], m)].add(inc)
     for ax in axes:
         S = jax.lax.psum(S, ax)
     return S[:m]
@@ -147,11 +162,13 @@ def make_pkt_dist(mesh: jax.sharding.Mesh, axes: Sequence[str], *, m: int,
 
 
 def make_support_dist(mesh: jax.sharding.Mesh, axes: Sequence[str], *, m: int,
-                      iters: int):
+                      iters: int, mode: str = "jnp", chunk: int = 0,
+                      interpret: bool = True):
     spec_rep = P()
     spec_sh = P(tuple(axes))
     fn = shard_map(
-        functools.partial(_dist_support_body, m=m, iters=iters, axes=axes),
+        functools.partial(_dist_support_body, m=m, iters=iters, axes=axes,
+                          mode=mode, chunk=chunk, interpret=interpret),
         mesh=mesh,
         in_specs=(spec_rep, spec_rep, spec_sh, spec_sh, spec_sh, spec_sh),
         out_specs=spec_rep,
@@ -167,18 +184,38 @@ def _pad_to(x: np.ndarray, size: int, fill) -> np.ndarray:
 
 
 def pkt_dist(g: CSRGraph, mesh: jax.sharding.Mesh | None = None,
-             axes: Sequence[str] = ("data",), chunk: int = 1 << 12):
-    """Run distributed PKT on the available devices. Returns trussness (m,)."""
+             axes: Sequence[str] = ("data",), chunk: int = 1 << 12,
+             support_mode: str = "jnp", interpret: bool | None = None):
+    """Run distributed PKT on the available devices. Returns trussness (m,).
+
+    ``support_mode`` selects the per-shard support executor ("jnp" or
+    "pallas", see ``core.support.SUPPORT_MODES``); the peel phase is the
+    sharded BSP loop in either case.
+    """
+    if support_mode not in support_mod.SUPPORT_MODES:
+        raise ValueError(f"support_mode must be one of "
+                         f"{support_mod.SUPPORT_MODES}, got {support_mode!r}")
     if mesh is None:
         dev = np.array(jax.devices())
         mesh = jax.sharding.Mesh(dev, ("data",))
         axes = ("data",)
+    if interpret is None:
+        interpret = wedge_common.interpret_default()
     n_shards = int(np.prod([mesh.shape[a] for a in axes]))
     iters = support_mod._search_iters(g)
 
     stab = support_mod.build_support_table(g)
-    ssize = max(1, -(-max(stab.size, 1) // n_shards)) * n_shards
-    sup_fn = make_support_dist(mesh, axes, m=g.m, iters=iters)
+    per_shard = max(1, -(-max(stab.size, 1) // n_shards))
+    sup_chunk = 0
+    if support_mode == "pallas":
+        # each shard lowers the kernel over its slice: the slice must be a
+        # whole number of chunks, so round the per-shard length up to one
+        sup_chunk = min(chunk, 1 << 13)
+        per_shard = -(-per_shard // sup_chunk) * sup_chunk
+    ssize = per_shard * n_shards
+    sup_fn = make_support_dist(mesh, axes, m=g.m, iters=iters,
+                               mode=support_mode, chunk=sup_chunk,
+                               interpret=interpret)
     S0 = sup_fn(jnp.asarray(g.N), jnp.asarray(g.Eid),
                 jnp.asarray(_pad_to(stab.e1, ssize, g.m)),
                 jnp.asarray(_pad_to(stab.cand_slot, ssize, 0)),

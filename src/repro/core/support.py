@@ -16,6 +16,22 @@ Each triangle u<v<w is discovered exactly once, anchored at its lowest-vertex
 edge (u,v) with w scanned from N⁺(v). Work: Θ(m + Σ_v d⁻(v)·d⁺(v)·log d⁺) —
 the ordering-dependence (Table 2) is preserved: relabeling by coreness shrinks
 d⁺ exactly as in the paper.
+
+Two execution modes (``compute_support(mode=...)``), bitwise identical:
+
+  mode="jnp" (default): the wedge table is evaluated as one flat jnp
+      gather/search/scatter program (``_support_jit``) — XLA fuses it, but
+      every probe round-trips through HBM.
+  mode="pallas": the table is cut into fixed chunks and evaluated by the
+      Pallas kernel in ``kernels/support.py`` (DESIGN.md §2) — one chunk per
+      grid step, the candidate gather fused with the ranged binary search in
+      VMEM, per-chunk triangle partials accumulated on-chip.  The kernel
+      emits increment-target streams; the support scatter-add happens once
+      outside, so integer-exact addition makes the two modes agree bitwise.
+      Off-TPU the kernel runs in interpret mode (CI lowers it on every PR).
+
+The peel phase has the same split (``core.pkt.pkt(mode=...)``); the two
+kernels share layout and search machinery via ``kernels/wedge_common.py``.
 """
 
 from __future__ import annotations
@@ -29,6 +45,12 @@ import jax
 import jax.numpy as jnp
 
 from repro.graphs.csr import CSRGraph
+from repro.kernels.wedge_common import (chunk_layout, interpret_default,
+                                        pad_chunked, probe,
+                                        ranged_searchsorted)
+
+#: executors for the support phase; "pallas" = kernels/support.py
+SUPPORT_MODES = ("jnp", "pallas")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -103,24 +125,9 @@ def build_peel_table(g: CSRGraph) -> WedgeTable:
     )
 
 
-def ranged_searchsorted(N: jnp.ndarray, w: jnp.ndarray, lo: jnp.ndarray,
-                        hi: jnp.ndarray, iters: int) -> jnp.ndarray:
-    """Vectorized lower-bound binary search of w in sorted N[lo:hi).
-
-    Returns the insertion index (== hi when all elements < w). ``iters`` must
-    be >= ceil(log2(max(hi - lo) + 1)).
-    """
-    def body(_, state):
-        lo_, hi_ = state
-        mid = (lo_ + hi_) >> 1
-        val = N[mid]
-        go_right = val < w
-        lo_ = jnp.where(go_right & (lo_ < hi_), mid + 1, lo_)
-        hi_ = jnp.where((~go_right) & (lo_ < hi_), mid, hi_)
-        return lo_, hi_
-
-    lo_f, _ = jax.lax.fori_loop(0, iters, body, (lo, hi))
-    return lo_f
+# ``ranged_searchsorted`` lives in kernels/wedge_common.py (shared with the
+# Pallas kernels) and is re-exported here for its established call sites
+# (core/pkt.py, core/pkt_dist.py, core/triangle_list.py, benchmarks).
 
 
 def _search_iters(g: CSRGraph, *, oriented: bool = False) -> int:
@@ -137,10 +144,7 @@ def _search_iters(g: CSRGraph, *, oriented: bool = False) -> int:
 
 @functools.partial(jax.jit, static_argnames=("iters", "m"))
 def _support_jit(N, Eid, e1, cand_slot, lo, hi, iters: int, m: int):
-    w = N[cand_slot]
-    idx = ranged_searchsorted(N, w, lo, hi, iters)
-    safe = jnp.minimum(idx, N.shape[0] - 1)
-    hit = (idx < hi) & (N[safe] == w)
+    hit, safe = probe(N, cand_slot, lo, hi, iters=iters)
     e2 = Eid[cand_slot]
     e3 = Eid[safe]
     inc = hit.astype(jnp.int32)
@@ -151,12 +155,40 @@ def _support_jit(N, Eid, e1, cand_slot, lo, hi, iters: int, m: int):
     return S
 
 
-def compute_support(g: CSRGraph, table: WedgeTable | None = None) -> np.ndarray:
-    """Edge support (triangles per edge) via the AM4 adaptation. Returns (m,)."""
+def compute_support(g: CSRGraph, table: WedgeTable | None = None, *,
+                    mode: str = "jnp", chunk: int = 1 << 14,
+                    interpret: bool | None = None) -> np.ndarray:
+    """Edge support (triangles per edge) via the AM4 adaptation. Returns (m,).
+
+    ``mode`` selects the executor (see module docstring): "jnp" is the flat
+    XLA program, "pallas" the chunked VMEM kernel (``chunk`` entries per grid
+    step; ``interpret`` forces/forbids interpret mode, default off-TPU).
+    """
+    if mode not in SUPPORT_MODES:
+        raise ValueError(f"mode must be one of {SUPPORT_MODES}, got {mode!r}")
     if g.m == 0:
         return np.zeros(0, np.int32)
     if table is None:
         table = build_support_table(g)
+    if table.size == 0:
+        # triangle-free under the orientation (e.g. stars): nothing to probe
+        return np.zeros(g.m, np.int32)
+    if mode == "pallas":
+        from repro.kernels.support import support_counts
+
+        if interpret is None:
+            interpret = interpret_default()
+        chunk_eff, n_chunks = chunk_layout(table.size, chunk)
+        e1, cand, lo, hi = pad_chunked(
+            table.e1, table.cand_slot, table.lo, table.hi,
+            m=g.m, chunk=chunk_eff, n_chunks=n_chunks)
+        S_ext, _ = support_counts(
+            jnp.asarray(e1), jnp.asarray(cand), jnp.asarray(lo),
+            jnp.asarray(hi), jnp.asarray(g.N), jnp.asarray(g.Eid),
+            chunk=chunk_eff, n_chunks=n_chunks,
+            iters=_search_iters(g, oriented=True), m=g.m,
+            interpret=interpret)
+        return np.asarray(S_ext)[: g.m]
     S = _support_jit(
         jnp.asarray(g.N), jnp.asarray(g.Eid),
         jnp.asarray(table.e1), jnp.asarray(table.cand_slot),
@@ -180,10 +212,7 @@ def triangle_count(g: CSRGraph) -> int:
 
 @functools.partial(jax.jit, static_argnames=("iters", "m"))
 def _support_ros_jit(N, e1, cand_slot, lo, hi, iters: int, m: int):
-    w = N[cand_slot]
-    idx = ranged_searchsorted(N, w, lo, hi, iters)
-    safe = jnp.minimum(idx, N.shape[0] - 1)
-    hit = (idx < hi) & (N[safe] == w)
+    hit, _ = probe(N, cand_slot, lo, hi, iters=iters)
     S = jnp.zeros((m,), jnp.int32)
     S = S.at[e1].add(hit.astype(jnp.int32))
     return S

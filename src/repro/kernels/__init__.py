@@ -1,15 +1,21 @@
 """Pallas TPU kernels (validated in interpret mode on CPU).
 
-The paper's two custom-kernel-worthy hot spots are adjacency-set intersection
-(support computation, Alg. 3; intersect.py) and the peel phase's wedge-table
-SCAN (Alg. 5; peel.py). The LM stack deliberately stays pure-XLA so compiled
-cost_analysis stays honest for the roofline.
+The paper's two custom-kernel-worthy hot spots are the support phase's
+oriented wedge-table scan (Alg. 3/AM4; support.py, plus the older
+degree-bucketed intersect.py/ops.py variant) and the peel phase's wedge-table
+SCAN (Alg. 5; peel.py). Both wedge-table kernels share their chunk layout,
+padding policy, and ranged-binary-search probe via wedge_common.py. The LM
+stack deliberately stays pure-XLA so compiled cost_analysis stays honest for
+the roofline.
 """
 
 from repro.kernels.intersect import intersect_blocked
 from repro.kernels.ops import compute_support_kernel
 from repro.kernels.peel import peel_decrements, peel_decrement_targets
 from repro.kernels.ref import intersect_ref
+from repro.kernels.support import (fold_support_targets, support_counts,
+                                   support_hit_targets)
 
 __all__ = ["intersect_blocked", "compute_support_kernel", "intersect_ref",
-           "peel_decrements", "peel_decrement_targets"]
+           "peel_decrements", "peel_decrement_targets",
+           "support_hit_targets", "support_counts", "fold_support_targets"]

@@ -19,12 +19,9 @@ import jax.numpy as jnp
 from repro.graphs.csr import CSRGraph
 from repro.core import support as support_mod
 from repro.kernels.intersect import intersect_blocked
+from repro.kernels.wedge_common import interpret_default as _interpret_default
 
 _DEG_CLASSES = (8, 16, 32, 64, 128, 256)
-
-
-def _interpret_default() -> bool:
-    return jax.default_backend() != "tpu"
 
 
 def _block_rows_for(d: int) -> int:

@@ -23,6 +23,9 @@ VMEM per grid step ≈ 4·(chunk + two_m·2 + 3·(m+1)) bytes plus the output
 blocks; callers pick ``chunk`` so this stays well under the ~16 MiB budget.
 On non-TPU backends the kernel runs in interpret mode (the CI contract: the
 lowering is exercised on every PR, the Mosaic path on TPU runners).
+
+Chunk layout, padding, and the fused gather + ranged-binary-search probe are
+shared with the support kernel via ``kernels/wedge_common.py``.
 """
 
 from __future__ import annotations
@@ -33,11 +36,9 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.core import support as support_mod
+from repro.kernels import wedge_common
 
-
-def _interpret_default() -> bool:
-    return jax.default_backend() != "tpu"
+_interpret_default = wedge_common.interpret_default
 
 
 def _peel_chunk_kernel(act_ref, l_ref, e1_ref, cand_ref, lo_ref, hi_ref,
@@ -57,12 +58,8 @@ def _peel_chunk_kernel(act_ref, l_ref, e1_ref, cand_ref, lo_ref, hi_ref,
     lo = lo_ref[...]               # (chunk,) probe range start
     hi = hi_ref[...]               # (chunk,) probe range end (lo==hi → miss)
 
-    two_m = N.shape[0]
     in1 = curr[e1]                 # padding rows carry e1 == m → curr[m] False
-    w = N[cand]
-    idx = support_mod.ranged_searchsorted(N, w, lo, hi, iters)
-    safe = jnp.minimum(idx, two_m - 1)
-    hit = (idx < hi) & (N[safe] == w)
+    hit, safe = wedge_common.probe(N, cand, lo, hi, iters=iters)
     e2 = Eid[cand]
     e3 = Eid[safe]
     valid = act & in1 & hit & (~proc[e2]) & (~proc[e3])
@@ -88,8 +85,8 @@ def peel_decrement_targets(active, l, e1, cand, lo, hi, N, Eid,
     two_m = N.shape[0]
     nw = n_chunks * chunk
     kernel = functools.partial(_peel_chunk_kernel, iters=iters, m=m)
-    chunk_spec = pl.BlockSpec((chunk,), lambda i: (i,))
-    full = lambda size: pl.BlockSpec((size,), lambda i: (0,))
+    chunk_spec = wedge_common.chunk_spec(chunk)
+    full = wedge_common.replicated_spec
     return pl.pallas_call(
         kernel,
         grid=(n_chunks,),

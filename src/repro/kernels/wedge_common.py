@@ -1,0 +1,120 @@
+"""Shared wedge-table machinery for the Pallas truss kernels.
+
+Both hot-phase kernels walk the same flat data structure: a *wedge table* —
+one row per (anchor edge, candidate adjacency slot) pair, with a probe range
+``[lo, hi)`` into the CSR adjacency array ``N``.  The support kernel
+(``kernels/support.py``) walks the oriented AM4 table, the peel kernel
+(``kernels/peel.py``) the full-adjacency ProcessSubLevel table; the table
+*math* is identical and used to be duplicated across the two kernels and
+``core/pkt.py``.  This module is its single home:
+
+  * **chunk layout** — tables are cut into fixed-size chunks, one per Pallas
+    grid step; ``chunk_layout`` sanitizes a requested chunk size (clamped so
+    that ``n_chunks >= 1`` always holds, including zero-entry tables) and
+    ``pad_chunked`` pads the four table arrays to a whole number of chunks
+    with inert sentinel rows (anchor ``m``, empty probe range ``lo == hi``);
+  * **BlockSpec helpers** — ``chunk_spec`` stages one chunk per grid step,
+    ``replicated_spec`` replicates a whole array (adjacency, edge state)
+    into VMEM at every step;
+  * **the search primitive** — ``ranged_searchsorted`` is the branch-free
+    vectorized lower-bound binary search both phases use as their membership
+    test, and ``probe`` fuses it with the candidate gather and hit predicate
+    (``w ∈ N[lo:hi)``).
+
+Everything here is pure jax/numpy so it can be imported from kernels and
+from ``core/`` without cycles (``core.support`` re-exports
+``ranged_searchsorted`` for its established call sites).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def interpret_default() -> bool:
+    """Pallas interpret mode unless running on a real TPU."""
+    return jax.default_backend() != "tpu"
+
+
+def chunk_layout(size: int, chunk: int) -> tuple[int, int]:
+    """Sanitize a requested chunk size against a table of ``size`` entries.
+
+    Returns ``(chunk, n_chunks)`` with ``1 <= chunk`` and ``n_chunks >= 1``:
+    a chunk larger than the table, zero, or negative is clamped; a zero-entry
+    table yields one all-padding chunk of size 1 (callers that want to skip
+    the kernel entirely for empty tables early-exit before this).
+    """
+    size = max(1, int(size))
+    chunk = max(1, min(int(chunk), size))
+    return chunk, -(-size // chunk)
+
+
+def pad_chunked(e1: np.ndarray, cand_slot: np.ndarray, lo: np.ndarray,
+                hi: np.ndarray, *, m: int, chunk: int,
+                n_chunks: int) -> tuple[np.ndarray, np.ndarray, np.ndarray,
+                                        np.ndarray]:
+    """Pad the four wedge-table arrays to ``n_chunks * chunk`` inert rows.
+
+    Padding rows carry the anchor sentinel ``m`` and an empty probe range
+    (``lo == hi == 0``), so they can never produce a hit and any scatter
+    they feed lands on the absorbing slot ``m``.
+    """
+    nw = int(e1.shape[0])
+    pad = n_chunks * chunk - nw
+    assert pad >= 0, (nw, chunk, n_chunks)
+    return (
+        np.concatenate([e1, np.full(pad, m, np.int32)]).astype(np.int32),
+        np.concatenate([cand_slot, np.zeros(pad, np.int32)]).astype(np.int32),
+        np.concatenate([lo, np.zeros(pad, np.int32)]).astype(np.int32),
+        np.concatenate([hi, np.zeros(pad, np.int32)]).astype(np.int32),
+    )
+
+
+def chunk_spec(chunk: int) -> pl.BlockSpec:
+    """One table chunk per grid step."""
+    return pl.BlockSpec((chunk,), lambda i: (i,))
+
+
+def replicated_spec(size: int) -> pl.BlockSpec:
+    """Whole array staged at every grid step (adjacency / edge state)."""
+    return pl.BlockSpec((size,), lambda i: (0,))
+
+
+def ranged_searchsorted(N: jnp.ndarray, w: jnp.ndarray, lo: jnp.ndarray,
+                        hi: jnp.ndarray, iters: int) -> jnp.ndarray:
+    """Vectorized lower-bound binary search of w in sorted N[lo:hi).
+
+    Returns the insertion index (== hi when all elements < w). ``iters`` must
+    be >= ceil(log2(max(hi - lo) + 1)).
+    """
+    def body(_, state):
+        lo_, hi_ = state
+        mid = (lo_ + hi_) >> 1
+        val = N[mid]
+        go_right = val < w
+        lo_ = jnp.where(go_right & (lo_ < hi_), mid + 1, lo_)
+        hi_ = jnp.where((~go_right) & (lo_ < hi_), mid, hi_)
+        return lo_, hi_
+
+    lo_f, _ = jax.lax.fori_loop(0, iters, body, (lo, hi))
+    return lo_f
+
+
+def probe(N: jnp.ndarray, cand_slot: jnp.ndarray, lo: jnp.ndarray,
+          hi: jnp.ndarray, *, iters: int) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Fused wedge membership test: is ``w = N[cand_slot]`` in ``N[lo:hi)``?
+
+    Returns ``(hit, safe)`` where ``safe`` is the (clamped) index of the
+    matching slot — valid as a gather index whenever ``hit`` is True, and a
+    harmless in-bounds index otherwise.  This is the shared inner loop of
+    both kernels and of every jnp executor in ``core/``.
+    """
+    w = N[cand_slot]
+    idx = ranged_searchsorted(N, w, lo, hi, iters)
+    safe = jnp.minimum(idx, N.shape[0] - 1)
+    hit = (idx < hi) & (N[safe] == w)
+    return hit, safe

@@ -25,7 +25,10 @@ def main(argv=None):
                     choices=["pkt", "dist", "trilist", "wc", "ros"])
     ap.add_argument("--chunk", type=int, default=1 << 14)
     from repro.core.pkt import PEEL_MODES
+    from repro.core.support import SUPPORT_MODES
     ap.add_argument("--mode", default="chunked", choices=list(PEEL_MODES))
+    ap.add_argument("--support-mode", default="jnp",
+                    choices=list(SUPPORT_MODES))
     ap.add_argument("--verify", action="store_true",
                     help="check against the numpy oracle (small graphs!)")
     args = ap.parse_args(argv)
@@ -42,11 +45,13 @@ def main(argv=None):
 
     t0 = time.perf_counter()
     if args.engine == "pkt":
-        res = pkt(g, chunk=args.chunk, mode=args.mode)
+        res = pkt(g, chunk=args.chunk, mode=args.mode,
+                  support_mode=args.support_mode)
         truss = res.trussness
         extra = f"levels={res.levels} sublevels={res.sublevels}"
     elif args.engine == "dist":
-        truss = pkt_dist(g, chunk=min(args.chunk, 1 << 12))
+        truss = pkt_dist(g, chunk=min(args.chunk, 1 << 12),
+                         support_mode=args.support_mode)
         extra = ""
     elif args.engine == "trilist":
         truss = truss_trilist(g)

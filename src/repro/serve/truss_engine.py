@@ -29,9 +29,13 @@ Usage:
     trussness_b = eng.result(t2)      # flushes pending work once
     trussness_a = eng.result(t1)      # already computed
 
-``mode`` selects the peel executor exactly as in ``core.pkt.pkt`` —
-"chunked", "dense", or "pallas" (the kernel path vmaps too: Pallas grids gain
-a leading batch dimension).
+``mode`` selects the peel executor and ``support_mode`` the support executor
+exactly as in ``core.pkt.pkt`` — the kernel paths vmap too: Pallas grids
+gain a leading batch dimension, so one bucket dispatch lowers each kernel
+once for the whole batch.  Submissions larger than ``max_edges`` canonical
+edges are rejected at ``submit`` time with a clear error (the padded
+operands of an oversized graph would otherwise compile a bucket no steady
+workload ever reuses, and can exhaust device memory).
 """
 
 from __future__ import annotations
@@ -50,6 +54,7 @@ from repro.graphs.csr import CSRGraph, build_csr, degeneracy_order, relabel
 from repro.core import support as support_mod
 from repro.core.pkt import (PEEL_MODES, PeelTables, _SENTINEL_S, _peel_loop,
                             align_to_input, chunk_ranges)
+from repro.kernels import wedge_common
 
 _PAD_N = np.int32(1 << 30)   # adjacency padding: larger than any vertex id
 _MIN_M_PAD = 8
@@ -68,6 +73,8 @@ class SizeClass(NamedTuple):
     chunk: int        # peel chunk size (pow2, <= peel_pad)
     n_chunks: int     # peel_pad // chunk
     iters: int        # binary-search iteration bound for 2*m_pad-length rows
+    sup_chunk: int    # support-kernel chunk size (pow2, <= sup_pad)
+    sup_n_chunks: int  # sup_pad // sup_chunk
 
 
 class BatchOperand(NamedTuple):
@@ -91,15 +98,28 @@ class BatchOperand(NamedTuple):
 
 @functools.partial(
     jax.jit,
-    static_argnames=("m", "chunk", "n_chunks", "iters", "mode", "interpret"),
+    static_argnames=("m", "chunk", "n_chunks", "iters", "mode",
+                     "support_mode", "sup_chunk", "sup_n_chunks",
+                     "interpret"),
 )
 def _batched_truss(ops: BatchOperand, *, m: int, chunk: int, n_chunks: int,
-                   iters: int, mode: str, interpret: bool):
+                   iters: int, mode: str, support_mode: str, sup_chunk: int,
+                   sup_n_chunks: int, interpret: bool):
     """vmap of (support → peel) across one bucket of padded graphs."""
 
     def one(op: BatchOperand):
-        S0 = support_mod._support_jit(
-            op.N, op.Eid, op.s_e1, op.s_cand, op.s_lo, op.s_hi, iters, m)
+        if support_mode == "pallas":
+            from repro.kernels.support import (fold_support_targets,
+                                               support_hit_targets)
+
+            tgt1, tgt2, tgt3, _ = support_hit_targets(
+                op.s_e1, op.s_cand, op.s_lo, op.s_hi, op.N, op.Eid,
+                chunk=sup_chunk, n_chunks=sup_n_chunks, iters=iters, m=m,
+                interpret=interpret)
+            S0 = fold_support_targets(tgt1, tgt2, tgt3, m=m)[:m]
+        else:
+            S0 = support_mod._support_jit(
+                op.N, op.Eid, op.s_e1, op.s_cand, op.s_lo, op.s_hi, iters, m)
         edge_ok = jnp.arange(m + 1, dtype=jnp.int32) < op.m_real
         S_ext0 = jnp.where(
             edge_ok,
@@ -135,18 +155,27 @@ class _Pending:
 class TrussEngine:
     """Queue API over the batched decomposition pipeline."""
 
-    def __init__(self, *, mode: str = "chunked", chunk: int = 1 << 12,
-                 reorder: bool = True, max_pending: int = 32,
+    def __init__(self, *, mode: str = "chunked", support_mode: str = "jnp",
+                 chunk: int = 1 << 12, reorder: bool = True,
+                 max_pending: int = 32, max_edges: int = 1 << 22,
                  interpret: bool | None = None):
         if mode not in PEEL_MODES:
             raise ValueError(f"mode must be one of {PEEL_MODES}, got {mode!r}")
+        if support_mode not in support_mod.SUPPORT_MODES:
+            raise ValueError(f"support_mode must be one of "
+                             f"{support_mod.SUPPORT_MODES}, "
+                             f"got {support_mode!r}")
         if chunk < 1:
             raise ValueError("chunk must be positive")
+        if max_edges < 1:
+            raise ValueError("max_edges must be positive")
         self.mode = mode
+        self.support_mode = support_mode
+        self.max_edges = max_edges
         self.chunk = _next_pow2(chunk)
         self.reorder = reorder
         self.max_pending = max_pending
-        self.interpret = (jax.default_backend() != "tpu"
+        self.interpret = (wedge_common.interpret_default()
                           if interpret is None else interpret)
         self._pending: list[_Pending] = []
         self._results: dict[int, np.ndarray] = {}
@@ -186,6 +215,11 @@ class TrussEngine:
         hi = np.maximum(edges[:, 0], edges[:, 1])
         uniq = np.unique(lo * n + hi)
         E = np.stack([uniq // n, uniq % n], axis=1)
+        if E.shape[0] > self.max_edges:
+            raise ValueError(
+                f"graph too large for this engine: m={E.shape[0]} canonical "
+                f"edges exceeds max_edges={self.max_edges}; decompose it "
+                f"directly with core.pkt.truss_pkt, or raise max_edges")
 
         if self.reorder:
             perm = degeneracy_order(E, n)
@@ -242,7 +276,9 @@ class TrussEngine:
         chunk = min(self.chunk, peel_pad)
         n_chunks = peel_pad // chunk
         iters = int(np.ceil(np.log2(2 * m_pad + 1))) + 1
-        return SizeClass(m_pad, sup_pad, peel_pad, chunk, n_chunks, iters)
+        sup_chunk = min(self.chunk, sup_pad)
+        return SizeClass(m_pad, sup_pad, peel_pad, chunk, n_chunks, iters,
+                         sup_chunk, sup_pad // sup_chunk)
 
     def _make_operand(self, g: CSRGraph, key: SizeClass, stab,
                       ptab) -> BatchOperand:
@@ -281,7 +317,9 @@ class TrussEngine:
                                *[p.operand for p in group])
             S, S0, levels, subs = _batched_truss(
                 ops, m=key.m_pad, chunk=key.chunk, n_chunks=key.n_chunks,
-                iters=key.iters, mode=self.mode, interpret=self.interpret)
+                iters=key.iters, mode=self.mode,
+                support_mode=self.support_mode, sup_chunk=key.sup_chunk,
+                sup_n_chunks=key.sup_n_chunks, interpret=self.interpret)
             S = np.asarray(S)
             for i, p in enumerate(group):
                 truss = (S[i][: p.g.m] + 2).astype(np.int64)
@@ -311,10 +349,11 @@ class TrussEngine:
         return self.stats["graphs_done"] / secs if secs > 0 else 0.0
 
 
-def truss_batched(graphs, *, mode: str = "chunked", chunk: int = 1 << 12,
+def truss_batched(graphs, *, mode: str = "chunked",
+                  support_mode: str = "jnp", chunk: int = 1 << 12,
                   reorder: bool = True) -> list[np.ndarray]:
     """One-shot convenience: decompose a list of edge arrays, order-aligned."""
     graphs = list(graphs)
-    eng = TrussEngine(mode=mode, chunk=chunk, reorder=reorder,
-                      max_pending=len(graphs) or 1)
+    eng = TrussEngine(mode=mode, support_mode=support_mode, chunk=chunk,
+                      reorder=reorder, max_pending=len(graphs) or 1)
     return eng.map(graphs)

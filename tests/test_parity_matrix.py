@@ -1,0 +1,174 @@
+"""Property-based cross-mode parity: the full executor matrix must agree.
+
+Every combination in {dense, chunked, pallas} peel × {jnp, pallas} support
+must produce bitwise-identical trussness, initial support, and level/
+sub-level counts — and match the brute-force oracle (``core.ref.truss_numpy``,
+the definitional O(m·Δ²)-per-round peel) on graphs small enough to afford it.
+
+Graph population: random Erdős–Rényi and power-law (Barabási–Albert) draws
+via ``graphs/gen.py``, plus the adversarial shapes that historically break
+table/chunk bookkeeping — stars (empty oriented support table), cliques
+(maximal trussness), disconnected unions, the empty graph, and raw inputs
+with self-loops / duplicate / endpoint-swapped rows (canonicalized through
+``edges_from_arrays`` exactly as production entry points do).
+
+Runs under real ``hypothesis`` when installed and under the deterministic
+fallback shim (``repro/testing/hypothesis_fallback.py``) otherwise; CI
+exercises both configurations.
+"""
+
+import numpy as np
+import pytest
+
+from hypothesis import HealthCheck, given, settings
+from hypothesis import strategies as st
+
+from repro.core.pkt import PEEL_MODES, pkt
+from repro.core.ref import truss_numpy
+from repro.core.support import SUPPORT_MODES, compute_support
+from repro.graphs.csr import build_csr, edges_from_arrays
+from repro.graphs.gen import (barabasi_albert_edges, erdos_renyi_edges,
+                              ring_of_cliques_edges, rmat_edges)
+
+MATRIX = [(pm, sm) for pm in PEEL_MODES for sm in SUPPORT_MODES]
+
+#: brute-force oracle bound — small enough that every example stays cheap
+ORACLE_MAX_M = 90
+
+
+def _star(k):
+    return np.stack([np.zeros(k, np.int64), np.arange(1, k + 1)], axis=1)
+
+
+def _clique(k, base=0):
+    src, dst = np.nonzero(np.triu(np.ones((k, k)), 1))
+    return np.stack([src + base, dst + base], axis=1).astype(np.int64)
+
+
+def _disconnected(seed):
+    """Clique ⊔ star ⊔ path — three components with different trussness."""
+    rng = np.random.default_rng(seed)
+    k = int(rng.integers(3, 6))
+    parts = [_clique(k), _star(4) + 20,
+             np.array([[30, 31], [31, 32], [32, 33]], np.int64)]
+    return np.concatenate(parts, axis=0)
+
+
+@st.composite
+def raw_graph(draw):
+    """A raw (k, 2) edge array — possibly loopy, duplicated, or swapped."""
+    kind = draw(st.sampled_from(
+        ["er", "powerlaw", "star", "clique", "disconnected", "noisy"]))
+    seed = draw(st.integers(min_value=0, max_value=9999))
+    if kind == "er":
+        n = draw(st.integers(min_value=4, max_value=26))
+        deg = draw(st.integers(min_value=2, max_value=8))
+        return erdos_renyi_edges(n, avg_degree=float(deg), seed=seed)
+    if kind == "powerlaw":
+        n = draw(st.integers(min_value=6, max_value=22))
+        return barabasi_albert_edges(
+            n, m_attach=draw(st.integers(min_value=2, max_value=4)),
+            seed=seed)
+    if kind == "star":
+        return _star(draw(st.integers(min_value=2, max_value=14)))
+    if kind == "clique":
+        return _clique(draw(st.integers(min_value=3, max_value=7)))
+    if kind == "disconnected":
+        return _disconnected(seed)
+    # noisy: self-loops, duplicate and endpoint-swapped rows included
+    n = draw(st.integers(min_value=3, max_value=14))
+    k = draw(st.integers(min_value=1, max_value=40))
+    rng = np.random.default_rng(seed)
+    return np.stack([rng.integers(0, n, k), rng.integers(0, n, k)],
+                    axis=1).astype(np.int64)
+
+
+def _assert_matrix_agrees(raw_edges, *, chunk=1 << 14):
+    """Canonicalize, run all six executors, compare bitwise (+ oracle)."""
+    E = edges_from_arrays(raw_edges[:, 0], raw_edges[:, 1])
+    g = build_csr(E)
+    base = pkt(g, mode="chunked", support_mode="jnp", chunk=chunk)
+    for pm, sm in MATRIX:
+        res = pkt(g, mode=pm, support_mode=sm, chunk=chunk)
+        assert np.array_equal(res.trussness, base.trussness), (pm, sm)
+        assert np.array_equal(res.support, base.support), (pm, sm)
+        assert (res.levels, res.sublevels) == (base.levels, base.sublevels), \
+            (pm, sm)
+    if g.m <= ORACLE_MAX_M:
+        assert np.array_equal(base.trussness, truss_numpy(g.El))
+    return base
+
+
+# ------------------------------------------------------------- property ----
+
+@settings(max_examples=6, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+@given(raw_graph())
+def test_parity_matrix_random(edges):
+    _assert_matrix_agrees(edges)
+
+
+@settings(max_examples=10, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+@given(raw_graph())
+def test_support_mode_parity_random(edges):
+    """The cheap half of the matrix at higher example volume: support only."""
+    E = edges_from_arrays(edges[:, 0], edges[:, 1])
+    g = build_csr(E)
+    a = compute_support(g, mode="jnp")
+    b = compute_support(g, mode="pallas")
+    assert np.array_equal(a, b)
+    assert a.dtype == b.dtype
+
+
+# -------------------------------------------------------- named fixtures ----
+
+NAMED = {
+    "empty": np.zeros((0, 2), np.int64),
+    "single_edge": np.array([[0, 1]], np.int64),
+    "triangle_free_path": np.array([[0, 1], [1, 2], [2, 3]], np.int64),
+    "star": _star(9),
+    "clique": _clique(7),
+    "disconnected": _disconnected(0),
+    "ring_of_cliques": ring_of_cliques_edges(4, 5),
+    "rmat": rmat_edges(5, edge_factor=4, seed=11),
+    "multi_edge_with_loops": np.array(
+        [[0, 1], [1, 0], [0, 1], [2, 2], [1, 2], [0, 2], [3, 3], [2, 3]],
+        np.int64),
+}
+
+
+@pytest.mark.parametrize("name", sorted(NAMED))
+def test_parity_matrix_named(name):
+    raw = NAMED[name]
+    if name == "empty":
+        g = build_csr(raw)
+        for pm, sm in MATRIX:
+            res = pkt(g, mode=pm, support_mode=sm)
+            assert res.trussness.shape == (0,), (pm, sm)
+        return
+    _assert_matrix_agrees(raw)
+
+
+def test_parity_matrix_small_chunks():
+    """Chunk boundaries must not affect any executor pair."""
+    raw = ring_of_cliques_edges(3, 5)
+    for chunk in (4, 32):
+        _assert_matrix_agrees(raw, chunk=chunk)
+
+
+def test_invalid_support_mode_rejected():
+    g = build_csr(np.array([[0, 1]], np.int64))
+    with pytest.raises(ValueError, match="support_mode"):
+        pkt(g, support_mode="warp")
+    with pytest.raises(ValueError, match="mode"):
+        compute_support(g, mode="warp")
+
+
+def test_peel_mode_alias_wins_over_mode():
+    g = build_csr(_clique(5))
+    a = pkt(g, mode="dense", peel_mode="chunked")
+    b = pkt(g, mode="chunked")
+    assert np.array_equal(a.trussness, b.trussness)
+    with pytest.raises(ValueError, match="mode"):
+        pkt(g, mode="chunked", peel_mode="warp")

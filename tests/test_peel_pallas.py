@@ -119,6 +119,52 @@ def test_prepare_peel_always_one_chunk():
         assert tabs.e1.shape[0] == n_chunks * c
 
 
+def test_prepare_peel_empty_graph_explicit():
+    """m == 0: the explicit early-exit yields one all-padding chunk."""
+    from repro.core.pkt import chunk_ranges
+
+    g = build_csr(np.zeros((0, 2), np.int64))
+    ptab = support_mod.build_peel_table(g)
+    assert ptab.size == 0
+    tabs, chunk, n_chunks = prepare_peel(ptab, g.m, 1 << 14)
+    assert (chunk, n_chunks) == (1, 1)
+    assert np.asarray(tabs.e1).tolist() == [g.m]          # anchor sentinel
+    assert np.asarray(tabs.hi).tolist() == [0]            # empty probe range
+    assert tabs.c_start.shape == (0,) and tabs.has_entries.shape == (0,)
+    # chunk_ranges itself: empty offset array, with and without m_out
+    has, cs, ce = chunk_ranges(np.zeros(1, np.int64), 4)
+    assert has.shape == cs.shape == ce.shape == (0,)
+    has, cs, ce = chunk_ranges(np.zeros(1, np.int64), 4, m_out=5)
+    assert not has.any() and (cs == 0).all() and (ce == 0).all()
+
+
+def test_prepare_peel_entryless_support_table():
+    """A triangle-free orientation (star) has an *empty* support table; the
+    early-exit must produce inert tables, and both support executors must
+    return all-zero support."""
+    g = build_csr(_star_edges())
+    stab = support_mod.build_support_table(g)
+    assert stab.size == 0
+    tabs, chunk, n_chunks = prepare_peel(stab, g.m, 8)
+    assert (chunk, n_chunks) == (1, 1)
+    assert not np.asarray(tabs.has_entries).any()
+    for mode in ("jnp", "pallas"):
+        S = support_mod.compute_support(g, stab, mode=mode)
+        assert S.shape == (g.m,) and (S == 0).all(), mode
+
+
+@pytest.mark.parametrize("mode", PEEL_MODES)
+def test_triangle_free_graph_all_modes(mode):
+    """Triangle-free graphs peel in one level; no executor may choke on the
+    all-zero support vector."""
+    for edges in (_star_edges(5),
+                  np.array([[0, 1], [1, 2], [2, 3], [3, 4]], np.int64)):
+        g = build_csr(edges)
+        res = pkt(g, mode=mode)
+        assert (res.trussness == 2).all()
+        assert (res.support == 0).all()
+
+
 # ------------------------------------------------------- kernel lowering ----
 
 def test_peel_kernel_compiles_interpret():

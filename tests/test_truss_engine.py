@@ -85,6 +85,21 @@ def test_engine_mode_parity(mode):
         assert np.array_equal(b, g_)
 
 
+def test_engine_support_mode_parity():
+    """The batched support kernel path agrees with the batched jnp path."""
+    fleet = [_er_edges(14, 0.35, 21), ring_of_cliques_edges(3, 4),
+             np.array([[0, 1], [1, 2]], np.int64)]
+    base = truss_batched(fleet, support_mode="jnp")
+    got = truss_batched(fleet, support_mode="pallas")
+    for b, g_ in zip(base, got):
+        assert np.array_equal(b, g_)
+
+
+def test_engine_invalid_support_mode_rejected():
+    with pytest.raises(ValueError, match="support_mode"):
+        TrussEngine(support_mode="warp")
+
+
 def test_row_alignment_swapped_and_duplicate_rows():
     """Input rows may be endpoint-swapped or duplicated; results align by row."""
     edges = np.array([[1, 0], [0, 1], [1, 2], [2, 1], [0, 2]], np.int64)
@@ -119,3 +134,48 @@ def test_auto_flush_on_max_pending():
 
 def test_next_pow2():
     assert [_next_pow2(x) for x in (1, 2, 3, 5, 8, 9)] == [1, 2, 4, 8, 8, 16]
+
+
+# ------------------------------------------------------------ failure paths --
+
+def test_oversized_graph_rejected():
+    """Submissions beyond max_edges fail fast with an actionable error, and
+    the engine stays serviceable afterwards."""
+    eng = TrussEngine(max_edges=8)
+    with pytest.raises(ValueError, match="too large.*max_edges=8"):
+        eng.submit(_er_edges(20, 0.5, 0))
+    assert eng.stats["graphs_done"] == 0 and not eng._pending
+    t = eng.submit(np.array([[0, 1], [0, 2], [1, 2]], np.int64))
+    assert (eng.result(t) == 3).all()
+    # the limit counts *canonical* edges: duplicate/swapped rows collapse
+    dup = np.array([[0, 1], [1, 0]] * 6, np.int64)
+    t2 = TrussEngine(max_edges=1).submit(dup)
+    assert t2 >= 0
+    with pytest.raises(ValueError, match="max_edges"):
+        TrussEngine(max_edges=0)
+
+
+def test_out_of_order_result_pickup():
+    """A later ticket may be redeemed first; earlier results stay intact and
+    are served from the materialized store without a second flush."""
+    eng = TrussEngine()
+    fleet = [_er_edges(12, 0.4, 40), ring_of_cliques_edges(3, 4),
+             _er_edges(30, 0.2, 41)]
+    t0, t1, t2 = [eng.submit(e) for e in fleet]
+    assert np.array_equal(eng.result(t2), _expected(fleet[2]))
+    flushes = eng.stats["flushes"]
+    assert np.array_equal(eng.result(t0), _expected(fleet[0]))
+    assert np.array_equal(eng.result(t1), _expected(fleet[1]))
+    assert eng.stats["flushes"] == flushes  # no extra flush needed
+
+
+def test_duplicate_ticket_redemption():
+    """Results are single-read: a second redemption (or an unknown ticket)
+    raises KeyError rather than silently recomputing."""
+    eng = TrussEngine()
+    t = eng.submit(np.array([[0, 1], [0, 2], [1, 2]], np.int64))
+    assert (eng.result(t) == 3).all()
+    with pytest.raises(KeyError, match="already-collected"):
+        eng.result(t)
+    with pytest.raises(KeyError, match="unknown"):
+        eng.result(10_000)
