@@ -1,0 +1,130 @@
+"""Incremental maintenance vs full recompute across churn batch sizes.
+
+The streaming serving story (DESIGN.md §9): a decomposed graph absorbs
+rolling-window edge churn.  For each churn fraction, a persistent
+``IncrementalTruss`` handle applies ``remove k existing + add k absent``
+batches (edge count preserved, so the full-recompute jit stays warm and the
+comparison is steady-state vs steady-state) and is timed against a warm
+from-scratch ``truss_pkt`` on the same final graph.  Every measured batch
+ends with a parity check against the from-scratch result — a mismatch
+fails the run (exit 1), which is the CI bench-trend gate.
+
+Output: ``BENCH_inc.json`` rows per (graph, churn): update seconds, full
+seconds, speedup, affected-region sizes, local/full repair counts.
+
+  PYTHONPATH=src python -m benchmarks.inc_bench [--smoke] [--out F]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+
+import numpy as np
+
+
+def _bench_graph(name: str, fracs, batches: int, rng) -> dict:
+    from repro.core.pkt import truss_pkt
+    from repro.core.truss_inc import IncrementalTruss
+    from repro.graphs.datasets import named_graph
+    from repro.launch.truss import churn_batch
+
+    E = named_graph(name)
+    n = int(E.max()) + 1
+    t0 = time.perf_counter()
+    inc = IncrementalTruss(E)
+    t_open = time.perf_counter() - t0
+    out = {"graph": name, "n": n, "m": inc.m, "open_seconds": t_open,
+           "rows": [], "parity_ok": True}
+
+    for frac in fracs:
+        # warmup batch: pays the local-peel jit compiles for this shape class
+        add, rm = churn_batch(inc.edges, n, frac, rng)
+        inc.update(add_edges=add, remove_edges=rm)
+
+        times, affected, local, full = [], [], 0, 0
+        for _ in range(batches):
+            add, rm = churn_batch(inc.edges, n, frac, rng)
+            t0 = time.perf_counter()
+            st = inc.update(add_edges=add, remove_edges=rm)
+            times.append(time.perf_counter() - t0)
+            affected.append(st.affected)
+            local += st.mode == "local"
+            full += st.mode == "full"
+
+        # warm full recompute on the same final graph (same m by design)
+        cur = inc.edges
+        truss_pkt(cur)
+        t0 = time.perf_counter()
+        ref = truss_pkt(cur)
+        t_full = time.perf_counter() - t0
+
+        parity = bool(np.array_equal(inc.trussness, ref))
+        out["parity_ok"] = out["parity_ok"] and parity
+        t_upd = float(np.mean(times))
+        out["rows"].append({
+            "churn_frac": frac,
+            "batch_edges": int(max(1, round(frac * inc.m))),
+            "update_seconds": t_upd,
+            "full_seconds": t_full,
+            "speedup": t_full / t_upd if t_upd > 0 else float("inf"),
+            "affected_mean": float(np.mean(affected)),
+            "local": local, "full": full,
+            "parity": parity,
+        })
+    return out
+
+
+def run(graphs=("ba-small", "er-small", "rmat-small"),
+        fracs=(0.001, 0.01), batches: int = 3, seed: int = 0,
+        out_path: str = "BENCH_inc.json") -> int:
+    rng = np.random.default_rng(seed)
+    report = {"bench": "incremental-maintenance", "graphs": [], "ok": True}
+    for name in graphs:
+        g = _bench_graph(name, fracs, batches, rng)
+        report["graphs"].append(g)
+        report["ok"] = report["ok"] and g["parity_ok"]
+    with open(out_path, "w") as f:
+        json.dump(report, f, indent=2, sort_keys=True)
+    print(json.dumps(report, indent=2, sort_keys=True))
+    if not report["ok"]:
+        print("INC BENCH FAILED: incremental/recompute parity regression",
+              file=sys.stderr)
+        return 1
+    return 0
+
+
+def rows(quick: bool = True) -> list[str]:
+    """benchmarks/run.py adapter: CSV rows from a quick in-memory run."""
+    from benchmarks.common import row
+
+    rng = np.random.default_rng(0)
+    out = []
+    for name in ("ba-small",) if quick else ("ba-small", "rmat-small"):
+        g = _bench_graph(name, (0.001, 0.01), 2, rng)
+        for r in g["rows"]:
+            out.append(row(
+                f"inc/{name}/churn-{r['churn_frac']}", r["update_seconds"],
+                f"speedup={r['speedup']:.2f}x;affected={r['affected_mean']:.0f}"
+                f";local={r['local']};full={r['full']}"
+                f";parity={int(r['parity'])}"))
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small graph, quick churn sweep (the CI gate)")
+    ap.add_argument("--out", default="BENCH_inc.json")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    if args.smoke:
+        raise SystemExit(run(graphs=("ba-small",), fracs=(0.001, 0.01),
+                             batches=2, seed=args.seed, out_path=args.out))
+    raise SystemExit(run(seed=args.seed, out_path=args.out))
+
+
+if __name__ == "__main__":
+    main()

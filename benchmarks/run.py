@@ -109,7 +109,8 @@ def main() -> None:
     only = set(args.only.split(",")) if args.only else None
 
     from benchmarks import (table2_support, table3_decomp, table4_parallel,
-                            fig4_phases, fig6_levels, engine_bench, roofline)
+                            fig4_phases, fig6_levels, engine_bench, inc_bench,
+                            roofline)
     benches = {
         "table2": lambda: table2_support.run(suite),
         "table3": lambda: table3_decomp.run(suite),
@@ -122,6 +123,7 @@ def main() -> None:
         "engine": lambda: engine_bench.run(
             n_graphs=12 if args.quick else 24),
         "roofline": lambda: roofline.run(),
+        "inc": lambda: inc_bench.rows(quick=args.quick),
     }
     print("name,us_per_call,derived")
     for name, fn in benches.items():

@@ -1,6 +1,7 @@
 """Core: the paper's contribution — PKT truss decomposition and its relatives."""
 
 from repro.core.pkt import pkt, truss_pkt, PKTResult
+from repro.core.truss_inc import IncrementalTruss, UpdateStats
 from repro.core.support import (
     compute_support,
     compute_support_ros,
@@ -17,6 +18,7 @@ from repro.core.pkt_dist import pkt_dist, make_pkt_dist, make_support_dist
 
 __all__ = [
     "pkt", "truss_pkt", "PKTResult",
+    "IncrementalTruss", "UpdateStats",
     "compute_support", "compute_support_ros", "triangle_count",
     "build_support_table", "build_peel_table",
     "truss_wc", "truss_ros", "truss_numpy",

@@ -161,12 +161,18 @@ def _active_chunk_mask(inCurr, tabs: PeelTables, m: int, n_chunks: int):
 
 def _peel_loop(N, Eid, S_ext0, processed0, tabs: PeelTables, *, m: int,
                chunk: int, n_chunks: int, iters: int, mode: str,
-               interpret: bool = True):
+               interpret: bool = True, pinned=None):
     """Full level/sub-level peel over extended (m+1,) edge state.
 
     ``S_ext0``/``processed0`` define which slots are live: slot m must be the
     processed sentinel, and callers may pre-mark extra padding slots as
     processed (batched engine).  Returns (S_ext[:m], levels, sublevels).
+
+    ``pinned`` (optional (m+1,) bool) marks *schedule* edges: they enter the
+    frontier and process their triangles at exactly their initial support
+    level, but never receive decrements themselves — the incremental layer
+    (core/truss_inc.py) uses this to replay the known death level of
+    boundary edges whose trussness is already final.  Slot m must be False.
     """
 
     def chunk_contrib(c, dec, S_ext, processed, inCurr, l):
@@ -187,6 +193,9 @@ def _peel_loop(N, Eid, S_ext0, processed0, tabs: PeelTables, *, m: int,
         in3 = inCurr[e3]
         dec2 = valid & (s2 > l) & ((~in3) | (e1 < e3))
         dec3 = valid & (s3 > l) & ((~in2) | (e1 < e2))
+        if pinned is not None:
+            dec2 = dec2 & ~pinned[e2]
+            dec3 = dec3 & ~pinned[e3]
         dec = dec.at[jnp.where(dec2, e2, m)].add(dec2.astype(jnp.int32))
         dec = dec.at[jnp.where(dec3, e3, m)].add(dec3.astype(jnp.int32))
         return dec
@@ -209,6 +218,10 @@ def _peel_loop(N, Eid, S_ext0, processed0, tabs: PeelTables, *, m: int,
                 inCurr.astype(jnp.int32),
                 chunk=chunk, n_chunks=n_chunks, iters=iters, m=m,
                 interpret=interpret)
+            if pinned is not None:
+                # redirect suppressed targets to the absorbing sentinel slot
+                tgt2 = jnp.where(pinned[tgt2], m, tgt2)
+                tgt3 = jnp.where(pinned[tgt3], m, tgt3)
             dec = dec0.at[tgt2].add(1).at[tgt3].add(1)
         else:  # chunked: visit only chunks overlapping the frontier
             active = _active_chunk_mask(inCurr, tabs, m, n_chunks)
@@ -333,33 +346,62 @@ def align_to_input(trussness: np.ndarray, g: CSRGraph,
     sorted, so each input edge is located by key search.  Callers that
     already hold per-row keys (``u*n + v`` in g's id space) may pass ``keys``
     instead of ``edges``.
+
+    Every requested edge must actually be present in ``g.El``: a missing key
+    raises a descriptive ValueError (``np.searchsorted`` alone would silently
+    return the *insertion point* — a neighboring edge's trussness — or an
+    out-of-range index when the key sorts past the end of the table).
     """
     key_g = g.El[:, 0].astype(np.int64) * n + g.El[:, 1]
     if keys is None:
         keys = edges[:, 0].astype(np.int64) * n + edges[:, 1]
+    keys = np.asarray(keys, dtype=np.int64)
+    if key_g.shape[0] == 0:
+        if keys.shape[0] == 0:
+            return np.zeros(0, np.int64)
+        raise ValueError(
+            f"cannot align {keys.shape[0]} edge(s) to an empty graph")
     pos = np.searchsorted(key_g, keys)
+    safe = np.minimum(pos, key_g.shape[0] - 1)
+    bad = (pos >= key_g.shape[0]) | (key_g[safe] != keys)
+    if bad.any():
+        k = int(keys[bad][0])
+        raise ValueError(
+            f"{int(bad.sum())} edge(s) not present in the graph's edge list; "
+            f"first missing: ({k // n}, {k % n})")
     return trussness[pos].astype(np.int64)
 
 
 def truss_pkt(edges: np.ndarray, *, reorder: bool = True,
               chunk: int = 1 << 14, mode: str = "chunked",
               support_mode: str = "jnp") -> np.ndarray:
-    """Convenience entry: canonical edges → trussness aligned to input order.
+    """Convenience entry: undirected edges → trussness aligned to input order.
+
+    ``edges`` is any (k, 2) integer array: endpoint order is free and
+    duplicate rows are allowed — rows are canonicalized and deduped exactly
+    like ``TrussEngine.submit`` before decomposition, and the result is
+    mapped back so ``out[i]`` is the trussness of ``edges[i]`` whatever its
+    form.  Self-loops, negative vertex ids, and ids beyond the int32 CSR /
+    int64 key-packing bounds are rejected with a clear error (they used to
+    corrupt the decomposition silently).
 
     With ``reorder`` (the paper's preprocessing) vertices are relabeled by
     increasing coreness before decomposition; results are mapped back.
     """
-    from repro.graphs.csr import build_csr, degeneracy_order, relabel
+    from repro.graphs.csr import (build_csr, canonical_edges_with_rows,
+                                  degeneracy_order, edge_keys, relabel)
 
-    edges = np.asarray(edges, dtype=np.int64)
-    if edges.size == 0:
+    E, lo, hi, n = canonical_edges_with_rows(edges)
+    if E.size == 0:
         return np.zeros(0, np.int64)
-    n = int(edges.max()) + 1
     if reorder:
-        perm = degeneracy_order(edges, n)
-        r_edges = relabel(edges, perm)
+        perm = degeneracy_order(E, n)
+        r_edges = relabel(E, perm)
+        rl, rh = perm[lo], perm[hi]
+        row_keys = edge_keys(np.minimum(rl, rh), np.maximum(rl, rh), n)
     else:
-        r_edges = edges
+        r_edges = E
+        row_keys = edge_keys(lo, hi, n)
     g = build_csr(r_edges, n)
     res = pkt(g, chunk=chunk, mode=mode, support_mode=support_mode)
-    return align_to_input(res.trussness, g, r_edges, n)
+    return align_to_input(res.trussness, g, None, n, keys=row_keys)

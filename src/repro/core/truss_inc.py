@@ -1,0 +1,788 @@
+"""Incremental truss maintenance — local repair instead of full recompute.
+
+The paper's PKT is a from-scratch decomposition; the serving workloads the
+engine targets (per-user ego nets, rolling windows — DESIGN.md §7/§9) mutate
+graphs by small edge batches, where a full recompute per update is the
+dominant cost.  Following the streaming/local-repair line of work (Jakkula &
+Karypis; Sarıyüce et al.; Huang et al.), this module absorbs a batch of edge
+insertions and deletions with repair work bounded by the *affected region*
+(the expensive parts — probing, peeling, incidence walks — stay
+region-local; a few O(m) vectorized mask/bound passes per step remain):
+
+  1. **Persistent triangle state** — besides CSR + trussness + support, a
+     handle retains the graph's triangle list, maintained incrementally:
+     deletions drop the rows containing a deleted edge, each insertion
+     appends the rows it creates (enumerated by the same oriented-wedge
+     probe the full pipeline uses, ``kernels/wedge_common``).  Support
+     repair and affected-region search are then pure index operations — no
+     per-update support pass.
+  2. **Affected region** — trussness changes obey level-filtered triangle
+     locality (Huang et al.): an edge at level k can *drop* only if it is
+     triangle-connected in the old graph to a deleted edge through edges
+     with ``T >= k`` (so deletions batch exactly; k = 2 can never drop), and
+     can *rise* only if triangle-connected in the new graph to an inserted
+     edge through edges whose new trussness reaches k+1.  The rise filter is
+     only tight for a single insertion (trussness moves at most 1 per edge
+     inserted), so deletions are applied as one batch and insertions one at
+     a time against a single new CSR with not-yet-inserted edges masked
+     absent.
+  3. **Local re-peel** — the region is re-peeled against a *pinned
+     boundary*: exterior triangle partners are seeded at their known death
+     level ``trussness − 2`` and shielded from decrements, replaying
+     exactly the removal schedule the full peel would produce.  Small
+     regions (the steady-state case) run a host-numpy mirror of the
+     sub-level loop; larger ones run the *existing* ``core.pkt._peel_loop``
+     on a masked frontier (all three peel executors support the pinned
+     mask).
+  4. **Fallback** — when a region exceeds ``local_frac`` of the edge set,
+     local repair stops paying and the update falls back to the full
+     (support + peel) pipeline, refreshing all retained state.
+
+The serving layer wraps this in a persistent handle
+(``TrussEngine.open / update / close`` in ``serve/truss_engine.py``);
+``launch/truss.py --update-stream`` replays synthetic churn through it, and
+``benchmarks/inc_bench.py`` measures update-vs-recompute speedup.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.graphs.csr import (CSRGraph, build_csr, canonical_edges_with_rows,
+                              check_edge_array, degeneracy_order, edge_keys,
+                              relabel)
+from repro.core import support as support_mod
+from repro.core.pkt import (PEEL_MODES, PeelTables, _SENTINEL_S, _peel_loop,
+                            align_to_input, chunk_ranges, pkt)
+from repro.kernels import wedge_common
+from repro.kernels.wedge_common import next_pow2, pad1
+
+_MIN_M_PAD = 8
+
+
+@dataclasses.dataclass(frozen=True)
+class UpdateStats:
+    """Outcome of one ``IncrementalTruss.update`` call."""
+
+    mode: str            # "noop" | "local" | "full"
+    m_before: int
+    m_after: int
+    inserted: int        # edges actually added (not already present)
+    deleted: int         # edges actually removed (were present)
+    affected: int        # total edges locally re-peeled across the batch
+    boundary: int        # total pinned schedule edges across the batch
+    rounds: int          # level-filtered BFS passes executed
+    changed: int         # current edges whose trussness is new or different
+    seconds: float
+    handle: object = None  # set by TrussEngine.update
+
+
+# --------------------------------------------------------------- triangles --
+
+def wedge_subtable(g: CSRGraph, anchors: np.ndarray) -> support_mod.WedgeTable:
+    """Peel-phase wedge table restricted to ``anchors`` (sorted edge ids).
+
+    Same layout and min-degree orientation policy as
+    ``support.build_peel_table``, but only the anchor edges get entries; the
+    ``off`` array still spans all ``m`` edges (non-anchors carry empty
+    ranges) so ``chunk_ranges`` and the masked peel loop work unchanged.
+    """
+    anchors = np.asarray(anchors, dtype=np.int64)
+    if anchors.size == 0 or g.m == 0:
+        return support_mod.WedgeTable(
+            e1=np.zeros(0, np.int32), cand_slot=np.zeros(0, np.int32),
+            lo=np.zeros(0, np.int32), hi=np.zeros(0, np.int32),
+            off=np.zeros(g.m + 1, np.int64))
+    Es = g.Es.astype(np.int64)
+    deg = Es[1:] - Es[:-1]
+    u = g.El[anchors, 0].astype(np.int64)
+    v = g.El[anchors, 1].astype(np.int64)
+    swap = deg[u] > deg[v]
+    cand = np.where(swap, v, u)          # scan this side's full adjacency
+    prob = np.where(swap, u, v)          # binary-search this side
+    cnt = deg[cand]
+    off = np.zeros(g.m + 1, np.int64)
+    off[anchors + 1] = cnt
+    np.cumsum(off, out=off)
+    e1 = np.repeat(anchors, cnt)
+    intra = np.arange(int(off[-1]), dtype=np.int64) - off[e1]
+    cand_rep = np.repeat(cand, cnt)
+    prob_rep = np.repeat(prob, cnt)
+    return support_mod.WedgeTable(
+        e1=e1.astype(np.int32),
+        cand_slot=(Es[cand_rep] + intra).astype(np.int32),
+        lo=Es[prob_rep].astype(np.int32),
+        hi=Es[prob_rep + 1].astype(np.int32),
+        off=off,
+    )
+
+
+def _probe_iters(g: CSRGraph) -> int:
+    dmax = int(g.degrees.max(initial=1))
+    return max(1, int(np.ceil(np.log2(dmax + 1))) + 1)
+
+
+def triangles_through(g: CSRGraph,
+                      anchors: np.ndarray) -> tuple[np.ndarray, np.ndarray,
+                                                    np.ndarray]:
+    """Every triangle through each anchor edge, as (anchor, e2, e3) id rows.
+
+    A triangle through an anchor is reported exactly once *per anchor it
+    contains*.  Runs on the host (``probe_np``) — update batches probe tiny,
+    differently-shaped tables every call, the wrong regime for a jit trace.
+    """
+    anchors = np.asarray(anchors, dtype=np.int64)
+    if anchors.size == 0 or g.m == 0:
+        z = np.zeros(0, np.int64)
+        return z, z.copy(), z.copy()
+    tab = wedge_subtable(g, anchors)
+    if tab.size == 0:
+        z = np.zeros(0, np.int64)
+        return z, z.copy(), z.copy()
+    hit, safe = wedge_common.probe_np(
+        g.N, tab.cand_slot.astype(np.int64), tab.lo, tab.hi,
+        iters=_probe_iters(g))
+    return (tab.e1[hit].astype(np.int64),
+            g.Eid[tab.cand_slot[hit]].astype(np.int64),
+            g.Eid[safe[hit]].astype(np.int64))
+
+
+def triangle_list(g: CSRGraph) -> np.ndarray:
+    """All triangles of ``g``, each exactly once, as a (T, 3) edge-id array.
+
+    Enumerated with the full-adjacency wedge probe anchored at every edge
+    (each triangle surfaces once per member edge) and kept at its lowest
+    member id.  Built once per full decomposition; updates maintain the
+    list incrementally.
+    """
+    if g.m == 0:
+        return np.zeros((0, 3), np.int64)
+    a, e2, e3 = triangles_through(g, np.arange(g.m, dtype=np.int64))
+    keep = (a < e2) & (a < e3)
+    return np.sort(np.stack([a[keep], e2[keep], e3[keep]], axis=1), axis=1)
+
+
+class _Incidence:
+    """Edge → triangle-row CSR over a fixed (T, 3) triangle list."""
+
+    def __init__(self, tri: np.ndarray, m: int):
+        self.tri = tri
+        flat = tri.ravel()
+        order = np.argsort(flat, kind="stable")
+        counts = np.bincount(flat, minlength=m) if flat.size else \
+            np.zeros(m, np.int64)
+        self.off = np.zeros(m + 1, np.int64)
+        np.cumsum(counts, out=self.off[1:])
+        self.idx = order // 3
+
+    def rows_of(self, edges: np.ndarray) -> np.ndarray:
+        """Triangle-row indices incident to any of ``edges`` (with repeats)."""
+        if edges.size == 0 or self.idx.size == 0:
+            return np.zeros(0, np.int64)
+        cnt = self.off[edges + 1] - self.off[edges]
+        pos = np.repeat(self.off[edges], cnt) + \
+            (np.arange(int(cnt.sum()), dtype=np.int64)
+             - np.repeat(np.cumsum(cnt) - cnt, cnt))
+        return self.idx[pos]
+
+
+def _tri_bfs(inc: _Incidence, side: np.ndarray, seeds: np.ndarray,
+             allowed: np.ndarray) -> np.ndarray:
+    """Edges triangle-reachable from ``seeds`` through ``allowed`` edges.
+
+    Traversal steps through triangles (static ``inc`` rows plus the ``side``
+    rows of the in-flight insertion phase) *all three* of whose edges are
+    allowed — the certificate subgraphs of the locality lemmas are closed
+    under their own triangles, so the stricter rule loses nothing.  Returns
+    the sorted reached edge ids (seeds outside ``allowed`` are dropped).
+    """
+    m = allowed.shape[0]
+    visited = np.zeros(m, bool)
+    frontier = np.unique(seeds[allowed[seeds]]) if seeds.size else \
+        np.zeros(0, np.int64)
+    visited[frontier] = True
+    in_side = side.size > 0
+    while frontier.size:
+        rows = inc.tri[np.unique(inc.rows_of(frontier))] \
+            if inc.tri.size else np.zeros((0, 3), np.int64)
+        if in_side:
+            hit = np.isin(side, frontier).any(axis=1)
+            rows = np.concatenate([rows, side[hit]])
+        if rows.size == 0:
+            break
+        ok = allowed[rows].all(axis=1)
+        cand = rows[ok].ravel()
+        cand = np.unique(cand[~visited[cand]]) if cand.size else cand
+        visited[cand] = True
+        frontier = cand
+    return np.nonzero(visited)[0].astype(np.int64)
+
+
+def _h_values(inc: _Incidence, tau: np.ndarray,
+              work: np.ndarray) -> np.ndarray:
+    """Truss h-operator for each edge in ``work``: 2 + (largest s such that
+    the edge is in >= s triangles whose other two edges both have current
+    value >= s + 2).  Vectorized over the incidence structure."""
+    if work.size == 0:
+        return np.zeros(0, np.int64)
+    cnt = inc.off[work + 1] - inc.off[work]
+    owner = np.repeat(np.arange(work.shape[0], dtype=np.int64), cnt)
+    rows = inc.tri[inc.rows_of(work)]
+    h = np.zeros(work.shape[0], np.int64)
+    if rows.size:
+        e = work[owner]
+        # partner-min in rho (= tau - 2) space, per membership
+        t0, t1, t2 = tau[rows[:, 0]], tau[rows[:, 1]], tau[rows[:, 2]]
+        val = np.where(
+            rows[:, 0] == e, np.minimum(t1, t2),
+            np.where(rows[:, 1] == e, np.minimum(t0, t2),
+                     np.minimum(t0, t1))) - 2
+        order = np.lexsort((-val, owner))
+        owner_s, val_s = owner[order], val[order]
+        starts = np.nonzero(np.diff(owner_s, prepend=-1))[0]
+        rank = np.arange(owner_s.shape[0], dtype=np.int64) \
+            - np.repeat(starts, np.diff(np.append(starts, owner_s.shape[0])))
+        score = np.minimum(val_s, rank + 1)
+        np.maximum.at(h, owner_s, np.maximum(score, 0))
+    return h + 2
+
+
+def _h_descent(inc: _Incidence, tau: np.ndarray, seeds: np.ndarray,
+               totals, limit: float) -> bool:
+    """Chaotic descent of the truss h-operator from a valid upper bound.
+
+    Exact when ``tau`` starts pointwise >= the true decomposition (any
+    h-operator post-fixpoint is <= truth via its own >=k-subgraph
+    certificate, and monotone descent never goes below truth), which holds
+    for pure deletions: the pre-deletion trussness bounds the post-deletion
+    one.  Work is proportional to the edges that actually drop plus their
+    triangle neighborhoods — no a-priori region needed.  Mutates ``tau``;
+    returns False (request full-recompute fallback, ``tau`` then discarded)
+    once more than ``limit`` edges have dropped — the local_frac policy.
+    """
+    changed = np.zeros(tau.shape[0], bool)
+    work = np.unique(seeds)
+    while work.size:
+        totals["passes"] += 1
+        h = _h_values(inc, tau, work)
+        dropped = work[h < tau[work]]
+        tau[dropped] = h[h < tau[work]]
+        changed[dropped] = True
+        if dropped.size == 0:
+            break
+        if int(changed.sum()) > limit:
+            totals["affected"] += int(changed.sum())
+            return False
+        rows = inc.tri[np.unique(inc.rows_of(dropped))]
+        work = np.unique(rows.ravel()) if rows.size else \
+            np.zeros(0, np.int64)
+    totals["affected"] += int(changed.sum())
+    return True
+
+
+# -------------------------------------------------------------- local peel --
+
+def _host_peel(n_loc: int, tri_loc: np.ndarray, S0: np.ndarray,
+               live0: np.ndarray, pinned: np.ndarray) -> np.ndarray:
+    """Host-numpy mirror of the ``_peel_loop`` sub-level fixed point.
+
+    Operates on a compact local edge space (``n_loc`` slots): ``tri_loc``
+    holds the region's triangles as local-id rows, ``S0`` the start support
+    (pinned edges: their death level), ``live0`` the live slots.  Same
+    decrement formulas and tie-break as ``core.pkt._peel_loop``; the final
+    values agree because the peel fixed point is schedule-independent.
+    """
+    S = S0.astype(np.int64).copy()
+    processed = ~live0.copy()
+    if tri_loc.size:
+        e1 = tri_loc.ravel()
+        oth = np.stack([tri_loc[:, [1, 2]], tri_loc[:, [0, 2]],
+                        tri_loc[:, [0, 1]]], axis=1).reshape(-1, 2)
+        e2, e3 = oth[:, 0], oth[:, 1]
+    else:
+        e1 = e2 = e3 = np.zeros(0, np.int64)
+    while not processed.all():
+        l = S[~processed].min()
+        inCurr = ~processed & (S == l)
+        while inCurr.any():
+            valid = inCurr[e1] & ~processed[e2] & ~processed[e3]
+            dec2 = valid & (S[e2] > l) & (~inCurr[e3] | (e1 < e3)) \
+                & ~pinned[e2]
+            dec3 = valid & (S[e3] > l) & (~inCurr[e2] | (e1 < e2)) \
+                & ~pinned[e3]
+            dec = np.bincount(e2[dec2], minlength=n_loc) \
+                + np.bincount(e3[dec3], minlength=n_loc)
+            S = np.where(~processed & ~inCurr & (dec > 0),
+                         np.maximum(S - dec, l), S)
+            processed = processed | inCurr
+            inCurr = ~processed & (S == l)
+    return S
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("m", "chunk", "n_chunks", "iters", "mode", "interpret"),
+)
+def _local_peel_jit(N, Eid, S_ext0, processed0, pinned, tabs: PeelTables, *,
+                    m: int, chunk: int, n_chunks: int, iters: int, mode: str,
+                    interpret: bool):
+    return _peel_loop(N, Eid, S_ext0, processed0, tabs, m=m, chunk=chunk,
+                      n_chunks=n_chunks, iters=iters, mode=mode,
+                      interpret=interpret, pinned=pinned)
+
+
+# --------------------------------------------------------------- the state --
+
+class IncrementalTruss:
+    """A decomposed graph that absorbs edge insertions/deletions in place.
+
+    State held across updates: the CSR graph, per-edge trussness *and*
+    support (both aligned to ``g.El`` row order, which is canonical-key
+    order), the triangle list, and the vertex-id space ``n`` (grows
+    monotonically as updates introduce new vertex ids).
+
+    ``update(add_edges=…, remove_edges=…)`` applies one batch:
+    ``E_new = (E_old − remove) ∪ add``.  Inserting an edge that already
+    exists, or removing one that doesn't, is a no-op for that row (the
+    batch semantics are set-wise; an edge in both batches ends up present).
+    Returns :class:`UpdateStats`.
+    """
+
+    def __init__(self, edges, *, n: int | None = None, mode: str = "chunked",
+                 support_mode: str = "jnp", chunk: int = 1 << 12,
+                 local_frac: float = 0.25, host_peel_max: int = 4096,
+                 interpret: bool | None = None):
+        if mode not in PEEL_MODES:
+            raise ValueError(f"mode must be one of {PEEL_MODES}, got {mode!r}")
+        if support_mode not in support_mod.SUPPORT_MODES:
+            raise ValueError(
+                f"support_mode must be one of {support_mod.SUPPORT_MODES}, "
+                f"got {support_mode!r}")
+        if chunk < 1:
+            raise ValueError("chunk must be positive")
+        if not 0.0 <= local_frac <= 1.0:
+            raise ValueError("local_frac must be in [0, 1]")
+        self.mode = mode
+        self.support_mode = support_mode
+        self.chunk = next_pow2(chunk)
+        self.local_frac = float(local_frac)
+        self.host_peel_max = int(host_peel_max)
+        self.interpret = (wedge_common.interpret_default()
+                          if interpret is None else interpret)
+        self.stats = {"updates": 0, "local": 0, "full": 0, "noop": 0,
+                      "update_seconds": 0.0, "last": None}
+        E, _, _, n_seen = canonical_edges_with_rows(edges)
+        self.n = max(int(n or 0), n_seen)
+        self._full_rebuild(E)
+
+    # ------------------------------------------------------------ queries --
+    @property
+    def m(self) -> int:
+        return self.g.m
+
+    @property
+    def edges(self) -> np.ndarray:
+        """Current canonical (m, 2) int64 edge list (key-sorted)."""
+        return self.g.El.astype(np.int64)
+
+    @property
+    def trussness(self) -> np.ndarray:
+        """Per-edge trussness aligned to ``edges`` rows (int64)."""
+        return self.T.copy()
+
+    @property
+    def support(self) -> np.ndarray:
+        """Per-edge triangle count aligned to ``edges`` rows (int32)."""
+        return self.S.copy()
+
+    @property
+    def triangles(self) -> np.ndarray:
+        """Current (T, 3) triangle list (edge-id rows, each once)."""
+        return self.tri.copy()
+
+    def query(self, edges) -> np.ndarray:
+        """Trussness for specific edges, aligned to the given rows.
+
+        Rows may be endpoint-swapped or duplicated; an edge not currently in
+        the graph raises the descriptive ``align_to_input`` ValueError.
+        """
+        rows = check_edge_array(edges)
+        if rows.size == 0:
+            return np.zeros(0, np.int64)
+        lo = np.minimum(rows[:, 0], rows[:, 1])
+        hi = np.maximum(rows[:, 0], rows[:, 1])
+        if int(rows.max()) >= self.n:
+            i = int(np.argmax(hi >= self.n))
+            raise ValueError(
+                f"edge ({int(lo[i])}, {int(hi[i])}) not present in the "
+                f"graph's edge list (vertex id beyond the graph)")
+        return align_to_input(self.T, self.g, None, self.n,
+                              keys=edge_keys(lo, hi, self.n))
+
+    # ------------------------------------------------------------- update --
+    def update(self, add_edges=None, remove_edges=None) -> UpdateStats:
+        t0 = time.perf_counter()
+        add = check_edge_array(add_edges if add_edges is not None
+                               else np.zeros((0, 2), np.int64))
+        rem = check_edge_array(remove_edges if remove_edges is not None
+                               else np.zeros((0, 2), np.int64))
+        hi_seen = max(int(add.max(initial=-1)), int(rem.max(initial=-1)))
+        if hi_seen >= self.n:
+            self.n = hi_seen + 1          # vertex space grows monotonically
+        n = self.n
+        m_before = self.g.m
+
+        old_keys = edge_keys(self.g.El[:, 0].astype(np.int64),
+                             self.g.El[:, 1].astype(np.int64), n)
+        add_keys = self._batch_keys(add, n)
+        rem_keys = self._batch_keys(rem, n)
+        new_keys = np.union1d(
+            np.setdiff1d(old_keys, rem_keys, assume_unique=True), add_keys)
+        I_keys = np.setdiff1d(new_keys, old_keys, assume_unique=True)
+        D_keys = np.setdiff1d(old_keys, new_keys, assume_unique=True)
+
+        totals = {"affected": 0, "boundary": 0, "passes": 0}
+        T_old_ref = self.T      # for the changed count (old-id space)
+
+        def done(mode):
+            m_after = self.g.m
+            if mode == "noop":
+                changed = 0
+            else:
+                posn = np.searchsorted(
+                    edge_keys(self.g.El[:, 0].astype(np.int64),
+                              self.g.El[:, 1].astype(np.int64), n), old_keys)
+                safe = np.minimum(posn, max(m_after - 1, 0))
+                ok = np.zeros(m_before, bool)
+                if m_after:
+                    kn = edge_keys(self.g.El[:, 0].astype(np.int64),
+                                   self.g.El[:, 1].astype(np.int64), n)
+                    ok = (posn < m_after) & (kn[safe] == old_keys)
+                changed = int((self.T[posn[ok]] != T_old_ref[ok]).sum()) \
+                    + int(I_keys.size)
+            st = UpdateStats(
+                mode=mode, m_before=m_before, m_after=m_after,
+                inserted=int(I_keys.size), deleted=int(D_keys.size),
+                affected=totals["affected"], boundary=totals["boundary"],
+                rounds=totals["passes"], changed=changed,
+                seconds=time.perf_counter() - t0)
+            self.stats["updates"] += 1
+            self.stats[mode] += 1
+            self.stats["update_seconds"] += st.seconds
+            self.stats["last"] = st
+            return st
+
+        if I_keys.size == 0 and D_keys.size == 0:
+            return done("noop")
+
+        E_new = np.stack([new_keys // n, new_keys % n], axis=1)
+        limit = self.local_frac * max(1, new_keys.shape[0])
+
+        # ---------------- phase D: all deletions as one exact batch -------
+        if D_keys.size:
+            ok = self._apply_deletions(old_keys, D_keys, n, limit, totals)
+            if not ok:
+                self._full_rebuild(E_new)
+                return done("full")
+
+        # ---------------- phase I: insertions one at a time ---------------
+        if I_keys.size:
+            ok = self._apply_insertions(new_keys, I_keys, n, limit, totals)
+            if not ok:
+                self._full_rebuild(E_new)
+                return done("full")
+
+        return done("local")
+
+    # ------------------------------------------------------- deletion phase --
+    def _apply_deletions(self, old_keys, D_keys, n, limit, totals) -> bool:
+        """G → G − D in place.  Returns False to request full fallback."""
+        g_old, T_old, S_old, tri_old = self.g, self.T, self.S, self.tri
+        m_old = g_old.m
+        del_old = np.searchsorted(old_keys, D_keys)
+        is_del = np.zeros(m_old, bool)
+        is_del[del_old] = True
+
+        mid_keys = np.setdiff1d(old_keys, D_keys, assume_unique=True)
+        E_mid = np.stack([mid_keys // n, mid_keys % n], axis=1)
+        g_mid = build_csr(E_mid, n)
+        m_mid = g_mid.m
+        mid_of_old = np.full(m_old, -1, np.int64)
+        mid_of_old[~is_del] = np.searchsorted(mid_keys, old_keys[~is_del])
+
+        # triangle list and support delta (each lost row exactly once)
+        lost_mask = is_del[tri_old].any(axis=1) if tri_old.size else \
+            np.zeros(0, bool)
+        lost = tri_old[lost_mask]
+        tri_mid = mid_of_old[tri_old[~lost_mask]] if tri_old.size else \
+            np.zeros((0, 3), np.int64)
+        S_mid = S_old[~is_del].astype(np.int64)
+        seeds = np.zeros(0, np.int64)
+        if lost.size:
+            members = lost.ravel()
+            keep = ~is_del[members]
+            seeds = mid_of_old[members[keep]]
+            np.subtract.at(S_mid, seeds, 1)
+        S_mid = S_mid.astype(np.int32)
+        T_mid = T_old[~is_del].copy()
+
+        # Deletions only lower trussness, so the old values are a valid
+        # upper bound on the new decomposition and the local h-index
+        # descent (Sarıyüce et al.) repairs exactly, discovering the
+        # affected set lazily — the a-priori connectivity closure is far
+        # too coarse on dense-core graphs, where every >=k level class is
+        # one triangle-connected blob.
+        if seeds.size:
+            if np.unique(seeds).size > limit:
+                return False        # repair would touch too much: recompute
+            inc_mid = _Incidence(tri_mid, m_mid)
+            if not _h_descent(inc_mid, T_mid, seeds, totals, limit):
+                return False        # descent cascaded past local_frac
+        self._commit(g_mid, T_mid, S_mid, tri_mid)
+        return True
+
+    # ------------------------------------------------------ insertion phase --
+    def _apply_insertions(self, new_keys, I_keys, n, limit, totals) -> bool:
+        """G → G + I, one edge at a time (the +1-per-insertion locality
+        bound is only valid per single insertion).  Not-yet-inserted edges
+        are masked absent against the one prebuilt new CSR.  Returns False
+        to request full fallback."""
+        g_mid, T_mid, S_mid, tri_mid = self.g, self.T, self.S, self.tri
+        mid_keys = edge_keys(g_mid.El[:, 0].astype(np.int64),
+                             g_mid.El[:, 1].astype(np.int64), n)
+        E_new = np.stack([new_keys // n, new_keys % n], axis=1)
+        g_new = build_csr(E_new, n)
+        m_new = g_new.m
+        new_of_mid = np.searchsorted(new_keys, mid_keys)
+        ins_new = np.searchsorted(new_keys, I_keys)
+
+        T_cur = np.full(m_new, -1, np.int64)
+        T_cur[new_of_mid] = T_mid
+        S_cur = np.zeros(m_new, np.int64)
+        S_cur[new_of_mid] = S_mid
+        present = np.zeros(m_new, bool)
+        present[new_of_mid] = True
+
+        tri_static = new_of_mid[tri_mid] if tri_mid.size else \
+            np.zeros((0, 3), np.int64)
+        inc_static = _Incidence(tri_static, m_new)
+        side: list[np.ndarray] = []
+        side_rows = np.zeros((0, 3), np.int64)
+
+        for e_i in ins_new:
+            present[e_i] = True
+            # triangles gained by this one insertion (partners must already
+            # be present — triangles with a not-yet-inserted edge are born
+            # later, at that edge's own step)
+            a, p2, p3 = triangles_through(g_new, np.array([e_i]))
+            keep = present[p2] & present[p3]
+            p2, p3 = p2[keep], p3[keep]
+            S_cur[e_i] += p2.shape[0]
+            np.add.at(S_cur, p2, 1)
+            np.add.at(S_cur, p3, 1)
+            if p2.size:
+                rows = np.sort(np.stack(
+                    [np.full(p2.shape[0], e_i, np.int64), p2, p3], axis=1),
+                    axis=1)
+                side.append(rows)
+                side_rows = np.concatenate([side_rows, rows])
+
+            # affected region: one insertion moves any trussness by at most
+            # one, so UB = min(S+2, T+1); an edge at level k can rise only
+            # if connected to e_i through {UB >= k+1} — every such path
+            # runs through e_i itself, so the levels to scan are capped by
+            # e_i's own new trussness, bounded by its h-operator value
+            # under UB (much tighter than S+2 in dense cores).
+            UB = np.where(T_cur >= 0,
+                          np.minimum(S_cur + 2, T_cur + 1), S_cur + 2)
+            UB[~present] = 0             # absent edges block every path
+            k_cap = int(self._h_cap(e_i, UB, inc_static, side_rows)) - 1
+            cand = np.zeros(m_new, bool)
+            for k in np.unique(T_cur[present & (T_cur >= 2)]):
+                if k > k_cap:
+                    break
+                allowed = UB >= k + 1
+                totals["passes"] += 1
+                reach = _tri_bfs(inc_static, side_rows,
+                                 np.array([e_i]), allowed)
+                cand[reach[T_cur[reach] == k]] = True
+                if int(cand.sum()) > limit:
+                    return False
+            cand[e_i] = True
+            A = np.nonzero(cand)[0]
+            if A.size > limit or totals["affected"] + A.size > limit:
+                return False   # cumulative local work past paying: recompute
+            tau = self._region_peel(g_new, inc_static, side_rows, A, S_cur,
+                                    T_cur, totals, live_mask=present)
+            T_cur[A] = tau
+
+        tri_new = np.concatenate([tri_static] + side) if side else tri_static
+        self._commit(g_new, T_cur, S_cur.astype(np.int32), tri_new)
+        return True
+
+    @staticmethod
+    def _h_cap(e_i: int, UB: np.ndarray, inc: _Incidence,
+               side: np.ndarray) -> int:
+        """Upper bound on the inserted edge's new trussness: its h-operator
+        value under the per-edge upper bounds (h is monotone in partner
+        values, so this dominates the true value)."""
+        rows = inc.tri[inc.rows_of(np.array([e_i]))]
+        if side.size:
+            rows = np.concatenate([rows, side[(side == e_i).any(axis=1)]])
+        if rows.size == 0:
+            return 2
+        others = rows[rows != e_i].reshape(-1, 2)
+        val = np.sort(np.minimum(UB[others[:, 0]], UB[others[:, 1]]) - 2)[::-1]
+        rank = np.arange(val.shape[0], dtype=np.int64) + 1
+        return 2 + int(np.maximum(np.minimum(val, rank), 0).max(initial=0))
+
+    # ------------------------------------------------------------ region peel --
+    def _region_peel(self, g: CSRGraph, inc: _Incidence, side: np.ndarray,
+                     A: np.ndarray, S_vec: np.ndarray, T_fix: np.ndarray,
+                     totals, live_mask: np.ndarray | None = None):
+        """Re-peel region ``A`` with its exterior triangle partners pinned
+        at their known death level.  Returns the new peel values + 2 for
+        ``A`` (same order).  ``live_mask`` masks absent edges (insertion
+        phase).  Dispatches to the host mirror for small regions and to the
+        masked ``_peel_loop`` above ``host_peel_max``."""
+        m = g.m
+        rows = inc.tri[np.unique(inc.rows_of(A))] if inc.tri.size else \
+            np.zeros((0, 3), np.int64)
+        if side.size:
+            hit = np.isin(side, A).any(axis=1)
+            rows = np.concatenate([rows, side[hit]])
+        if live_mask is not None and rows.size:
+            rows = rows[live_mask[rows].all(axis=1)]
+        in_A = np.zeros(m, bool)
+        in_A[A] = True
+        flat = rows.ravel()
+        boundary = np.unique(flat[~in_A[flat]]) if flat.size else \
+            np.zeros(0, np.int64)
+        totals["affected"] += int(A.size)
+        totals["boundary"] += int(boundary.size)
+
+        L = np.union1d(A, boundary)
+        if L.shape[0] <= self.host_peel_max:
+            # compact host path: local ids preserve the global id order, so
+            # the tie-break picks the same winners
+            lmap = np.full(m, -1, np.int64)
+            lmap[L] = np.arange(L.shape[0])
+            n_loc = L.shape[0]
+            S0 = np.where(in_A[L], S_vec[L], T_fix[L] - 2)
+            live = np.ones(n_loc, bool)
+            pinned = ~in_A[L]
+            S_fin = _host_peel(n_loc, lmap[rows] if rows.size else
+                               np.zeros((0, 3), np.int64),
+                               S0, live, pinned)
+            tau_L = S_fin + 2
+        else:
+            tau_L = self._jax_region_peel(g, A, boundary, in_A, S_vec, T_fix,
+                                          live_mask)[L]
+        # replay invariant: pinned edges must die exactly at their schedule.
+        # A real raise (not a bare assert, which -O strips): a violation
+        # means the re-peel would commit corrupt trussness into the handle.
+        if not np.array_equal(tau_L[~in_A[L]], T_fix[boundary]):
+            raise RuntimeError(
+                "incremental re-peel integrity violation: a pinned boundary "
+                "edge left its death level — please report this graph")
+        return tau_L[np.searchsorted(L, A)]
+
+    def _jax_region_peel(self, g: CSRGraph, A, boundary, in_A, S_vec, T_fix,
+                         live_mask):
+        """Masked-frontier ``_peel_loop`` over the full edge space: region
+        live at its support, boundary pinned at its death level, everything
+        else (including absent edges) pre-marked processed."""
+        m = g.m
+        L = np.union1d(A, boundary)
+        tab = wedge_subtable(g, L)
+        m_pad = max(_MIN_M_PAD, next_pow2(m))
+        peel_pad = next_pow2(max(1, tab.size))
+        chunk = min(self.chunk, peel_pad)
+        n_chunks = peel_pad // chunk
+        e1, cand, lo, hi = wedge_common.pad_chunked(
+            tab.e1, tab.cand_slot, tab.lo, tab.hi,
+            m=m_pad, chunk=chunk, n_chunks=n_chunks)
+        has, c_start, c_end = chunk_ranges(tab.off, chunk, m_out=m_pad)
+        tabs = PeelTables(
+            e1=jnp.asarray(e1), cand_slot=jnp.asarray(cand),
+            lo=jnp.asarray(lo), hi=jnp.asarray(hi),
+            c_start=jnp.asarray(c_start), c_end=jnp.asarray(c_end),
+            has_entries=jnp.asarray(has))
+
+        S0 = np.full(m_pad + 1, int(_SENTINEL_S), np.int32)
+        S0[A] = S_vec[A]
+        S0[boundary] = (T_fix[boundary] - 2).astype(np.int32)
+        live = np.zeros(m_pad + 1, bool)
+        live[L] = True
+        if live_mask is not None:
+            live[:m] &= live_mask      # absent edges stay processed
+        pinned = np.zeros(m_pad + 1, bool)
+        pinned[boundary] = True
+
+        iters = int(np.ceil(np.log2(2 * m_pad + 1))) + 1
+        S_fin, _, _ = _local_peel_jit(
+            jnp.asarray(pad1(g.N, 2 * m_pad, wedge_common.PAD_N)),
+            jnp.asarray(pad1(g.Eid, 2 * m_pad, m_pad)),
+            jnp.asarray(S0), jnp.asarray(~live), jnp.asarray(pinned), tabs,
+            m=m_pad, chunk=chunk, n_chunks=n_chunks, iters=iters,
+            mode=self.mode, interpret=self.interpret)
+        return np.asarray(S_fin)[:m].astype(np.int64) + 2
+
+    # ---------------------------------------------------------- internals --
+    @staticmethod
+    def _batch_keys(batch: np.ndarray, n: int) -> np.ndarray:
+        if batch.size == 0:
+            return np.zeros(0, np.int64)
+        lo = np.minimum(batch[:, 0], batch[:, 1])
+        hi = np.maximum(batch[:, 0], batch[:, 1])
+        return np.unique(edge_keys(lo, hi, n))
+
+    def _commit(self, g_new: CSRGraph, T_new: np.ndarray, S_new: np.ndarray,
+                tri_new: np.ndarray) -> None:
+        self.g = g_new
+        self.T = T_new.astype(np.int64)
+        self.S = S_new.astype(np.int32)
+        self.tri = tri_new.astype(np.int64)
+
+    def _full_rebuild(self, E: np.ndarray) -> None:
+        """From-scratch decomposition through the standard (KCO) pipeline."""
+        g = build_csr(E, self.n)
+        if g.m == 0:
+            self._commit(g, np.zeros(0, np.int64), np.zeros(0, np.int32),
+                         np.zeros((0, 3), np.int64))
+            return
+        perm = degeneracy_order(E, self.n)
+        r_edges = relabel(E, perm)
+        gr = build_csr(r_edges, self.n)
+        res = pkt(gr, chunk=self.chunk, mode=self.mode,
+                  support_mode=self.support_mode, interpret=self.interpret)
+        u = g.El[:, 0].astype(np.int64)
+        v = g.El[:, 1].astype(np.int64)
+        rl, rh = perm[u], perm[v]
+        keys = edge_keys(np.minimum(rl, rh), np.maximum(rl, rh), self.n)
+        T = align_to_input(res.trussness, gr, None, self.n, keys=keys)
+        S = align_to_input(res.support, gr, None, self.n, keys=keys)
+        self._commit(g, T, S.astype(np.int32), triangle_list(g))
+
+    def verify(self) -> bool:
+        """Debug helper: does the maintained state match a from-scratch PKT?"""
+        if self.g.m == 0:
+            return True
+        from repro.core.pkt import truss_pkt
+        ref = truss_pkt(self.edges)
+        S_ref = support_mod.compute_support(self.g)
+        if self.tri.size:
+            tri_ok = (self.tri.shape[0] == int(S_ref.sum()) // 3
+                      and (self.tri[:, 0] < self.tri[:, 1]).all()
+                      and (self.tri[:, 1] < self.tri[:, 2]).all())
+        else:
+            tri_ok = int(S_ref.sum()) == 0
+        return (np.array_equal(self.T, ref)
+                and np.array_equal(self.S, S_ref) and bool(tri_ok))

@@ -24,6 +24,80 @@ from typing import Optional
 import numpy as np
 
 
+#: Largest vertex-id space for which ``lo * n + hi`` key packing stays inside
+#: int64: floor(sqrt(2**63 - 1)).  The CSR arrays themselves are int32, so the
+#: effective vertex-id bound is the tighter ``_MAX_N`` below — but any caller
+#: packing keys with a caller-supplied ``n`` must respect this one too.
+MAX_PACK_N = 3_037_000_499
+#: CSR layout bound: vertex ids live in int32 columns (Fig. 2 arrays).
+_MAX_N = np.iinfo(np.int32).max
+
+
+def check_edge_array(edges) -> np.ndarray:
+    """Validate a user-supplied edge array; returns it as (k, 2) int64.
+
+    Rejects (with a descriptive ValueError) anything the downstream key
+    packing or CSR build would otherwise silently corrupt: non-integer
+    dtypes, shapes other than (k, 2), negative vertex ids (which corrupt the
+    ``lo * n + hi`` packing), vertex ids beyond the int32 CSR layout, and
+    self-loop rows.  Empty inputs of any shape pass through as (0, 2).
+    """
+    edges = np.asarray(edges)
+    if edges.size == 0:
+        return np.zeros((0, 2), np.int64)
+    if not np.issubdtype(edges.dtype, np.integer):
+        raise ValueError(
+            f"edges must have an integer dtype, got {edges.dtype}")
+    if edges.ndim != 2 or edges.shape[1] != 2:
+        raise ValueError(f"edges must be (k, 2), got shape {edges.shape}")
+    edges = edges.astype(np.int64, copy=False)
+    vmin, vmax = int(edges.min()), int(edges.max())
+    if vmin < 0:
+        bad = edges[(edges < 0).any(axis=1)][0]
+        raise ValueError(
+            f"negative vertex ids are not allowed (e.g. edge "
+            f"({bad[0]}, {bad[1]})): they corrupt the lo*n+hi key packing")
+    if vmax >= _MAX_N:
+        raise ValueError(
+            f"vertex id {vmax} exceeds the int32 CSR layout bound "
+            f"({_MAX_N - 1}); relabel vertices to a compact id space "
+            f"(key packing itself overflows int64 beyond n={MAX_PACK_N})")
+    if (edges[:, 0] == edges[:, 1]).any():
+        v = int(edges[edges[:, 0] == edges[:, 1]][0, 0])
+        raise ValueError(f"self-loops are not allowed (vertex {v})")
+    return edges
+
+
+def edge_keys(lo: np.ndarray, hi: np.ndarray, n: int) -> np.ndarray:
+    """Pack canonical (lo < hi) endpoint pairs into unique int64 keys."""
+    if n > MAX_PACK_N:
+        raise ValueError(
+            f"n={n} overflows int64 lo*n+hi key packing (max {MAX_PACK_N})")
+    return lo.astype(np.int64) * n + hi
+
+
+def canonical_edges_with_rows(edges) -> tuple[np.ndarray, np.ndarray,
+                                              np.ndarray, int]:
+    """Validate + canonicalize, keeping per-input-row endpoint order.
+
+    Returns ``(E, lo, hi, n)``: ``E`` the unique canonical (u < v) edge array
+    sorted by key, ``lo``/``hi`` the canonical endpoints of every *input row*
+    (so callers can map deduped results back to their own row order), and
+    ``n`` the vertex-id space.  The validation of ``check_edge_array``
+    applies (self-loops, negatives, huge ids all rejected).
+    """
+    edges = check_edge_array(edges)
+    if edges.size == 0:
+        return (np.zeros((0, 2), np.int64), np.zeros(0, np.int64),
+                np.zeros(0, np.int64), 0)
+    n = int(edges.max()) + 1
+    lo = np.minimum(edges[:, 0], edges[:, 1])
+    hi = np.maximum(edges[:, 0], edges[:, 1])
+    uniq = np.unique(edge_keys(lo, hi, n))
+    E = np.stack([uniq // n, uniq % n], axis=1)
+    return E, lo, hi, n
+
+
 @dataclasses.dataclass(frozen=True)
 class CSRGraph:
     """Undirected simple graph in the paper's array layout (host numpy)."""

@@ -35,9 +35,26 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 
+#: adjacency padding value: larger than any vertex id, so padded slots can
+#: never match a probe (shared by the batched engine and the local re-peel)
+PAD_N = np.int32(1 << 30)
+
+
 def interpret_default() -> bool:
     """Pallas interpret mode unless running on a real TPU."""
     return jax.default_backend() != "tpu"
+
+
+def next_pow2(x: int) -> int:
+    """Smallest power of two >= x (>= 1)."""
+    return 1 << max(0, int(x - 1).bit_length())
+
+
+def pad1(x: np.ndarray, size: int, fill) -> np.ndarray:
+    """Right-pad a 1-D int array to ``size`` with ``fill`` (int32 out)."""
+    out = np.full(size, fill, np.int32)
+    out[: x.shape[0]] = x
+    return out
 
 
 def chunk_layout(size: int, chunk: int) -> tuple[int, int]:
@@ -102,6 +119,37 @@ def ranged_searchsorted(N: jnp.ndarray, w: jnp.ndarray, lo: jnp.ndarray,
 
     lo_f, _ = jax.lax.fori_loop(0, iters, body, (lo, hi))
     return lo_f
+
+
+def ranged_searchsorted_np(N: np.ndarray, w: np.ndarray, lo: np.ndarray,
+                           hi: np.ndarray, iters: int) -> np.ndarray:
+    """Host-numpy mirror of ``ranged_searchsorted`` (same algorithm, same
+    bounds contract).  Used by the incremental-maintenance layer, whose
+    per-update table shapes vary too much to amortize a jit trace."""
+    lo_ = lo.astype(np.int64, copy=True)
+    hi_ = hi.astype(np.int64, copy=True)
+    top = max(N.shape[0] - 1, 0)
+    for _ in range(iters):
+        adv = lo_ < hi_
+        mid = (lo_ + hi_) >> 1
+        val = N[np.minimum(mid, top)]
+        go_right = val < w
+        lo_ = np.where(adv & go_right, mid + 1, lo_)
+        hi_ = np.where(adv & ~go_right, mid, hi_)
+    return lo_
+
+
+def probe_np(N: np.ndarray, cand_slot: np.ndarray, lo: np.ndarray,
+             hi: np.ndarray, *, iters: int) -> tuple[np.ndarray, np.ndarray]:
+    """Host-numpy mirror of ``probe``: (hit, safe) for w = N[cand_slot]."""
+    if N.size == 0 or cand_slot.size == 0:
+        z = np.zeros(cand_slot.shape[0], np.int64)
+        return z.astype(bool), z
+    w = N[cand_slot]
+    idx = ranged_searchsorted_np(N, w, lo, hi, iters)
+    safe = np.minimum(idx, N.shape[0] - 1)
+    hit = (idx < hi) & (N[safe] == w)
+    return hit, safe
 
 
 def probe(N: jnp.ndarray, cand_slot: jnp.ndarray, lo: jnp.ndarray,

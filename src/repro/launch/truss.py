@@ -2,6 +2,15 @@
 
   PYTHONPATH=src python -m repro.launch.truss --graph rmat-small \
       [--order kco|natural] [--engine pkt|dist|trilist|wc|ros] [--verify]
+
+Streaming replay (incremental maintenance, DESIGN.md §9): open the graph as
+a persistent engine handle and replay K churn batches through
+``TrussEngine.update``, reporting local-vs-full repair decisions and
+timings; with ``--verify`` the final state is checked against a
+from-scratch PKT:
+
+  PYTHONPATH=src python -m repro.launch.truss --graph rmat-small \
+      --update-stream 16 --churn 0.01 [--verify]
 """
 
 from __future__ import annotations
@@ -15,6 +24,66 @@ from repro.graphs.datasets import named_graph
 from repro.graphs.csr import build_csr, relabel, degeneracy_order
 from repro.core import (pkt, truss_wc, truss_ros, truss_trilist, truss_numpy,
                         pkt_dist)
+
+
+def churn_batch(edges: np.ndarray, n: int, frac: float, rng):
+    """One synthetic update batch: remove ``frac·m`` existing edges and add
+    the same number of random absent edges (vertex space preserved)."""
+    m = edges.shape[0]
+    k = max(1, int(round(frac * m)))
+    rm = edges[rng.choice(m, size=min(k, m), replace=False)]
+    present = set(map(tuple, edges.tolist()))
+    add = []
+    tries = 0
+    while len(add) < k and tries < 100 * k + 1000:  # dense graphs: give up
+        tries += 1
+        u, v = int(rng.integers(0, n)), int(rng.integers(0, n))
+        if u == v:
+            continue
+        e = (min(u, v), max(u, v))
+        if e not in present:
+            present.add(e)
+            add.append(e)
+    if not add:
+        return np.zeros((0, 2), np.int64), rm
+    return np.asarray(add, np.int64), rm
+
+
+def run_update_stream(args) -> None:
+    """Replay ``--update-stream`` churn batches through an engine handle."""
+    from repro.serve.truss_engine import TrussEngine
+
+    E = named_graph(args.graph)
+    n = int(E.max()) + 1
+    eng = TrussEngine(mode=args.mode, support_mode=args.support_mode,
+                      chunk=args.chunk)
+    t0 = time.perf_counter()
+    h = eng.open(E, local_frac=args.local_frac)
+    t_open = time.perf_counter() - t0
+    print(f"graph={args.graph} n={n} m={h.m} open {t_open:.3f}s "
+          f"mode={args.mode} sup={args.support_mode}")
+
+    rng = np.random.default_rng(args.update_seed)
+    for i in range(args.update_stream):
+        add, rm = churn_batch(h.edges, n, args.churn, rng)
+        st = eng.update(h, add_edges=add, remove_edges=rm)
+        print(f"batch {i:3d}: +{st.inserted} -{st.deleted} -> m={st.m_after} "
+              f"repair={st.mode} affected={st.affected} "
+              f"boundary={st.boundary} changed={st.changed} "
+              f"{st.seconds * 1e3:.1f}ms")
+
+    s = eng.stats
+    mean_ms = 1e3 * s["update_seconds"] / max(1, s["updates"])
+    print(f"stream done: {s['updates']} updates "
+          f"({s['updates_local']} local / {s['updates_full']} full), "
+          f"mean {mean_ms:.1f}ms vs open {t_open * 1e3:.1f}ms")
+
+    if args.verify:
+        from repro.core import truss_pkt
+        ok = np.array_equal(h.trussness, truss_pkt(h.edges))
+        print("verify vs from-scratch pkt:", "OK" if ok else "MISMATCH")
+        if not ok:
+            raise SystemExit(1)
 
 
 def main(argv=None):
@@ -31,7 +100,19 @@ def main(argv=None):
                     choices=list(SUPPORT_MODES))
     ap.add_argument("--verify", action="store_true",
                     help="check against the numpy oracle (small graphs!)")
+    ap.add_argument("--update-stream", type=int, default=0, metavar="K",
+                    help="replay K incremental churn batches through "
+                         "TrussEngine.update instead of one decomposition")
+    ap.add_argument("--churn", type=float, default=0.01,
+                    help="fraction of edges swapped per update batch")
+    ap.add_argument("--local-frac", type=float, default=0.25,
+                    help="affected-region fraction above which an update "
+                         "falls back to full recompute")
+    ap.add_argument("--update-seed", type=int, default=0)
     args = ap.parse_args(argv)
+
+    if args.update_stream:
+        return run_update_stream(args)
 
     E = named_graph(args.graph)
     n = int(E.max()) + 1

@@ -1,5 +1,5 @@
 from repro.serve.engine import make_prefill_step, make_decode_step
-from repro.serve.truss_engine import TrussEngine, truss_batched
+from repro.serve.truss_engine import TrussEngine, TrussHandle, truss_batched
 
 __all__ = ["make_prefill_step", "make_decode_step",
-           "TrussEngine", "truss_batched"]
+           "TrussEngine", "TrussHandle", "truss_batched"]

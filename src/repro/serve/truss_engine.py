@@ -50,18 +50,18 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.graphs.csr import CSRGraph, build_csr, degeneracy_order, relabel
+from repro.graphs.csr import (CSRGraph, build_csr, canonical_edges_with_rows,
+                              degeneracy_order, edge_keys, relabel)
 from repro.core import support as support_mod
 from repro.core.pkt import (PEEL_MODES, PeelTables, _SENTINEL_S, _peel_loop,
                             align_to_input, chunk_ranges)
+from repro.core.truss_inc import IncrementalTruss, UpdateStats
 from repro.kernels import wedge_common
+from repro.kernels.wedge_common import next_pow2 as _next_pow2
+from repro.kernels.wedge_common import pad1 as _pad1
 
-_PAD_N = np.int32(1 << 30)   # adjacency padding: larger than any vertex id
+_PAD_N = wedge_common.PAD_N  # adjacency padding: larger than any vertex id
 _MIN_M_PAD = 8
-
-
-def _next_pow2(x: int) -> int:
-    return 1 << max(0, int(x - 1).bit_length())
 
 
 class SizeClass(NamedTuple):
@@ -136,12 +136,6 @@ def _batched_truss(ops: BatchOperand, *, m: int, chunk: int, n_chunks: int,
     return jax.vmap(one)(ops)
 
 
-def _pad1(x: np.ndarray, size: int, fill) -> np.ndarray:
-    out = np.full(size, fill, np.int32)
-    out[: x.shape[0]] = x
-    return out
-
-
 @dataclasses.dataclass
 class _Pending:
     ticket: int
@@ -149,7 +143,51 @@ class _Pending:
     n: int
     in_keys: np.ndarray       # per input row: canonical key in relabeled space
     key: SizeClass
+    E: np.ndarray             # canonical pre-relabel edges (handle promotion)
     operand: BatchOperand | None = None
+
+
+class TrussHandle:
+    """Persistent decomposition state — the mutable sibling of a ticket.
+
+    Returned by ``TrussEngine.open`` (or by promoting a still-pending
+    ticket through ``TrussEngine.update``).  Unlike the single-read ticket
+    API, a handle retains its graph, trussness, and support across
+    ``update`` calls until ``TrussEngine.close`` releases it.
+    """
+
+    __slots__ = ("hid", "_inc", "closed")
+
+    def __init__(self, hid: int, inc: IncrementalTruss):
+        self.hid = hid
+        self._inc = inc
+        self.closed = False
+
+    @property
+    def edges(self) -> np.ndarray:
+        """Current canonical (m, 2) edge list (key-sorted)."""
+        return self._inc.edges
+
+    @property
+    def trussness(self) -> np.ndarray:
+        """Per-edge trussness aligned to ``edges`` rows."""
+        return self._inc.trussness
+
+    @property
+    def m(self) -> int:
+        return self._inc.m
+
+    @property
+    def n(self) -> int:
+        return self._inc.n
+
+    def query(self, edges) -> np.ndarray:
+        """Trussness for specific edges, aligned to the given rows."""
+        return self._inc.query(edges)
+
+    def __repr__(self):
+        state = "closed" if self.closed else f"m={self._inc.m}"
+        return f"TrussHandle({self.hid}, {state})"
 
 
 class TrussEngine:
@@ -180,12 +218,17 @@ class TrussEngine:
         self._pending: list[_Pending] = []
         self._results: dict[int, np.ndarray] = {}
         self._next_ticket = 0
+        self._handles: dict[int, TrussHandle] = {}
+        self._next_handle = 0
         self.stats = {
             "submitted": 0, "flushes": 0, "batches": 0,
             "buckets": set(), "graph_seconds": 0.0, "graphs_done": 0,
             # warm_* counts only dispatches whose bucket was seen before
             # (compile already cached) — the steady-state throughput basis
             "warm_seconds": 0.0, "warm_graphs": 0,
+            # handle lifecycle (incremental maintenance)
+            "handles_opened": 0, "updates": 0, "updates_local": 0,
+            "updates_full": 0, "update_seconds": 0.0,
         }
 
     # ------------------------------------------------------------- submit --
@@ -193,28 +236,20 @@ class TrussEngine:
         """Queue one graph; returns a ticket for ``result``.
 
         ``edges`` is any (k, 2) integer array of undirected edges (either
-        endpoint order; duplicate rows allowed; self-loops rejected).  The
-        result is aligned to the input rows: ``result(t)[i]`` is the
-        trussness of ``edges[i]``.
+        endpoint order; duplicate rows allowed; self-loops rejected, as are
+        negative vertex ids and ids beyond the int32 CSR / int64 key-packing
+        bounds — all used to corrupt results silently).  The result is
+        aligned to the input rows: ``result(t)[i]`` is the trussness of
+        ``edges[i]``.
         """
-        edges = np.asarray(edges, dtype=np.int64)
+        E, lo, hi, n = canonical_edges_with_rows(edges)
         ticket = self._next_ticket
         self._next_ticket += 1
         self.stats["submitted"] += 1
 
-        if edges.size == 0:
+        if E.size == 0:
             self._results[ticket] = np.zeros(0, np.int64)
             return ticket
-        if edges.ndim != 2 or edges.shape[1] != 2:
-            raise ValueError("edges must be (k, 2)")
-        if (edges[:, 0] == edges[:, 1]).any():
-            raise ValueError("self-loops are not allowed")
-
-        n = int(edges.max()) + 1
-        lo = np.minimum(edges[:, 0], edges[:, 1])
-        hi = np.maximum(edges[:, 0], edges[:, 1])
-        uniq = np.unique(lo * n + hi)
-        E = np.stack([uniq // n, uniq % n], axis=1)
         if E.shape[0] > self.max_edges:
             raise ValueError(
                 f"graph too large for this engine: m={E.shape[0]} canonical "
@@ -230,7 +265,7 @@ class TrussEngine:
         # key of each *input row* in the relabeled space (handles duplicate
         # and endpoint-swapped rows: they map onto the same canonical edge)
         rl, rh = perm[lo], perm[hi]
-        in_keys = (np.minimum(rl, rh) * n + np.maximum(rl, rh))
+        in_keys = edge_keys(np.minimum(rl, rh), np.maximum(rl, rh), n)
 
         g = build_csr(r_edges, n)
         stab = support_mod.build_support_table(g)
@@ -238,7 +273,7 @@ class TrussEngine:
         key = self._size_class(g, stab, ptab)
         self._pending.append(_Pending(
             ticket=ticket, g=g, n=n, in_keys=in_keys,
-            key=key, operand=self._make_operand(g, key, stab, ptab)))
+            key=key, E=E, operand=self._make_operand(g, key, stab, ptab)))
         if len(self._pending) >= self.max_pending:
             self.flush()
         return ticket
@@ -267,6 +302,73 @@ class TrussEngine:
         tickets = self.submit_many(graphs)
         self.flush()
         return [self.result(t) for t in tickets]
+
+    # ----------------------------------------------- incremental handles --
+    def open(self, edges, *, local_frac: float = 0.25) -> TrussHandle:
+        """Decompose ``edges`` into a *persistent* handle for ``update``.
+
+        Unlike ``submit``'s single-read tickets, a handle retains the CSR
+        graph, wedge-table-derived state, support, and trussness across
+        arbitrarily many ``update`` batches until ``close`` releases it.
+        """
+        inc = IncrementalTruss(
+            edges, mode=self.mode, support_mode=self.support_mode,
+            chunk=self.chunk, local_frac=local_frac,
+            interpret=self.interpret)
+        h = TrussHandle(self._next_handle, inc)
+        self._next_handle += 1
+        self._handles[h.hid] = h
+        self.stats["handles_opened"] += 1
+        return h
+
+    def update(self, ticket_or_handle, *, add_edges=None,
+               remove_edges=None) -> UpdateStats:
+        """Apply one insert/delete batch to a handle (or promote a ticket).
+
+        Accepts a :class:`TrussHandle`, or an *int ticket* whose submission
+        is still pending — the ticket is then consumed (it can no longer be
+        redeemed through ``result``) and promoted to a fresh handle, which
+        the returned stats carry in ``.handle``.  Tickets already flushed or
+        collected cannot be promoted (the engine has released their graph);
+        re-``open`` the edges instead.
+
+        Small batches are absorbed by local repair (affected-region re-peel,
+        see ``core/truss_inc.py``); large ones fall back to a full
+        recompute.  ``stats.mode`` reports which path ran.
+        """
+        h = self._resolve_handle(ticket_or_handle)
+        st = h._inc.update(add_edges=add_edges, remove_edges=remove_edges)
+        self.stats["updates"] += 1
+        if st.mode == "full":
+            self.stats["updates_full"] += 1
+        elif st.mode == "local":
+            self.stats["updates_local"] += 1
+        self.stats["update_seconds"] += st.seconds
+        return dataclasses.replace(st, handle=h)
+
+    def close(self, handle: TrussHandle) -> None:
+        """Release a handle's retained state; further use raises."""
+        if handle.closed:
+            return
+        handle.closed = True
+        self._handles.pop(handle.hid, None)
+        handle._inc = None
+
+    def _resolve_handle(self, ticket_or_handle) -> TrussHandle:
+        if isinstance(ticket_or_handle, TrussHandle):
+            if ticket_or_handle.closed:
+                raise ValueError(
+                    f"handle {ticket_or_handle.hid} is closed")
+            return ticket_or_handle
+        ticket = int(ticket_or_handle)
+        for i, p in enumerate(self._pending):
+            if p.ticket == ticket:
+                del self._pending[i]
+                return self.open(p.E)
+        raise KeyError(
+            f"ticket {ticket!r} cannot be promoted to a handle: it is not "
+            f"pending (already decomposed, collected, or unknown) — "
+            f"open() the edges to get an updatable handle")
 
     # ------------------------------------------------------------ internals --
     def _size_class(self, g: CSRGraph, stab, ptab) -> SizeClass:

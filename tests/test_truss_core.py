@@ -104,6 +104,62 @@ def test_rmat_medium_consistency():
     assert np.array_equal(t1, t2)
 
 
+# ------------------------------------------- input-validation bugfix sweep ----
+
+def test_truss_pkt_swapped_and_duplicate_rows_align():
+    """truss_pkt used to silently return wrong trussness for
+    endpoint-swapped or duplicate rows; now rows are canonicalized like
+    TrussEngine.submit and results align to the caller's rows."""
+    canon = np.array([[0, 1], [0, 2], [1, 2], [2, 3]], np.int64)
+    messy = np.array([[1, 0], [0, 1], [2, 1], [2, 0], [3, 2]], np.int64)
+    t_canon = truss_pkt(canon)
+    t_messy = truss_pkt(messy)
+    assert list(t_messy) == [t_canon[0], t_canon[0], t_canon[2],
+                             t_canon[1], t_canon[3]]
+
+
+def test_truss_pkt_rejects_malformed_input():
+    with pytest.raises(ValueError, match="self-loop"):
+        truss_pkt(np.array([[1, 1]], np.int64))
+    with pytest.raises(ValueError, match="negative"):
+        truss_pkt(np.array([[-1, 2]], np.int64))
+    with pytest.raises(ValueError, match=r"\(k, 2\)"):
+        truss_pkt(np.array([[0, 1, 2]], np.int64))
+    with pytest.raises(ValueError, match="integer"):
+        truss_pkt(np.array([[0.5, 1.0]]))
+    # int64 key-packing / int32 CSR overflow guard on huge vertex ids
+    with pytest.raises(ValueError, match="exceeds"):
+        truss_pkt(np.array([[0, 2**31]], np.int64))
+
+
+def test_align_to_input_missing_edge_raises():
+    """align_to_input used to misalign silently (searchsorted insertion
+    point) or IndexError (pos == len) for edges absent from g.El."""
+    from repro.core.pkt import align_to_input, pkt
+    E = np.array([[0, 1], [0, 2], [1, 2]], np.int64)
+    g = build_csr(E)
+    t = pkt(g).trussness
+    # absent edge whose key falls between present keys
+    with pytest.raises(ValueError, match=r"not present.*\(1, 3\)"):
+        align_to_input(t, g, np.array([[1, 3]], np.int64), 4)
+    # absent edge whose key sorts past the end (old IndexError path)
+    with pytest.raises(ValueError, match="not present"):
+        align_to_input(t, g, np.array([[3, 4]], np.int64), 5)
+    # empty graph
+    g0 = build_csr(np.zeros((0, 2), np.int64))
+    with pytest.raises(ValueError, match="empty graph"):
+        align_to_input(np.zeros(0), g0, np.array([[0, 1]], np.int64), 2)
+
+
+def test_edge_key_packing_guard():
+    from repro.graphs.csr import MAX_PACK_N, edge_keys
+    lo = np.array([0], np.int64)
+    hi = np.array([1], np.int64)
+    assert edge_keys(lo, hi, 10)[0] == 1
+    with pytest.raises(ValueError, match="overflows"):
+        edge_keys(lo, hi, MAX_PACK_N + 1)
+
+
 # -------------------------------------------------------------- support ----
 
 @pytest.mark.parametrize("seed", range(4))

@@ -6,7 +6,8 @@ import pytest
 from repro.graphs.csr import edges_from_arrays
 from repro.graphs.gen import ring_of_cliques_edges, rmat_edges
 from repro.core.pkt import truss_pkt
-from repro.serve.truss_engine import TrussEngine, truss_batched, _next_pow2
+from repro.serve.truss_engine import (TrussEngine, TrussHandle, truss_batched,
+                                      _next_pow2)
 
 
 def _er_edges(n, p, seed):
@@ -167,6 +168,73 @@ def test_out_of_order_result_pickup():
     assert np.array_equal(eng.result(t0), _expected(fleet[0]))
     assert np.array_equal(eng.result(t1), _expected(fleet[1]))
     assert eng.stats["flushes"] == flushes  # no extra flush needed
+
+
+def test_submit_rejects_negative_and_huge_ids():
+    """submit used to accept negative ids (corrupting the lo*n+hi key
+    packing) and huge ids (overflowing the int32 CSR layout)."""
+    eng = TrussEngine()
+    with pytest.raises(ValueError, match="negative"):
+        eng.submit(np.array([[-1, 2]], np.int64))
+    with pytest.raises(ValueError, match="exceeds"):
+        eng.submit(np.array([[0, 2**31]], np.int64))
+    t = eng.submit(np.array([[0, 1], [0, 2], [1, 2]], np.int64))
+    assert (eng.result(t) == 3).all()  # engine still serviceable
+
+
+# ------------------------------------------------- handle lifecycle (§9) --
+
+def test_handle_open_update_close():
+    eng = TrussEngine()
+    E = ring_of_cliques_edges(3, 5)
+    h = eng.open(E)
+    assert isinstance(h, TrussHandle)
+    assert np.array_equal(h.trussness, truss_pkt(h.edges))
+    st = eng.update(h, add_edges=np.array([[0, 2]]),
+                    remove_edges=np.array([[0, 1]]))
+    assert st.handle is h and st.mode in ("local", "full")
+    assert np.array_equal(h.trussness, truss_pkt(h.edges))
+    assert eng.stats["updates"] == 1
+    assert eng.stats["updates_local"] + eng.stats["updates_full"] == 1
+    eng.close(h)
+    assert h.closed
+    with pytest.raises(ValueError, match="closed"):
+        eng.update(h, add_edges=np.array([[0, 3]]))
+    eng.close(h)  # idempotent
+
+
+def test_handle_sequence_matches_from_scratch():
+    """A churned handle stays bitwise-equal to from-scratch pkt."""
+    rng = np.random.default_rng(12)
+    eng = TrussEngine()
+    h = eng.open(_er_edges(22, 0.3, 50), local_frac=1.0)
+    for _ in range(3):
+        cur = h.edges
+        rm = cur[rng.choice(cur.shape[0], size=2, replace=False)]
+        add = np.stack([rng.integers(0, 24, 3), rng.integers(0, 24, 3)], 1)
+        add = add[add[:, 0] != add[:, 1]]
+        eng.update(h, add_edges=add, remove_edges=rm)
+        assert np.array_equal(h.trussness, truss_pkt(h.edges))
+    assert list(h.query(h.edges[:3])) == list(h.trussness[:3])
+
+
+def test_ticket_promotion_to_handle():
+    """update() accepts a still-pending ticket: it is consumed and promoted
+    to a persistent handle carried in the returned stats."""
+    eng = TrussEngine()
+    E = _er_edges(14, 0.35, 60)
+    t = eng.submit(E)
+    st = eng.update(t, add_edges=np.array([[0, 13]]))
+    h = st.handle
+    assert isinstance(h, TrussHandle)
+    assert np.array_equal(h.trussness, truss_pkt(h.edges))
+    with pytest.raises(KeyError):        # ticket consumed by promotion
+        eng.result(t)
+    # a flushed/collected ticket cannot be promoted (graph released)
+    t2 = eng.submit(E)
+    eng.result(t2)
+    with pytest.raises(KeyError, match="cannot be promoted"):
+        eng.update(t2)
 
 
 def test_duplicate_ticket_redemption():

@@ -1,0 +1,279 @@
+"""Incremental maintenance: parity with from-scratch PKT under arbitrary
+insert/delete sequences, across repair paths and executor modes."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st, HealthCheck
+
+from repro.graphs.csr import edges_from_arrays
+from repro.graphs.gen import ring_of_cliques_edges
+from repro.core.pkt import truss_pkt
+from repro.core.support import compute_support
+from repro.core.truss_inc import (IncrementalTruss, _Incidence, _host_peel,
+                                  triangle_list, triangles_through,
+                                  wedge_subtable)
+
+SETTINGS = dict(max_examples=12, deadline=None,
+                suppress_health_check=[HealthCheck.too_slow])
+
+
+def _er_edges(n, p, seed):
+    rng = np.random.default_rng(seed)
+    mask = rng.random((n, n)) < p
+    src, dst = np.nonzero(np.triu(mask, 1))
+    return edges_from_arrays(src, dst, n)
+
+
+def _assert_state_exact(inc, ctx=None):
+    """Bitwise agreement with a from-scratch decomposition of the current
+    edge set, plus support- and triangle-state invariants."""
+    if inc.m == 0:
+        assert inc.trussness.shape == (0,)
+        return
+    ref = truss_pkt(inc.edges)
+    assert np.array_equal(inc.trussness, ref), ctx
+    S_ref = compute_support(inc.g)
+    assert np.array_equal(inc.support, S_ref), ctx
+    assert inc.triangles.shape[0] == int(S_ref.sum()) // 3, ctx
+
+
+# ------------------------------------------------------------- hypothesis ----
+
+@st.composite
+def update_scripts(draw):
+    """An initial graph plus a script of insert/delete batches."""
+    n = draw(st.integers(6, 20))
+    density = draw(st.floats(0.08, 0.5))
+    seed = draw(st.integers(0, 2**31 - 1))
+    rng = np.random.default_rng(seed)
+    E = _er_edges(n, density, seed)
+    batches = []
+    for _ in range(draw(st.integers(1, 3))):
+        n_rm = draw(st.integers(0, 6))
+        n_add = draw(st.integers(0, 6))
+        batches.append((n_add, n_rm))
+    return n, E, batches, seed
+
+
+def _apply_script(inc, n, batches, seed):
+    _apply_script.history = []
+    rng = np.random.default_rng(seed + 1)
+    for n_add, n_rm in batches:
+        cur = inc.edges
+        m = cur.shape[0]
+        rm = cur[rng.choice(m, size=min(n_rm, m), replace=False)] \
+            if m else np.zeros((0, 2), np.int64)
+        add = np.stack([rng.integers(0, n + 2, n_add),
+                        rng.integers(0, n + 2, n_add)], axis=1)
+        add = add[add[:, 0] != add[:, 1]]
+        st_ = inc.update(add_edges=add, remove_edges=rm)
+        _apply_script.history.append(st_)
+        assert st_.mode in ("noop", "local", "full")
+        _assert_state_exact(inc, (n_add, n_rm, st_.mode))
+
+
+@given(update_scripts())
+@settings(**SETTINGS)
+def test_property_incremental_parity(script):
+    """Any insert/delete sequence ends bitwise-equal to from-scratch pkt."""
+    n, E, batches, seed = script
+    if E.shape[0] == 0:
+        return
+    inc = IncrementalTruss(E, local_frac=1.0)
+    _assert_state_exact(inc, "init")
+    _apply_script(inc, n, batches, seed)
+
+
+@given(update_scripts())
+@settings(max_examples=6, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+def test_property_full_fallback_parity(script):
+    """local_frac=0 forces the full-recompute fallback on every non-noop
+    update; parity must hold through that path too."""
+    n, E, batches, seed = script
+    if E.shape[0] == 0:
+        return
+    inc = IncrementalTruss(E, local_frac=0.0)
+    _apply_script(inc, n, batches, seed)
+    # any update that had actual repair work must have taken the full path
+    # (an update with an empty repair set may legitimately stay local)
+    assert all(s.affected == 0 for s in _apply_script.history
+               if s.mode == "local")
+
+
+@given(update_scripts())
+@settings(max_examples=6, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+def test_property_jax_masked_peel_parity(script):
+    """host_peel_max=0 routes every insertion region through the masked
+    ``_peel_loop`` (pinned-boundary) path instead of the host mirror."""
+    n, E, batches, seed = script
+    if E.shape[0] == 0:
+        return
+    inc = IncrementalTruss(E, local_frac=1.0, host_peel_max=0)
+    _apply_script(inc, n, batches, seed)
+
+
+# ------------------------------------------------------------ fixed cases ----
+
+def test_insert_increase_cascade():
+    """Completing K4 raises every edge 3 -> 4 — the increase side must
+    propagate beyond the inserted edge's own triangles."""
+    E = np.array([[0, 1], [0, 2], [0, 3], [1, 2], [1, 3]], np.int64)
+    inc = IncrementalTruss(E, local_frac=1.0)
+    st_ = inc.update(add_edges=np.array([[2, 3]]))
+    assert st_.mode == "local" and st_.inserted == 1
+    assert (inc.trussness == 4).all()
+    _assert_state_exact(inc)
+
+
+def test_delete_decrease_cascade():
+    """Breaking K4 drops the survivors back to 3."""
+    inc = IncrementalTruss(np.array(
+        [[0, 1], [0, 2], [0, 3], [1, 2], [1, 3], [2, 3]], np.int64),
+        local_frac=1.0)
+    st_ = inc.update(remove_edges=np.array([[2, 3]]))
+    assert st_.mode == "local" and st_.deleted == 1
+    assert (inc.trussness == 3).all()
+    _assert_state_exact(inc)
+
+
+def test_empty_transitions_and_vertex_growth():
+    inc = IncrementalTruss(np.array([[0, 1], [0, 2], [1, 2]], np.int64))
+    inc.update(remove_edges=inc.edges)
+    assert inc.m == 0 and inc.trussness.shape == (0,)
+    st_ = inc.update(add_edges=np.array([[5, 9], [9, 11], [5, 11]], np.int64))
+    assert st_.inserted == 3 and inc.n == 12
+    assert (inc.trussness == 3).all()
+    _assert_state_exact(inc)
+
+
+def test_noop_and_setwise_semantics():
+    inc = IncrementalTruss(np.array([[0, 1], [0, 2], [1, 2]], np.int64))
+    # inserting an existing edge / removing a missing one is a no-op
+    st_ = inc.update(add_edges=np.array([[1, 0]]),
+                     remove_edges=np.array([[5, 6]]))
+    assert st_.mode == "noop" and st_.inserted == 0 and st_.deleted == 0
+    # an edge in both batches ends up present (add wins set-wise)
+    st_ = inc.update(add_edges=np.array([[1, 2], [0, 3]]),
+                     remove_edges=np.array([[1, 2]]))
+    assert inc.m == 4 and st_.inserted == 1 and st_.deleted == 0
+    _assert_state_exact(inc)
+
+
+def test_ring_of_cliques_bridge_churn():
+    inc = IncrementalTruss(ring_of_cliques_edges(4, 5), local_frac=1.0)
+    rng = np.random.default_rng(3)
+    for _ in range(4):
+        cur = inc.edges
+        rm = cur[rng.choice(cur.shape[0], size=2, replace=False)]
+        add = np.stack([rng.integers(0, 20, 3), rng.integers(0, 20, 3)], 1)
+        add = add[add[:, 0] != add[:, 1]]
+        inc.update(add_edges=add, remove_edges=rm)
+        _assert_state_exact(inc)
+
+
+@pytest.mark.parametrize("mode", ["chunked", "dense", "pallas"])
+def test_masked_peel_executor_modes(mode):
+    """The pinned-boundary jax re-peel agrees across all three peel
+    executors (the pinned mask is threaded through each)."""
+    inc = IncrementalTruss(ring_of_cliques_edges(3, 4), mode=mode,
+                           local_frac=1.0, host_peel_max=0)
+    inc.update(add_edges=np.array([[0, 2], [1, 9]]),
+               remove_edges=np.array([[0, 1]]))
+    _assert_state_exact(inc, mode)
+
+
+def test_update_validation_matches_submit():
+    inc = IncrementalTruss(np.array([[0, 1], [0, 2], [1, 2]], np.int64))
+    with pytest.raises(ValueError, match="self-loop"):
+        inc.update(add_edges=np.array([[3, 3]]))
+    with pytest.raises(ValueError, match="negative"):
+        inc.update(remove_edges=np.array([[-1, 2]]))
+    with pytest.raises(ValueError, match="integer"):
+        IncrementalTruss(np.array([[0.5, 1.0]]))
+    with pytest.raises(ValueError, match="local_frac"):
+        IncrementalTruss(np.zeros((0, 2), np.int64), local_frac=1.5)
+
+
+def test_query_alignment_and_missing_edge():
+    inc = IncrementalTruss(np.array([[0, 1], [0, 2], [1, 2]], np.int64))
+    assert list(inc.query(np.array([[2, 0], [1, 0], [0, 1]]))) == [3, 3, 3]
+    with pytest.raises(ValueError, match="not present"):
+        inc.query(np.array([[0, 9]]))
+    with pytest.raises(ValueError, match="not present"):
+        inc.query(np.array([[1, 2], [0, 3]][::-1]))
+
+
+def test_update_stats_bookkeeping():
+    inc = IncrementalTruss(_er_edges(16, 0.3, 5), local_frac=1.0)
+    m0 = inc.m
+    st_ = inc.update(add_edges=np.array([[0, 15], [1, 14]]),
+                     remove_edges=inc.edges[:2])
+    assert st_.m_before == m0 and st_.m_after == inc.m
+    assert st_.seconds >= 0 and st_.mode == "local"
+    assert inc.stats["updates"] == 1 and inc.stats["last"] is st_
+
+
+# ------------------------------------------------------- building blocks ----
+
+def test_wedge_subtable_matches_full_table():
+    from repro.graphs.csr import build_csr
+    from repro.core.support import build_peel_table
+    g = build_csr(_er_edges(14, 0.4, 7))
+    full = build_peel_table(g)
+    sub = wedge_subtable(g, np.arange(g.m))
+    assert np.array_equal(sub.e1, full.e1)
+    assert np.array_equal(sub.cand_slot, full.cand_slot)
+    assert np.array_equal(sub.off, full.off)
+
+
+def test_triangle_list_each_once():
+    from repro.graphs.csr import build_csr
+    g = build_csr(_er_edges(15, 0.4, 8))
+    tri = triangle_list(g)
+    S = compute_support(g)
+    assert tri.shape[0] == int(S.sum()) // 3
+    # rows sorted and unique
+    assert (tri[:, 0] < tri[:, 1]).all() and (tri[:, 1] < tri[:, 2]).all()
+    keys = (tri[:, 0] * g.m + tri[:, 1]) * g.m + tri[:, 2]
+    assert np.unique(keys).shape[0] == tri.shape[0]
+    # per-edge membership counts reproduce the support vector
+    assert np.array_equal(np.bincount(tri.ravel(), minlength=g.m), S)
+
+
+def test_incidence_roundtrip():
+    from repro.graphs.csr import build_csr
+    g = build_csr(_er_edges(12, 0.5, 9))
+    tri = triangle_list(g)
+    inc = _Incidence(tri, g.m)
+    for e in range(g.m):
+        rows = np.unique(inc.rows_of(np.array([e])))
+        assert set(rows) == set(np.nonzero((tri == e).any(axis=1))[0])
+
+
+def test_host_peel_matches_pkt_on_whole_graph():
+    """With the whole graph as the region and no pins, the host mirror IS a
+    full peel — it must reproduce pkt exactly."""
+    from repro.graphs.csr import build_csr
+    from repro.core.pkt import pkt
+    g = build_csr(_er_edges(18, 0.35, 11))
+    tri = triangle_list(g)
+    S = compute_support(g)
+    out = _host_peel(g.m, tri, S.astype(np.int64),
+                     np.ones(g.m, bool), np.zeros(g.m, bool))
+    assert np.array_equal(out + 2, pkt(g).trussness)
+
+
+def test_triangles_through_subset_anchors():
+    from repro.graphs.csr import build_csr
+    g = build_csr(_er_edges(14, 0.45, 13))
+    anchors = np.array([0, g.m // 2, g.m - 1])
+    a, e2, e3 = triangles_through(g, anchors)
+    tri = triangle_list(g)
+    for x in anchors:
+        got = {tuple(sorted((int(p), int(q))))
+               for aa, p, q in zip(a, e2, e3) if aa == x}
+        want = {tuple(sorted(int(y) for y in row if y != x))
+                for row in tri if (row == x).any()}
+        assert got == want, x
