@@ -1,0 +1,125 @@
+"""Live-edge compaction + device table build: wall time and open-path cost.
+
+The PR-4 perf axes (DESIGN.md §10) measured head-to-head on real graphs:
+
+  * **compaction on vs off** — warm end-to-end ``pkt`` wall time with the
+    default threshold against ``compact_frac=None``, plus the phase
+    breakdown (table-build / support / peel / compaction) for each;
+  * **device vs numpy table build** — the cold *open* cost (first call:
+    table build + first compile) and the warm cost per table mode, showing
+    the table-build phase moved off the host.
+
+Every measured configuration is parity-checked bitwise against the others —
+a mismatch exits nonzero, which is the CI bench-trend gate.  Output:
+``BENCH_compact.json``.
+
+  PYTHONPATH=src python -m benchmarks.compact_bench [--smoke] [--out F]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+
+import numpy as np
+
+
+def _timed_pkt(g, reps: int = 2, **kw):
+    """(cold_seconds, warm_seconds, last result) for pkt(g, **kw)."""
+    from repro.core.pkt import pkt
+
+    t0 = time.perf_counter()
+    res = pkt(g, phase_timings=True, **kw)
+    cold = time.perf_counter() - t0
+    cold_phases = dict(res.phases)
+    warm = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        res = pkt(g, phase_timings=True, **kw)
+        warm.append(time.perf_counter() - t0)
+    return cold, cold_phases, float(np.mean(warm)), res
+
+
+def _bench_graph(name: str) -> dict:
+    from repro.graphs.csr import build_csr, degeneracy_order, relabel
+    from repro.graphs.datasets import named_graph
+
+    E = named_graph(name)
+    n = int(E.max()) + 1
+    E = relabel(E, degeneracy_order(E, n))
+    g = build_csr(E, n)
+    out = {"graph": name, "n": g.n, "m": g.m, "modes": {}, "parity_ok": True}
+
+    runs = {
+        "compact_on": dict(table_mode="device"),          # default threshold
+        "compact_off": dict(table_mode="device", compact_frac=None),
+        "numpy_tables": dict(table_mode="numpy", compact_frac=None),
+    }
+    ref = None
+    for key, kw in runs.items():
+        cold, cold_phases, warm, res = _timed_pkt(g, **kw)
+        out["modes"][key] = {
+            "open_seconds": cold,
+            "open_phases": {k: round(v, 6) for k, v in cold_phases.items()},
+            "warm_seconds": warm,
+            "warm_phases": {k: round(v, 6)
+                            for k, v in (res.phases or {}).items()},
+            "compactions": res.compactions,
+            "levels": res.levels,
+            "sublevels": res.sublevels,
+        }
+        if ref is None:
+            ref = res.trussness
+        else:
+            same = bool(np.array_equal(res.trussness, ref))
+            out["modes"][key]["agrees"] = same
+            out["parity_ok"] = out["parity_ok"] and same
+    on = out["modes"]["compact_on"]
+    off = out["modes"]["compact_off"]
+    host = out["modes"]["numpy_tables"]
+    # like-for-like: compaction on/off share the device table mode, and the
+    # table-mode pair shares compact_frac=None.  Cold ``open_seconds`` per
+    # mode stay raw — on CPU they are dominated by first-compile cost, which
+    # the phase split attributes (see also inc_bench's open_compile split).
+    out["speedup_warm_compact"] = off["warm_seconds"] / on["warm_seconds"] \
+        if on["warm_seconds"] > 0 else float("inf")
+    out["speedup_warm_device_tables"] = \
+        host["warm_seconds"] / off["warm_seconds"] \
+        if off["warm_seconds"] > 0 else float("inf")
+    return out
+
+
+def run(graphs=("ba-small", "rmat-small", "er-small", "cliques-small",
+                "ba-medium"),
+        out_path: str = "BENCH_compact.json") -> int:
+    report = {"bench": "compaction+device-tables", "graphs": [], "ok": True}
+    for name in graphs:
+        gr = _bench_graph(name)
+        report["graphs"].append(gr)
+        report["ok"] = report["ok"] and gr["parity_ok"]
+    with open(out_path, "w") as f:
+        json.dump(report, f, indent=2, sort_keys=True)
+    print(json.dumps(report, indent=2, sort_keys=True))
+    if not report["ok"]:
+        print("COMPACT BENCH FAILED: compaction/table-mode parity regression",
+              file=sys.stderr)
+        return 1
+    return 0
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small graphs only (the CI gate)")
+    ap.add_argument("--out", default="BENCH_compact.json")
+    args = ap.parse_args()
+    if args.smoke:
+        raise SystemExit(run(graphs=("ba-small", "rmat-small"),
+                             out_path=args.out))
+    raise SystemExit(run(out_path=args.out))
+
+
+if __name__ == "__main__":
+    main()

@@ -55,7 +55,7 @@ def run(suite=None, modes=MODES, support_modes=SUPPORT_MODES) -> list[str]:
         S0 = support_mod.compute_support(g, stab)
 
         tabs, chunk, n_chunks = prepare_peel(ptab, g.m, 1 << 14)
-        N, Eid, S0j = jnp.asarray(g.N), jnp.asarray(g.Eid), jnp.asarray(S0)
+        N, Eid = jnp.asarray(g.N), jnp.asarray(g.Eid)
         iters = support_mod._search_iters(g)
 
         t_peel = {}
@@ -65,7 +65,9 @@ def run(suite=None, modes=MODES, support_modes=SUPPORT_MODES) -> list[str]:
                 continue
 
             def peel():
-                S, _, _ = _pkt_peel_jit(N, Eid, S0j, tabs, m=g.m, chunk=chunk,
+                # fresh S0 upload per call: _pkt_peel_jit donates its S0
+                S, _, _ = _pkt_peel_jit(N, Eid, jnp.asarray(S0), tabs,
+                                        m=g.m, chunk=chunk,
                                         n_chunks=n_chunks, iters=iters,
                                         mode=pmode, interpret=not on_tpu)
                 S.block_until_ready()

@@ -50,14 +50,29 @@ def smoke(out_path: str = "BENCH_smoke.json") -> int:
     for mode in PEEL_MODES:
         for support_mode in SUPPORT_MODES:
             t0 = time.perf_counter()
-            res = pkt(g, mode=mode, support_mode=support_mode)
+            res = pkt(g, mode=mode, support_mode=support_mode,
+                      phase_timings=True)
             dt = time.perf_counter() - t0
             key = mode if support_mode == "jnp" \
                 else f"{mode}+sup-{support_mode}"
             report["modes"][key] = {
                 "seconds": dt, "agrees": check(f"pkt/{key}", res.trussness),
                 "levels": res.levels, "sublevels": res.sublevels,
+                "phases": {k: round(v, 6) for k, v in res.phases.items()},
             }
+
+    # table_mode axis: host-built tables (the parity oracle) vs the default
+    # device builders — phase breakdown shows where table-build time lives.
+    # Both runs are warm (the executors compiled above), so the numbers
+    # compare steady-state table construction, not jit compiles.
+    res_np = pkt(g, table_mode="numpy", phase_timings=True)
+    res_dev = pkt(g, table_mode="device", phase_timings=True)
+    report["table_modes"] = {
+        "device": {k: round(v, 6) for k, v in res_dev.phases.items()},
+        "numpy": {k: round(v, 6) for k, v in res_np.phases.items()},
+        "agrees": (check("pkt/table-numpy", res_np.trussness)
+                   and check("pkt/table-device", res_dev.trussness)),
+    }
 
     t0 = time.perf_counter()
     ros = truss_ros(g)

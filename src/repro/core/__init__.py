@@ -1,6 +1,6 @@
 """Core: the paper's contribution — PKT truss decomposition and its relatives."""
 
-from repro.core.pkt import pkt, truss_pkt, PKTResult
+from repro.core.pkt import pkt, truss_pkt, PKTResult, peel_live_subset
 from repro.core.truss_inc import IncrementalTruss, UpdateStats
 from repro.core.support import (
     compute_support,
@@ -8,6 +8,9 @@ from repro.core.support import (
     triangle_count,
     build_support_table,
     build_peel_table,
+    support_table_size,
+    peel_table_size,
+    TABLE_MODES,
 )
 from repro.core.wc import truss_wc
 from repro.core.ros import truss_ros
@@ -17,10 +20,11 @@ from repro.core.kcore import kcore_numpy, kcore_park
 from repro.core.pkt_dist import pkt_dist, make_pkt_dist, make_support_dist
 
 __all__ = [
-    "pkt", "truss_pkt", "PKTResult",
+    "pkt", "truss_pkt", "PKTResult", "peel_live_subset",
     "IncrementalTruss", "UpdateStats",
     "compute_support", "compute_support_ros", "triangle_count",
     "build_support_table", "build_peel_table",
+    "support_table_size", "peel_table_size", "TABLE_MODES",
     "truss_wc", "truss_ros", "truss_numpy",
     "truss_trilist", "enumerate_triangles",
     "kcore_numpy", "kcore_park",

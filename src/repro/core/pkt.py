@@ -74,6 +74,11 @@ class PKTResult:
     support: np.ndarray     # (m,) int32 initial support
     levels: int             # number of peel levels executed
     sublevels: int          # total sub-level iterations (paper's S)
+    compactions: int = 0    # live-edge compactions performed (DESIGN.md §10)
+    #: phase wall-times {tables, support, peel, compact} — populated only
+    #: when ``pkt(..., phase_timings=True)`` (each phase is synced before
+    #: the clock is read, so attribution is honest but adds barriers)
+    phases: dict | None = None
 
 
 def chunk_ranges(off: np.ndarray, chunk: int,
@@ -132,20 +137,67 @@ def prepare_peel(tab: support_mod.WedgeTable, m: int,
     size 1, every edge marked entry-less.
     """
     if tab.size == 0:
-        tabs = PeelTables(
-            e1=jnp.full((1,), m, jnp.int32),
-            cand_slot=jnp.zeros((1,), jnp.int32),
-            lo=jnp.zeros((1,), jnp.int32),
-            hi=jnp.zeros((1,), jnp.int32),
-            c_start=jnp.zeros((m,), jnp.int32),
-            c_end=jnp.zeros((m,), jnp.int32),
-            has_entries=jnp.zeros((m,), jnp.bool_),
-        )
-        return tabs, 1, 1
+        return _empty_peel_tables(m), 1, 1
     chunk, n_chunks = wedge_common.chunk_layout(tab.size, chunk)
     tabs = _pad_tables(tab, m, chunk, n_chunks)
     assert tabs.e1.shape[0] == n_chunks * chunk
     return tabs, chunk, n_chunks
+
+
+def _empty_peel_tables(m: int) -> PeelTables:
+    """One all-padding chunk of size 1; every edge entry-less."""
+    return PeelTables(
+        e1=jnp.full((1,), m, jnp.int32),
+        cand_slot=jnp.zeros((1,), jnp.int32),
+        lo=jnp.zeros((1,), jnp.int32),
+        hi=jnp.zeros((1,), jnp.int32),
+        c_start=jnp.zeros((m,), jnp.int32),
+        c_end=jnp.zeros((m,), jnp.int32),
+        has_entries=jnp.zeros((m,), jnp.bool_),
+    )
+
+
+def prepare_peel_device(g: CSRGraph, chunk: int | None, *,
+                        m_out: int | None = None,
+                        m_real: int | None = None) -> tuple[PeelTables, int,
+                                                            int]:
+    """Device-built peel tables for ``g``, pow2-padded (DESIGN.md §10).
+
+    The device counterpart of ``build_peel_table`` + ``prepare_peel``: the
+    table entry count is bounded on host (O(m)), rows are materialized on
+    device to the next power of two, and the chunk-range metadata is
+    computed in the same jit.  ``m_out`` (default ``g.m``) sizes the edge
+    state space (the batched/compacted callers pad it to a pow2 bucket);
+    ``m_real`` marks how many leading edge slots are real.
+    """
+    m_out = g.m if m_out is None else m_out
+    m_real = g.m if m_real is None else m_real
+    size = support_mod.peel_table_size(g)
+    if size == 0:
+        return _empty_peel_tables(m_out), 1, 1
+    size_pad = wedge_common.next_pow2(size)
+    support_mod._check_table_size(size_pad)
+    chunk_eff = wedge_common.pow2_chunk(size_pad, chunk, size=size)
+    n_chunks = size_pad // chunk_eff
+    if m_out != g.m:
+        # pow2 bucket (batched/compacted callers): pad the edge *and* vertex
+        # dimensions so the builder's compiled shapes are bucket-keyed.
+        # The padded copies are uploaded directly — no device_arrays() cache
+        # for a throwaway compaction subgraph.
+        u = jnp.asarray(wedge_common.pad1(g.El[:, 0], m_out, 0))
+        v = jnp.asarray(wedge_common.pad1(g.El[:, 1], m_out, 0))
+        n_es = wedge_common.next_pow2(g.n + 1)
+        Es = jnp.asarray(wedge_common.pad1(g.Es, n_es, 2 * g.m))
+    else:
+        dev = g.device_arrays()
+        u, v, Es = dev["El"][:, 0], dev["El"][:, 1], dev["Es"]
+    e1, cand, lo, hi, _off, c_start, c_end, has = \
+        support_mod._build_peel_table_dev(
+            u, v, Es, jnp.int32(m_real), m=m_out, size=size_pad,
+            chunk=chunk_eff)
+    tabs = PeelTables(e1=e1, cand_slot=cand, lo=lo, hi=hi, c_start=c_start,
+                      c_end=c_end, has_entries=has)
+    return tabs, chunk_eff, n_chunks
 
 
 def _active_chunk_mask(inCurr, tabs: PeelTables, m: int, n_chunks: int):
@@ -161,18 +213,25 @@ def _active_chunk_mask(inCurr, tabs: PeelTables, m: int, n_chunks: int):
 
 def _peel_loop(N, Eid, S_ext0, processed0, tabs: PeelTables, *, m: int,
                chunk: int, n_chunks: int, iters: int, mode: str,
-               interpret: bool = True, pinned=None):
+               interpret: bool = True, pinned=None, stop_live=None):
     """Full level/sub-level peel over extended (m+1,) edge state.
 
     ``S_ext0``/``processed0`` define which slots are live: slot m must be the
     processed sentinel, and callers may pre-mark extra padding slots as
-    processed (batched engine).  Returns (S_ext[:m], levels, sublevels).
+    processed (batched engine).  Returns (S_ext, processed, levels,
+    sublevels) — the full extended state, so segmented callers can resume.
 
     ``pinned`` (optional (m+1,) bool) marks *schedule* edges: they enter the
     frontier and process their triangles at exactly their initial support
     level, but never receive decrements themselves — the incremental layer
     (core/truss_inc.py) uses this to replay the known death level of
     boundary edges whose trussness is already final.  Slot m must be False.
+
+    ``stop_live`` (optional dynamic scalar) is the live-edge compaction
+    early-exit (DESIGN.md §10): the level loop returns once the number of
+    unprocessed edges drops to or below it — always at a level boundary, so
+    the caller can gather survivors into a compacted edge space and re-enter
+    with bitwise-identical continuation.
     """
 
     def chunk_contrib(c, dec, S_ext, processed, inCurr, l):
@@ -270,20 +329,23 @@ def _peel_loop(N, Eid, S_ext0, processed0, tabs: PeelTables, *, m: int,
         todo = (m + 1) - jnp.sum(processed.astype(jnp.int32))
         return S_ext, processed, l, todo, levels + 1, subs
 
+    stop = jnp.int32(0) if stop_live is None else stop_live
+
     def level_cond(state):
-        return state[3] > 0
+        return state[3] > stop
 
     todo0 = (m + 1) - jnp.sum(processed0.astype(jnp.int32))
     state = (S_ext0, processed0, jnp.int32(0), todo0, jnp.int32(0),
              jnp.int32(0))
-    S_ext, _, _, _, levels, subs = jax.lax.while_loop(
+    S_ext, processed, _, _, levels, subs = jax.lax.while_loop(
         level_cond, level_body, state)
-    return S_ext[:m], levels, subs
+    return S_ext, processed, levels, subs
 
 
 @functools.partial(
     jax.jit,
     static_argnames=("m", "chunk", "n_chunks", "iters", "mode", "interpret"),
+    donate_argnums=(2,),  # S0: consumed into the peel state, never reread
 )
 def _pkt_peel_jit(N, Eid, S0, tabs: PeelTables, *, m: int, chunk: int,
                   n_chunks: int, iters: int, mode: str = "chunked",
@@ -292,47 +354,329 @@ def _pkt_peel_jit(N, Eid, S0, tabs: PeelTables, *, m: int, chunk: int,
     # extended edge state: slot m is a sentinel (processed, never in frontier)
     S_ext0 = jnp.concatenate([S0.astype(jnp.int32), jnp.full((1,), _SENTINEL_S)])
     processed0 = jnp.zeros((m + 1,), jnp.bool_).at[m].set(True)
+    S_ext, _, levels, subs = _peel_loop(
+        N, Eid, S_ext0, processed0, tabs, m=m, chunk=chunk,
+        n_chunks=n_chunks, iters=iters, mode=mode, interpret=interpret)
+    return S_ext[:m], levels, subs
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("m", "chunk", "n_chunks", "iters", "mode", "interpret"),
+    donate_argnums=(2, 3),  # peel-state buffers: never reread by the driver
+)
+def _peel_segment_jit(N, Eid, S_ext0, processed0, stop_live, pinned,
+                      tabs: PeelTables, *, m: int, chunk: int, n_chunks: int,
+                      iters: int, mode: str, interpret: bool):
+    """One compaction segment: peel until done or ≤ ``stop_live`` edges live.
+
+    The peel-state buffers are donated — each segment consumes its inputs,
+    so the driver's peak device memory is one state generation, not two.
+    """
     return _peel_loop(N, Eid, S_ext0, processed0, tabs, m=m, chunk=chunk,
                       n_chunks=n_chunks, iters=iters, mode=mode,
-                      interpret=interpret)
+                      interpret=interpret, pinned=pinned,
+                      stop_live=stop_live)
 
 
-def pkt(g: CSRGraph, *, chunk: int = 1 << 14, mode: str = "chunked",
+# --- live-edge compaction (DESIGN.md §10) -----------------------------------
+#
+# Wang & Cheng's improved in-memory algorithm wins by *shrinking the graph*
+# as edges are peeled; the level-synchronous port above instead scans a
+# fixed-size table whose entries go dead as their edges process.  The driver
+# below restores the shrink: segments of the peel run under a live-edge
+# early-exit, and between segments the surviving edges are gathered into a
+# compacted edge space — vertices rank-relabeled, CSR rebuilt, the peel
+# table rebuilt (on device) over only live edges at the next pow2 size
+# class, and the (S, processed, pinned) state remapped.  The relabeling is
+# order-preserving, so the paper's lowest-edge-id tie-break picks the same
+# winners and the continuation is bitwise identical — levels, sub-levels
+# and the fixed point all match the uncompacted run; only dead wedge
+# entries are dropped.  pow2 bucketing of (m, n, table, chunk) bounds
+# recompiles exactly like the batched engine's size classes.
+
+#: default compaction policy: compact when the live fraction drops below
+#: ``_COMPACT_FRAC``, but never bother below ``_COMPACT_MIN`` live edges
+#: (table rebuild + dispatch overhead beats the dead-scan savings there)
+_COMPACT_FRAC = 0.25
+_COMPACT_MIN = 1 << 11
+_MIN_M_PAD = 8
+
+
+def _make_subproblem(El_rows: np.ndarray, ids: np.ndarray,
+                     S_rows: np.ndarray, pinned_rows: np.ndarray | None, *,
+                     chunk_req: int | None, table_mode: str) -> dict:
+    """Compact ``El_rows`` (live edges, ascending original order) into a
+    fresh pow2-bucketed peel problem.
+
+    ``ids`` maps each row to the caller's output slot; ``S_rows`` carries
+    the live supports (the continuation state), ``pinned_rows`` the pinned
+    schedule marks (or None).  Vertex ids are rank-relabeled —
+    order-preserving, so ``build_csr``'s lexicographic edge ids keep the
+    input row order and the peel tie-break is unchanged.
+    """
+    from repro.graphs.csr import build_csr
+
+    m_sub = El_rows.shape[0]
+    verts = np.unique(El_rows)
+    E_sub = np.searchsorted(verts, El_rows).astype(np.int64)
+    g_sub = build_csr(E_sub, verts.shape[0])
+    m_pad = max(_MIN_M_PAD, wedge_common.next_pow2(m_sub))
+
+    if table_mode == "device":
+        tabs, chunk_eff, n_chunks = prepare_peel_device(
+            g_sub, chunk_req, m_out=m_pad, m_real=m_sub)
+    else:
+        tab = support_mod.build_peel_table(g_sub)
+        if tab.size == 0:
+            tabs, chunk_eff, n_chunks = _empty_peel_tables(m_pad), 1, 1
+        else:
+            size_pad = wedge_common.next_pow2(tab.size)
+            chunk_eff = wedge_common.pow2_chunk(size_pad, chunk_req,
+                                                size=tab.size)
+            n_chunks = size_pad // chunk_eff
+            e1, cand, lo, hi = wedge_common.pad_chunked(
+                tab.e1, tab.cand_slot, tab.lo, tab.hi,
+                m=m_pad, chunk=chunk_eff, n_chunks=n_chunks)
+            has, c_start, c_end = chunk_ranges(tab.off, chunk_eff,
+                                               m_out=m_pad)
+            tabs = PeelTables(
+                e1=jnp.asarray(e1), cand_slot=jnp.asarray(cand),
+                lo=jnp.asarray(lo), hi=jnp.asarray(hi),
+                c_start=jnp.asarray(c_start), c_end=jnp.asarray(c_end),
+                has_entries=jnp.asarray(has))
+
+    S_ext0 = np.full(m_pad + 1, int(_SENTINEL_S), np.int32)
+    S_ext0[:m_sub] = S_rows
+    processed0 = np.ones(m_pad + 1, bool)
+    processed0[:m_sub] = False
+    ids_pad = np.full(m_pad, -1, np.int64)
+    ids_pad[:m_sub] = ids
+    pinned = None
+    pinned_np = None
+    if pinned_rows is not None and pinned_rows.any():
+        pinned_np = np.zeros(m_pad + 1, bool)
+        pinned_np[:m_sub] = pinned_rows
+        pinned = jnp.asarray(pinned_np)
+    return dict(
+        N=jnp.asarray(wedge_common.pad1(g_sub.N, 2 * m_pad,
+                                        wedge_common.PAD_N)),
+        Eid=jnp.asarray(wedge_common.pad1(g_sub.Eid, 2 * m_pad, m_pad)),
+        tabs=tabs, chunk=chunk_eff, n_chunks=n_chunks,
+        iters=int(np.ceil(np.log2(2 * m_pad + 1))) + 1, m=m_pad, live=m_sub,
+        S_ext0=jnp.asarray(S_ext0), processed0=jnp.asarray(processed0),
+        pinned=pinned, pinned_np=pinned_np, El=g_sub.El, ids=ids_pad)
+
+
+def _segmented_peel(problem: dict, out: np.ndarray, *, mode: str,
+                    interpret: bool, table_mode: str,
+                    compact_frac: float | None, compact_min: int,
+                    chunk_req: int | None,
+                    timings: dict | None = None) -> tuple[int, int, int]:
+    """Run ``problem`` to the fixed point, compacting between segments.
+
+    Each segment peels until ≤ ``compact_frac · m`` edges remain live (or to
+    completion when compaction is off / the problem is below
+    ``compact_min``); finished edges scatter their final S into ``out`` (at
+    ``problem['ids']`` slots) and survivors are re-bucketed via
+    ``_make_subproblem``.  Returns (levels, sublevels, compactions).
+    """
+    import time as _time
+
+    levels = subs = compactions = 0
+    while True:
+        m = problem["m"]
+        n_live = problem["live"]
+        live_target = 0
+        if compact_frac and n_live > compact_min:
+            # clamp below the live count so every segment must retire at
+            # least one level before the driver considers compacting again
+            live_target = min(int(compact_frac * m), n_live - 1)
+        t0 = _time.perf_counter()
+        S_ext, processed, lv, sb = _peel_segment_jit(
+            problem["N"], problem["Eid"], problem["S_ext0"],
+            problem["processed0"], jnp.int32(live_target), problem["pinned"],
+            problem["tabs"], m=m, chunk=problem["chunk"],
+            n_chunks=problem["n_chunks"], iters=problem["iters"], mode=mode,
+            interpret=interpret)
+        S_np = np.asarray(S_ext)[:m]
+        proc_np = np.asarray(processed)[:m]
+        levels += int(lv)
+        subs += int(sb)
+        if timings is not None:
+            timings["peel"] = timings.get("peel", 0.0) + \
+                (_time.perf_counter() - t0)
+        ids = problem["ids"]
+        live = ~proc_np
+        dead = proc_np & (ids >= 0)
+        out[ids[dead]] = S_np[dead]
+        if not live.any():
+            return levels, subs, compactions
+        # ≤ live_target survivors: gather them into a compacted edge space
+        t0 = _time.perf_counter()
+        compactions += 1
+        live_idx = np.nonzero(live)[0]
+        pin_np = problem["pinned_np"]
+        problem = _make_subproblem(
+            problem["El"][live_idx], ids[live_idx], S_np[live_idx],
+            None if pin_np is None else pin_np[:m][live_idx],
+            chunk_req=chunk_req, table_mode=table_mode)
+        assert problem["live"] < n_live  # compaction must strictly shrink
+        if timings is not None:
+            timings["compact"] = timings.get("compact", 0.0) + \
+                (_time.perf_counter() - t0)
+
+
+def peel_live_subset(El: np.ndarray, live_ids: np.ndarray,
+                     S0_live: np.ndarray,
+                     pinned_live: np.ndarray | None = None, *,
+                     chunk: int | None = None, mode: str = "chunked",
+                     interpret: bool | None = None,
+                     table_mode: str = "device",
+                     compact_frac: float | None = _COMPACT_FRAC,
+                     compact_min: int = _COMPACT_MIN) -> np.ndarray:
+    """Peel a subset of a graph's edges in a compacted edge space.
+
+    The compaction machinery as a standalone entry: ``live_ids`` (sorted
+    edge ids into ``El``) are gathered into a compact pow2-bucketed
+    subproblem — only their induced subgraph is materialized, so work is
+    bounded by the subset, not the host graph — and peeled to the fixed
+    point (with further compaction as the subset shrinks).  ``S0_live``
+    seeds the per-edge state; ``pinned_live`` marks schedule edges exactly
+    as in ``_peel_loop``.  Returns the final S per ``live_ids`` row.  Used
+    by ``core/truss_inc.py``'s masked re-peel regions.
+    """
+    live_ids = np.asarray(live_ids, dtype=np.int64)
+    k = live_ids.shape[0]
+    if k == 0:
+        return np.zeros(0, np.int32)
+    if k > 1 and not (np.diff(live_ids) > 0).all():
+        # ascending ids are what make the compacted relabeling
+        # order-preserving — the tie-break replay is silently wrong otherwise
+        raise ValueError("live_ids must be strictly increasing edge ids")
+    if interpret is None:
+        interpret = wedge_common.interpret_default()
+    out = np.zeros(k, np.int32)
+    problem = _make_subproblem(
+        np.asarray(El)[live_ids], np.arange(k, dtype=np.int64),
+        np.asarray(S0_live, dtype=np.int32),
+        None if pinned_live is None else np.asarray(pinned_live, bool),
+        chunk_req=chunk, table_mode=table_mode)
+    _segmented_peel(problem, out, mode=mode, interpret=interpret,
+                    table_mode=table_mode, compact_frac=compact_frac,
+                    compact_min=compact_min, chunk_req=chunk)
+    return out
+
+
+def pkt(g: CSRGraph, *, chunk: int | None = None, mode: str = "chunked",
         peel_mode: str | None = None, support_mode: str = "jnp",
+        table_mode: str | None = None,
         support_table: support_mod.WedgeTable | None = None,
         peel_table: support_mod.WedgeTable | None = None,
-        interpret: bool | None = None) -> PKTResult:
+        interpret: bool | None = None,
+        compact_frac: float | None = _COMPACT_FRAC,
+        compact_min: int = _COMPACT_MIN,
+        phase_timings: bool = False) -> PKTResult:
     """Full PKT truss decomposition. Returns trussness per edge (S+2).
 
     ``mode`` (alias ``peel_mode``, which wins when both are given) selects
     the peel executor and ``support_mode`` the support executor — the two
     axes are independent (see module docstring); ``interpret``
     forces/forbids Pallas interpret mode (default: interpret off-TPU).
+
+    ``table_mode`` selects where the wedge tables are built
+    (``support_mod.TABLE_MODES``): "device" — the default, unless prebuilt
+    host tables are passed — constructs them as jitted XLA programs over the
+    (cached) device CSR arrays, so no table bytes cross the host boundary;
+    "numpy" is the original host builder, kept as the parity oracle.
+
+    ``compact_frac`` / ``compact_min`` control live-edge compaction
+    (DESIGN.md §10): once a peel segment leaves fewer than
+    ``compact_frac · m`` edges live (and more than ``compact_min``),
+    survivors are gathered into a compacted pow2-bucketed subproblem and
+    peeling re-enters there.  ``compact_frac=None`` disables compaction.
+    Results are bitwise identical either way.  ``phase_timings`` populates
+    ``PKTResult.phases`` (adds sync barriers between phases).
     """
+    import time as _time
+
     mode = mode if peel_mode is None else peel_mode
     if mode not in PEEL_MODES:
         raise ValueError(f"mode must be one of {PEEL_MODES}, got {mode!r}")
     if support_mode not in support_mod.SUPPORT_MODES:
         raise ValueError(f"support_mode must be one of "
                          f"{support_mod.SUPPORT_MODES}, got {support_mode!r}")
+    if table_mode is None:
+        table_mode = ("numpy" if (support_table is not None
+                                  or peel_table is not None) else "device")
+    if table_mode not in support_mod.TABLE_MODES:
+        raise ValueError(f"table_mode must be one of "
+                         f"{support_mod.TABLE_MODES}, got {table_mode!r}")
+    timings: dict | None = {} if phase_timings else None
     if g.m == 0:
-        return PKTResult(np.zeros(0, np.int32), np.zeros(0, np.int32), 0, 0)
+        return PKTResult(np.zeros(0, np.int32), np.zeros(0, np.int32), 0, 0,
+                         phases=timings)
     if interpret is None:
         interpret = wedge_common.interpret_default()
-    S0 = support_mod.compute_support(g, support_table, mode=support_mode,
-                                     chunk=chunk, interpret=interpret)
-    ptab = peel_table if peel_table is not None else support_mod.build_peel_table(g)
-    tabs, chunk, n_chunks = prepare_peel(ptab, g.m, chunk)
-    S, levels, subs = _pkt_peel_jit(
-        jnp.asarray(g.N), jnp.asarray(g.Eid), jnp.asarray(S0), tabs,
-        m=g.m, chunk=chunk, n_chunks=n_chunks,
-        iters=support_mod._search_iters(g), mode=mode, interpret=interpret,
-    )
+
+    # ---- support phase -----------------------------------------------------
+    if table_mode == "device" and support_table is None:
+        S0_dev = support_mod._support_device(
+            g, mode=support_mode, chunk=chunk, interpret=interpret,
+            timings=timings)
+        S0 = np.asarray(S0_dev)
+    else:
+        t0 = _time.perf_counter()
+        stab = (support_table if support_table is not None
+                else support_mod.build_support_table(g))
+        if timings is not None:
+            timings["tables"] = timings.get("tables", 0.0) + \
+                (_time.perf_counter() - t0)
+        t0 = _time.perf_counter()
+        S0 = support_mod.compute_support(
+            g, stab, mode=support_mode, chunk=chunk, interpret=interpret)
+        S0_dev = jnp.asarray(S0)
+        if timings is not None:
+            timings["support"] = timings.get("support", 0.0) + \
+                (_time.perf_counter() - t0)
+
+    # ---- peel tables -------------------------------------------------------
+    t0 = _time.perf_counter()
+    if table_mode == "device" and peel_table is None:
+        tabs, chunk_eff, n_chunks = prepare_peel_device(g, chunk)
+        if timings is not None:
+            tabs.e1.block_until_ready()
+    else:
+        ptab = (peel_table if peel_table is not None
+                else support_mod.build_peel_table(g))
+        tabs, chunk_eff, n_chunks = prepare_peel(ptab, g.m, chunk)
+    if timings is not None:
+        timings["tables"] = timings.get("tables", 0.0) + \
+            (_time.perf_counter() - t0)
+
+    # ---- segmented peel with live-edge compaction --------------------------
+    dev = g.device_arrays()
+    m = g.m
+    S_ext0 = jnp.concatenate(
+        [S0_dev.astype(jnp.int32), jnp.full((1,), _SENTINEL_S)])
+    processed0 = jnp.zeros((m + 1,), jnp.bool_).at[m].set(True)
+    problem = dict(
+        N=dev["N"], Eid=dev["Eid"], tabs=tabs, chunk=chunk_eff,
+        n_chunks=n_chunks, iters=support_mod._search_iters(g), m=m, live=m,
+        S_ext0=S_ext0, processed0=processed0, pinned=None, pinned_np=None,
+        El=g.El, ids=np.arange(m, dtype=np.int64))
+    S_out = np.zeros(m, np.int32)
+    levels, subs, compactions = _segmented_peel(
+        problem, S_out, mode=mode, interpret=interpret,
+        table_mode=table_mode, compact_frac=compact_frac,
+        compact_min=compact_min, chunk_req=chunk, timings=timings)
     return PKTResult(
-        trussness=np.asarray(S) + 2,
-        support=np.asarray(S0),
-        levels=int(levels),
-        sublevels=int(subs),
+        trussness=S_out.astype(np.int32) + 2,
+        support=S0,
+        levels=levels,
+        sublevels=subs,
+        compactions=compactions,
+        phases=timings,
     )
 
 
@@ -373,8 +717,11 @@ def align_to_input(trussness: np.ndarray, g: CSRGraph,
 
 
 def truss_pkt(edges: np.ndarray, *, reorder: bool = True,
-              chunk: int = 1 << 14, mode: str = "chunked",
-              support_mode: str = "jnp") -> np.ndarray:
+              chunk: int | None = None, mode: str = "chunked",
+              support_mode: str = "jnp",
+              table_mode: str | None = None,
+              compact_frac: float | None = _COMPACT_FRAC,
+              compact_min: int = _COMPACT_MIN) -> np.ndarray:
     """Convenience entry: undirected edges → trussness aligned to input order.
 
     ``edges`` is any (k, 2) integer array: endpoint order is free and
@@ -403,5 +750,7 @@ def truss_pkt(edges: np.ndarray, *, reorder: bool = True,
         r_edges = E
         row_keys = edge_keys(lo, hi, n)
     g = build_csr(r_edges, n)
-    res = pkt(g, chunk=chunk, mode=mode, support_mode=support_mode)
+    res = pkt(g, chunk=chunk, mode=mode, support_mode=support_mode,
+              table_mode=table_mode, compact_frac=compact_frac,
+              compact_min=compact_min)
     return align_to_input(res.trussness, g, None, n, keys=row_keys)

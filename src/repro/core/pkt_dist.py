@@ -185,16 +185,24 @@ def _pad_to(x: np.ndarray, size: int, fill) -> np.ndarray:
 
 def pkt_dist(g: CSRGraph, mesh: jax.sharding.Mesh | None = None,
              axes: Sequence[str] = ("data",), chunk: int = 1 << 12,
-             support_mode: str = "jnp", interpret: bool | None = None):
+             support_mode: str = "jnp", table_mode: str = "device",
+             interpret: bool | None = None):
     """Run distributed PKT on the available devices. Returns trussness (m,).
 
     ``support_mode`` selects the per-shard support executor ("jnp" or
     "pallas", see ``core.support.SUPPORT_MODES``); the peel phase is the
-    sharded BSP loop in either case.
+    sharded BSP loop in either case.  ``table_mode="device"`` (the default)
+    builds both wedge tables with the jitted XLA builders directly at the
+    shard-rounded padded sizes — the shard_map then redistributes
+    device-resident slices instead of uploading host tables several× the
+    graph size; "numpy" keeps the host builders as the parity oracle.
     """
     if support_mode not in support_mod.SUPPORT_MODES:
         raise ValueError(f"support_mode must be one of "
                          f"{support_mod.SUPPORT_MODES}, got {support_mode!r}")
+    if table_mode not in support_mod.TABLE_MODES:
+        raise ValueError(f"table_mode must be one of "
+                         f"{support_mod.TABLE_MODES}, got {table_mode!r}")
     if mesh is None:
         dev = np.array(jax.devices())
         mesh = jax.sharding.Mesh(dev, ("data",))
@@ -203,9 +211,10 @@ def pkt_dist(g: CSRGraph, mesh: jax.sharding.Mesh | None = None,
         interpret = wedge_common.interpret_default()
     n_shards = int(np.prod([mesh.shape[a] for a in axes]))
     iters = support_mod._search_iters(g)
+    gdev = g.device_arrays()
 
-    stab = support_mod.build_support_table(g)
-    per_shard = max(1, -(-max(stab.size, 1) // n_shards))
+    s_size = support_mod.support_table_size(g)
+    per_shard = max(1, -(-max(s_size, 1) // n_shards))
     sup_chunk = 0
     if support_mode == "pallas":
         # each shard lowers the kernel over its slice: the slice must be a
@@ -213,25 +222,40 @@ def pkt_dist(g: CSRGraph, mesh: jax.sharding.Mesh | None = None,
         sup_chunk = min(chunk, 1 << 13)
         per_shard = -(-per_shard // sup_chunk) * sup_chunk
     ssize = per_shard * n_shards
+    if table_mode == "device":
+        support_mod._check_table_size(ssize)
+        s_e1, s_cand, s_lo, s_hi, _ = support_mod._build_support_table_dev(
+            gdev["El"][:, 0], gdev["El"][:, 1], gdev["Es"], gdev["Eo"],
+            jnp.int32(g.m), m=g.m, size=ssize)
+    else:
+        stab = support_mod.build_support_table(g)
+        s_e1 = jnp.asarray(_pad_to(stab.e1, ssize, g.m))
+        s_cand = jnp.asarray(_pad_to(stab.cand_slot, ssize, 0))
+        s_lo = jnp.asarray(_pad_to(stab.lo, ssize, 0))
+        s_hi = jnp.asarray(_pad_to(stab.hi, ssize, 0))
     sup_fn = make_support_dist(mesh, axes, m=g.m, iters=iters,
                                mode=support_mode, chunk=sup_chunk,
                                interpret=interpret)
-    S0 = sup_fn(jnp.asarray(g.N), jnp.asarray(g.Eid),
-                jnp.asarray(_pad_to(stab.e1, ssize, g.m)),
-                jnp.asarray(_pad_to(stab.cand_slot, ssize, 0)),
-                jnp.asarray(_pad_to(stab.lo, ssize, 0)),
-                jnp.asarray(_pad_to(stab.hi, ssize, 0)))
+    S0 = sup_fn(gdev["N"], gdev["Eid"], s_e1, s_cand, s_lo, s_hi)
 
-    ptab = support_mod.build_peel_table(g)
-    per = max(chunk, -(-max(ptab.size, 1) // n_shards))
+    p_size = support_mod.peel_table_size(g)
+    per = max(chunk, -(-max(p_size, 1) // n_shards))
     per = -(-per // chunk) * chunk           # round to chunk multiple
     psize = per * n_shards
+    if table_mode == "device":
+        support_mod._check_table_size(psize)
+        p_e1, p_cand, p_lo, p_hi, _off, _cs, _ce, _has = \
+            support_mod._build_peel_table_dev(
+                gdev["El"][:, 0], gdev["El"][:, 1], gdev["Es"],
+                jnp.int32(g.m), m=g.m, size=psize, chunk=chunk)
+    else:
+        ptab = support_mod.build_peel_table(g)
+        p_e1 = jnp.asarray(_pad_to(ptab.e1, psize, g.m))
+        p_cand = jnp.asarray(_pad_to(ptab.cand_slot, psize, 0))
+        p_lo = jnp.asarray(_pad_to(ptab.lo, psize, 0))
+        p_hi = jnp.asarray(_pad_to(ptab.hi, psize, 0))
     peel_fn = make_pkt_dist(mesh, axes, m=g.m, two_m=2 * g.m,
                             table_size=psize, iters=iters, chunk=chunk)
-    S, levels, subs = peel_fn(
-        jnp.asarray(g.N), jnp.asarray(g.Eid), S0,
-        jnp.asarray(_pad_to(ptab.e1, psize, g.m)),
-        jnp.asarray(_pad_to(ptab.cand_slot, psize, 0)),
-        jnp.asarray(_pad_to(ptab.lo, psize, 0)),
-        jnp.asarray(_pad_to(ptab.hi, psize, 0)))
+    S, levels, subs = peel_fn(gdev["N"], gdev["Eid"], S0,
+                              p_e1, p_cand, p_lo, p_hi)
     return np.asarray(S).astype(np.int64) + 2

@@ -46,11 +46,16 @@ import jax.numpy as jnp
 
 from repro.graphs.csr import CSRGraph
 from repro.kernels.wedge_common import (chunk_layout, interpret_default,
-                                        pad_chunked, probe,
-                                        ranged_searchsorted)
+                                        next_pow2, pad_chunked, pow2_chunk,
+                                        probe, ranged_searchsorted)
 
 #: executors for the support phase; "pallas" = kernels/support.py
 SUPPORT_MODES = ("jnp", "pallas")
+
+#: where wedge tables are constructed: "numpy" is the original host builder
+#: (kept as the parity oracle), "device" the jitted XLA builder below —
+#: tables never round-trip through host memory
+TABLE_MODES = ("numpy", "device")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -125,6 +130,185 @@ def build_peel_table(g: CSRGraph) -> WedgeTable:
     )
 
 
+# --- device-side table construction (DESIGN.md §10) -------------------------
+#
+# The builders above materialize Θ(Σ d·d)-entry tables in host numpy and pay
+# a host→device transfer several× the graph size on every decomposition.  The
+# jitted XLA mirrors below build the same rows *on device* from the CSR
+# arrays alone: per-edge candidate counts, segment offsets via cumsum, and
+# the row→edge assignment as one vectorized ``searchsorted`` over the offset
+# array (the segment-expansion idiom).  Rows are materialized to a *static*
+# pow2-padded ``size`` (the exact entry count is data-dependent; the cheap
+# O(m) host calculators below bound it before the jit runs), with the same
+# inert-padding contract as ``wedge_common.pad_chunked``: anchor sentinel
+# ``m``, empty probe range ``lo == hi == 0``.  ``m_real`` is a dynamic
+# scalar so the batched engine can reuse one compiled builder for every
+# graph of a size class — and vmap it across the class.
+
+#: device tables carry int32 offsets; reject anything larger outright
+_MAX_TABLE = np.iinfo(np.int32).max
+
+
+def support_table_size(g: CSRGraph) -> int:
+    """Exact entry count of ``build_support_table(g)`` — O(m) host work."""
+    if g.m == 0:
+        return 0
+    v = g.El[:, 1].astype(np.int64)
+    return int((g.Es.astype(np.int64)[v + 1] - g.Eo.astype(np.int64)[v]).sum())
+
+
+def peel_table_size(g: CSRGraph) -> int:
+    """Exact entry count of ``build_peel_table(g)`` — O(m) host work."""
+    if g.m == 0:
+        return 0
+    Es = g.Es.astype(np.int64)
+    deg = Es[1:] - Es[:-1]
+    return int(np.minimum(deg[g.El[:, 0]], deg[g.El[:, 1]]).sum())
+
+
+def _check_table_size(size: int) -> None:
+    """Guard the int32 device-table layout.
+
+    ``size`` must be the number of rows the builder will *materialize* —
+    i.e. the padded size (pow2, or shard-rounded), not the raw entry count:
+    a raw count just under 2^31 still pads past the int32 range.
+    """
+    if size > _MAX_TABLE:
+        raise ValueError(
+            f"wedge table of {size} (padded) entries exceeds the int32 "
+            f"device-table layout; use table_mode='numpy' (int64 host "
+            f"offsets)")
+
+
+def _expand_segments(off, size: int, m: int):
+    """Row → segment assignment for a cumsum offset array ``off`` (m+1,).
+
+    Returns ``(e1, e1c, intra, valid)``: the owning segment of each of the
+    ``size`` rows (``m`` for rows beyond ``off[m]``), a clamped variant safe
+    as a gather index, the offset within the segment, and the validity mask.
+    """
+    idx = jnp.arange(size, dtype=jnp.int32)
+    e1 = jnp.searchsorted(off[1:], idx, side="right").astype(jnp.int32)
+    e1c = jnp.minimum(e1, m - 1)
+    valid = idx < off[m]
+    intra = idx - off[e1c]
+    return jnp.where(valid, e1, m), e1c, intra, valid
+
+
+@functools.partial(jax.jit, static_argnames=("m", "size"))
+def _build_support_table_dev(u, v, Es, Eo, m_real, *, m: int, size: int):
+    """Device mirror of ``build_support_table`` at static padded ``size``.
+
+    ``u``/``v``: (m,) edge endpoints (rows >= ``m_real`` are inert padding);
+    ``Es``: (n_pad+1,) CSR offsets; ``Eo``: (n_pad,).  Returns
+    ``(e1, cand_slot, lo, hi, off)`` with the pad_chunked sentinel contract.
+    """
+    ar = jnp.arange(m, dtype=jnp.int32)
+    cnt = jnp.where(ar < m_real, Es[v + 1] - Eo[v], 0)
+    off = jnp.zeros((m + 1,), jnp.int32).at[1:].set(jnp.cumsum(cnt))
+    e1, e1c, intra, valid = _expand_segments(off, size, m)
+    cand = jnp.where(valid, Eo[v[e1c]] + intra, 0)
+    lo = jnp.where(valid, Eo[u[e1c]], 0)
+    hi = jnp.where(valid, Es[u[e1c] + 1], 0)
+    return e1, cand, lo, hi, off
+
+
+@functools.partial(jax.jit, static_argnames=("m", "size", "chunk"))
+def _build_peel_table_dev(u, v, Es, m_real, *, m: int, size: int, chunk: int):
+    """Device mirror of ``build_peel_table`` + per-edge chunk-range metadata.
+
+    Same row semantics as the host builder (candidates from the
+    min-degree endpoint's full adjacency, probes against the other); also
+    emits the ``chunk_ranges`` bookkeeping for the given static ``chunk`` so
+    the peel loop's chunk-skipping needs no host pass.  Returns
+    ``(e1, cand_slot, lo, hi, off, c_start, c_end, has_entries)``.
+    """
+    deg = Es[1:] - Es[:-1]
+    swap = deg[u] > deg[v]
+    cand_v = jnp.where(swap, v, u)               # scan this side
+    prob_v = jnp.where(swap, u, v)               # binary-search this side
+    ar = jnp.arange(m, dtype=jnp.int32)
+    cnt = jnp.where(ar < m_real, deg[cand_v], 0)
+    off = jnp.zeros((m + 1,), jnp.int32).at[1:].set(jnp.cumsum(cnt))
+    e1, e1c, intra, valid = _expand_segments(off, size, m)
+    cand = jnp.where(valid, Es[cand_v[e1c]] + intra, 0)
+    lo = jnp.where(valid, Es[prob_v[e1c]], 0)
+    hi = jnp.where(valid, Es[prob_v[e1c] + 1], 0)
+    has = off[1:] > off[:-1]
+    c_start = off[:-1] // chunk
+    c_end = jnp.maximum(off[1:] - 1, 0) // chunk
+    return e1, cand, lo, hi, off, c_start, c_end, has
+
+
+def support_from_table_arrays(e1, cand, lo, hi, N, Eid, *, m: int, mode: str,
+                              chunk: int, n_chunks: int, iters: int,
+                              interpret: bool):
+    """Run the selected support executor over prepared table arrays → (m,) S.
+
+    Trace-level helper (call inside a jit): the single home of the
+    executor dispatch + sentinel/target-folding contract, shared by the
+    fused single-graph program below and the batched engine
+    (``serve.truss_engine._batched_truss_dev``).  Table arrays follow the
+    ``pad_chunked`` convention and must span ``n_chunks * chunk`` rows.
+    """
+    if mode == "pallas":
+        from repro.kernels.support import (fold_support_targets,
+                                           support_hit_targets)
+
+        tgt1, tgt2, tgt3, _ = support_hit_targets(
+            e1, cand, lo, hi, N, Eid, chunk=chunk, n_chunks=n_chunks,
+            iters=iters, m=m, interpret=interpret)
+        return fold_support_targets(tgt1, tgt2, tgt3, m=m)[:m]
+    return _support_jit(N, Eid, e1, cand, lo, hi, iters, m)
+
+
+@functools.partial(jax.jit, static_argnames=("m", "size", "mode", "chunk",
+                                             "n_chunks", "iters",
+                                             "interpret"))
+def _support_device_jit(u, v, Es, Eo, N, Eid, m_real, *, m: int, size: int,
+                        mode: str, chunk: int, n_chunks: int, iters: int,
+                        interpret: bool):
+    """Fused device program: build the oriented table *and* run the support
+    executor in one jit — one compile on the open path, and in jnp mode XLA
+    can fuse the row construction into the probe (the table is never
+    materialized to HBM)."""
+    e1, cand, lo, hi, _ = _build_support_table_dev(
+        u, v, Es, Eo, m_real, m=m, size=size)
+    return support_from_table_arrays(
+        e1, cand, lo, hi, N, Eid, m=m, mode=mode, chunk=chunk,
+        n_chunks=n_chunks, iters=iters, interpret=interpret)
+
+
+def _support_device(g: CSRGraph, *, mode: str, chunk: int | None,
+                    interpret: bool, timings: dict | None = None):
+    """Support phase with the table built on device; returns a (m,) device
+    array (no host round-trip — ``pkt`` feeds it straight to the peel).
+
+    Table construction and the probe run as one fused jit, so with
+    ``timings`` the combined cost is attributed to "support" ("tables"
+    then covers only the peel-table build)."""
+    import time as _time
+
+    size = support_table_size(g)
+    if size == 0:
+        return jnp.zeros((g.m,), jnp.int32)
+    size_pad = next_pow2(size)
+    _check_table_size(size_pad)
+    dev = g.device_arrays()
+    chunk_eff = pow2_chunk(size_pad, chunk, size=size)
+    t0 = _time.perf_counter()
+    S = _support_device_jit(
+        dev["El"][:, 0], dev["El"][:, 1], dev["Es"], dev["Eo"],
+        dev["N"], dev["Eid"], jnp.int32(g.m), m=g.m, size=size_pad,
+        mode=mode, chunk=chunk_eff, n_chunks=size_pad // chunk_eff,
+        iters=_search_iters(g, oriented=True), interpret=interpret)
+    if timings is not None:
+        S.block_until_ready()
+        timings["support"] = timings.get("support", 0.0) + \
+            (_time.perf_counter() - t0)
+    return S
+
+
 # ``ranged_searchsorted`` lives in kernels/wedge_common.py (shared with the
 # Pallas kernels) and is re-exported here for its established call sites
 # (core/pkt.py, core/pkt_dist.py, core/triangle_list.py, benchmarks).
@@ -156,18 +340,33 @@ def _support_jit(N, Eid, e1, cand_slot, lo, hi, iters: int, m: int):
 
 
 def compute_support(g: CSRGraph, table: WedgeTable | None = None, *,
-                    mode: str = "jnp", chunk: int = 1 << 14,
-                    interpret: bool | None = None) -> np.ndarray:
+                    mode: str = "jnp", chunk: int | None = None,
+                    interpret: bool | None = None,
+                    table_mode: str | None = None) -> np.ndarray:
     """Edge support (triangles per edge) via the AM4 adaptation. Returns (m,).
 
     ``mode`` selects the executor (see module docstring): "jnp" is the flat
     XLA program, "pallas" the chunked VMEM kernel (``chunk`` entries per grid
-    step; ``interpret`` forces/forbids interpret mode, default off-TPU).
+    step, auto-derived from the table size when None; ``interpret``
+    forces/forbids interpret mode, default off-TPU).  ``table_mode`` selects
+    where the wedge table is constructed (``TABLE_MODES``): "device" (the
+    default when no prebuilt ``table`` is passed) runs the jitted XLA
+    builder, "numpy" the original host builder.
     """
     if mode not in SUPPORT_MODES:
         raise ValueError(f"mode must be one of {SUPPORT_MODES}, got {mode!r}")
+    if table_mode is None:
+        table_mode = "numpy" if table is not None else "device"
+    if table_mode not in TABLE_MODES:
+        raise ValueError(
+            f"table_mode must be one of {TABLE_MODES}, got {table_mode!r}")
     if g.m == 0:
         return np.zeros(0, np.int32)
+    if table_mode == "device" and table is None:
+        if interpret is None:
+            interpret = interpret_default()
+        return np.asarray(
+            _support_device(g, mode=mode, chunk=chunk, interpret=interpret))
     if table is None:
         table = build_support_table(g)
     if table.size == 0:

@@ -31,9 +31,11 @@ region-local; a few O(m) vectorized mask/bound passes per step remain):
      level ``trussness − 2`` and shielded from decrements, replaying
      exactly the removal schedule the full peel would produce.  Small
      regions (the steady-state case) run a host-numpy mirror of the
-     sub-level loop; larger ones run the *existing* ``core.pkt._peel_loop``
-     on a masked frontier (all three peel executors support the pinned
-     mask).
+     sub-level loop; larger ones run the live-edge compaction machinery
+     (``core.pkt.peel_live_subset``, DESIGN.md §10): the region is gathered
+     into a compacted pow2-bucketed edge space — device work bounded by the
+     region, not the graph — and peeled there (all three peel executors
+     support the pinned mask).
   4. **Fallback** — when a region exceeds ``local_frac`` of the edge set,
      local repair stops paying and the update falls back to the full
      (support + peel) pipeline, refreshing all retained state.
@@ -47,25 +49,17 @@ The serving layer wraps this in a persistent handle
 from __future__ import annotations
 
 import dataclasses
-import functools
 import time
 
 import numpy as np
-
-import jax
-import jax.numpy as jnp
 
 from repro.graphs.csr import (CSRGraph, build_csr, canonical_edges_with_rows,
                               check_edge_array, degeneracy_order, edge_keys,
                               relabel)
 from repro.core import support as support_mod
-from repro.core.pkt import (PEEL_MODES, PeelTables, _SENTINEL_S, _peel_loop,
-                            align_to_input, chunk_ranges, pkt)
+from repro.core.pkt import (_COMPACT_FRAC, _COMPACT_MIN, PEEL_MODES,
+                            align_to_input, peel_live_subset, pkt)
 from repro.kernels import wedge_common
-from repro.kernels.wedge_common import next_pow2, pad1
-
-_MIN_M_PAD = 8
-
 
 @dataclasses.dataclass(frozen=True)
 class UpdateStats:
@@ -326,18 +320,6 @@ def _host_peel(n_loc: int, tri_loc: np.ndarray, S0: np.ndarray,
     return S
 
 
-@functools.partial(
-    jax.jit,
-    static_argnames=("m", "chunk", "n_chunks", "iters", "mode", "interpret"),
-)
-def _local_peel_jit(N, Eid, S_ext0, processed0, pinned, tabs: PeelTables, *,
-                    m: int, chunk: int, n_chunks: int, iters: int, mode: str,
-                    interpret: bool):
-    return _peel_loop(N, Eid, S_ext0, processed0, tabs, m=m, chunk=chunk,
-                      n_chunks=n_chunks, iters=iters, mode=mode,
-                      interpret=interpret, pinned=pinned)
-
-
 # --------------------------------------------------------------- the state --
 
 class IncrementalTruss:
@@ -356,8 +338,11 @@ class IncrementalTruss:
     """
 
     def __init__(self, edges, *, n: int | None = None, mode: str = "chunked",
-                 support_mode: str = "jnp", chunk: int = 1 << 12,
+                 support_mode: str = "jnp", table_mode: str = "device",
+                 chunk: int = 1 << 12,
                  local_frac: float = 0.25, host_peel_max: int = 4096,
+                 compact_frac: float | None = _COMPACT_FRAC,
+                 compact_min: int = _COMPACT_MIN,
                  interpret: bool | None = None):
         if mode not in PEEL_MODES:
             raise ValueError(f"mode must be one of {PEEL_MODES}, got {mode!r}")
@@ -365,13 +350,20 @@ class IncrementalTruss:
             raise ValueError(
                 f"support_mode must be one of {support_mod.SUPPORT_MODES}, "
                 f"got {support_mode!r}")
+        if table_mode not in support_mod.TABLE_MODES:
+            raise ValueError(
+                f"table_mode must be one of {support_mod.TABLE_MODES}, "
+                f"got {table_mode!r}")
         if chunk < 1:
             raise ValueError("chunk must be positive")
         if not 0.0 <= local_frac <= 1.0:
             raise ValueError("local_frac must be in [0, 1]")
         self.mode = mode
         self.support_mode = support_mode
-        self.chunk = next_pow2(chunk)
+        self.table_mode = table_mode
+        self.compact_frac = compact_frac
+        self.compact_min = int(compact_min)
+        self.chunk = wedge_common.next_pow2(chunk)
         self.local_frac = float(local_frac)
         self.host_peel_max = int(host_peel_max)
         self.interpret = (wedge_common.interpret_default()
@@ -651,7 +643,7 @@ class IncrementalTruss:
         at their known death level.  Returns the new peel values + 2 for
         ``A`` (same order).  ``live_mask`` masks absent edges (insertion
         phase).  Dispatches to the host mirror for small regions and to the
-        masked ``_peel_loop`` above ``host_peel_max``."""
+        compacted ``peel_live_subset`` above ``host_peel_max``."""
         m = g.m
         rows = inc.tri[np.unique(inc.rows_of(A))] if inc.tri.size else \
             np.zeros((0, 3), np.int64)
@@ -683,8 +675,17 @@ class IncrementalTruss:
                                S0, live, pinned)
             tau_L = S_fin + 2
         else:
-            tau_L = self._jax_region_peel(g, A, boundary, in_A, S_vec, T_fix,
-                                          live_mask)[L]
+            # larger regions reuse the live-edge compaction machinery
+            # (core.pkt.peel_live_subset): the region is gathered into a
+            # compacted pow2-bucketed edge space — work bounded by |L|, not
+            # m — with boundary edges pinned at their death level, and the
+            # driver keeps compacting as the region itself peels away
+            S0 = np.where(in_A[L], S_vec[L], T_fix[L] - 2)
+            S_fin = peel_live_subset(
+                g.El, L, S0, ~in_A[L], chunk=self.chunk, mode=self.mode,
+                interpret=self.interpret, table_mode=self.table_mode,
+                compact_frac=self.compact_frac, compact_min=self.compact_min)
+            tau_L = S_fin.astype(np.int64) + 2
         # replay invariant: pinned edges must die exactly at their schedule.
         # A real raise (not a bare assert, which -O strips): a violation
         # means the re-peel would commit corrupt trussness into the handle.
@@ -693,47 +694,6 @@ class IncrementalTruss:
                 "incremental re-peel integrity violation: a pinned boundary "
                 "edge left its death level — please report this graph")
         return tau_L[np.searchsorted(L, A)]
-
-    def _jax_region_peel(self, g: CSRGraph, A, boundary, in_A, S_vec, T_fix,
-                         live_mask):
-        """Masked-frontier ``_peel_loop`` over the full edge space: region
-        live at its support, boundary pinned at its death level, everything
-        else (including absent edges) pre-marked processed."""
-        m = g.m
-        L = np.union1d(A, boundary)
-        tab = wedge_subtable(g, L)
-        m_pad = max(_MIN_M_PAD, next_pow2(m))
-        peel_pad = next_pow2(max(1, tab.size))
-        chunk = min(self.chunk, peel_pad)
-        n_chunks = peel_pad // chunk
-        e1, cand, lo, hi = wedge_common.pad_chunked(
-            tab.e1, tab.cand_slot, tab.lo, tab.hi,
-            m=m_pad, chunk=chunk, n_chunks=n_chunks)
-        has, c_start, c_end = chunk_ranges(tab.off, chunk, m_out=m_pad)
-        tabs = PeelTables(
-            e1=jnp.asarray(e1), cand_slot=jnp.asarray(cand),
-            lo=jnp.asarray(lo), hi=jnp.asarray(hi),
-            c_start=jnp.asarray(c_start), c_end=jnp.asarray(c_end),
-            has_entries=jnp.asarray(has))
-
-        S0 = np.full(m_pad + 1, int(_SENTINEL_S), np.int32)
-        S0[A] = S_vec[A]
-        S0[boundary] = (T_fix[boundary] - 2).astype(np.int32)
-        live = np.zeros(m_pad + 1, bool)
-        live[L] = True
-        if live_mask is not None:
-            live[:m] &= live_mask      # absent edges stay processed
-        pinned = np.zeros(m_pad + 1, bool)
-        pinned[boundary] = True
-
-        iters = int(np.ceil(np.log2(2 * m_pad + 1))) + 1
-        S_fin, _, _ = _local_peel_jit(
-            jnp.asarray(pad1(g.N, 2 * m_pad, wedge_common.PAD_N)),
-            jnp.asarray(pad1(g.Eid, 2 * m_pad, m_pad)),
-            jnp.asarray(S0), jnp.asarray(~live), jnp.asarray(pinned), tabs,
-            m=m_pad, chunk=chunk, n_chunks=n_chunks, iters=iters,
-            mode=self.mode, interpret=self.interpret)
-        return np.asarray(S_fin)[:m].astype(np.int64) + 2
 
     # ---------------------------------------------------------- internals --
     @staticmethod
@@ -755,6 +715,7 @@ class IncrementalTruss:
         """From-scratch decomposition through the standard (KCO) pipeline."""
         g = build_csr(E, self.n)
         if g.m == 0:
+            self.open_phases = {}
             self._commit(g, np.zeros(0, np.int64), np.zeros(0, np.int32),
                          np.zeros((0, 3), np.int64))
             return
@@ -762,7 +723,13 @@ class IncrementalTruss:
         r_edges = relabel(E, perm)
         gr = build_csr(r_edges, self.n)
         res = pkt(gr, chunk=self.chunk, mode=self.mode,
-                  support_mode=self.support_mode, interpret=self.interpret)
+                  support_mode=self.support_mode, table_mode=self.table_mode,
+                  compact_frac=self.compact_frac,
+                  compact_min=self.compact_min, interpret=self.interpret,
+                  phase_timings=True)
+        #: phase breakdown of the most recent full (re)build — the open
+        #: path's table-build vs support vs peel cost (benchmarks read it)
+        self.open_phases = dict(res.phases or {})
         u = g.El[:, 0].astype(np.int64)
         v = g.El[:, 1].astype(np.int64)
         rl, rh = perm[u], perm[v]

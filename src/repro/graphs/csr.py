@@ -109,6 +109,30 @@ class CSRGraph:
     Eid: np.ndarray  # (2m,) int32
     El: np.ndarray   # (m, 2) int32
     Eo: np.ndarray   # (n,) int32
+    #: lazy per-graph cache of device copies (see ``device_arrays``); a
+    #: mutable field on a frozen dataclass so repeated decompositions of one
+    #: graph share uploads without the graph itself becoming mutable
+    _dev: dict = dataclasses.field(default_factory=dict, repr=False,
+                                   compare=False)
+
+    def device_arrays(self) -> dict:
+        """Device copies of the CSR arrays, uploaded once per graph.
+
+        Every decomposition entry point (``pkt``, ``compute_support``,
+        ``truss_inc`` repairs, ``pkt_dist``) gathers against ``N``/``Eid``
+        and — with device-side table construction — reads ``Es``/``Eo``/
+        ``El`` on device too; before this cache each call re-uploaded the
+        same arrays.  Keys: ``N, Eid, Es, Eo, El``.  jax is imported lazily
+        so the graph container stays usable in numpy-only contexts.
+        """
+        if not self._dev:
+            import jax.numpy as jnp
+
+            self._dev.update(
+                N=jnp.asarray(self.N), Eid=jnp.asarray(self.Eid),
+                Es=jnp.asarray(self.Es), Eo=jnp.asarray(self.Eo),
+                El=jnp.asarray(self.El))
+        return self._dev
 
     @property
     def degrees(self) -> np.ndarray:

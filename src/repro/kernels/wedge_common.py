@@ -50,6 +50,47 @@ def next_pow2(x: int) -> int:
     return 1 << max(0, int(x - 1).bit_length())
 
 
+#: auto-chunk policy: aim for this many chunks per wedge table, so that the
+#: chunk-skipping while_loop has skippable units even on small graphs …
+AUTO_CHUNK_TARGET = 16
+#: … clamped to this band (below: per-chunk dispatch overhead dominates;
+#: above: a chunk's VMEM block outgrows the kernel budget)
+AUTO_CHUNK_MIN = 1 << 7
+AUTO_CHUNK_MAX = 1 << 14
+
+
+def auto_chunk(size: int, *, target: int = AUTO_CHUNK_TARGET,
+               lo: int = AUTO_CHUNK_MIN, hi: int = AUTO_CHUNK_MAX) -> int:
+    """Derive a chunk size from the table size (used when none is requested).
+
+    Returns a power of two sized so the table splits into roughly ``target``
+    chunks, clamped to ``[lo, hi]``.  The old fixed ``1 << 14`` default made
+    every table smaller than 16Ki entries a *single* chunk, so the
+    work-efficient chunk-skipping executor scanned the whole table every
+    sub-level while still paying the while_loop machinery — the
+    chunked-slower-than-dense pathology BENCH_smoke.json showed on tiny
+    graphs.  Large tables still get the VMEM-budget chunk ``hi``.
+    """
+    size = max(1, int(size))
+    want = next_pow2(-(-size // max(1, int(target))))
+    return int(min(hi, max(lo, want)))
+
+
+def pow2_chunk(size_pad: int, chunk: int | None, *,
+               size: int | None = None) -> int:
+    """Chunk size for a pow2-padded table: a power of two dividing ``size_pad``.
+
+    ``chunk=None`` applies the ``auto_chunk`` policy against the *real*
+    table size (``size``, defaulting to ``size_pad``); an explicit chunk is
+    rounded down to a power of two so it always divides the padded table.
+    """
+    if chunk is None:
+        chunk = auto_chunk(size_pad if size is None else size)
+    else:
+        chunk = 1 << max(0, int(chunk).bit_length() - 1)
+    return max(1, min(int(chunk), int(size_pad)))
+
+
 def pad1(x: np.ndarray, size: int, fill) -> np.ndarray:
     """Right-pad a 1-D int array to ``size`` with ``fill`` (int32 out)."""
     out = np.full(size, fill, np.int32)
@@ -57,15 +98,18 @@ def pad1(x: np.ndarray, size: int, fill) -> np.ndarray:
     return out
 
 
-def chunk_layout(size: int, chunk: int) -> tuple[int, int]:
+def chunk_layout(size: int, chunk: int | None = None) -> tuple[int, int]:
     """Sanitize a requested chunk size against a table of ``size`` entries.
 
     Returns ``(chunk, n_chunks)`` with ``1 <= chunk`` and ``n_chunks >= 1``:
     a chunk larger than the table, zero, or negative is clamped; a zero-entry
     table yields one all-padding chunk of size 1 (callers that want to skip
     the kernel entirely for empty tables early-exit before this).
+    ``chunk=None`` derives the size from the table via ``auto_chunk``.
     """
     size = max(1, int(size))
+    if chunk is None:
+        chunk = auto_chunk(size)
     chunk = max(1, min(int(chunk), size))
     return chunk, -(-size // chunk)
 

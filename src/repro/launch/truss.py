@@ -56,7 +56,8 @@ def run_update_stream(args) -> None:
     E = named_graph(args.graph)
     n = int(E.max()) + 1
     eng = TrussEngine(mode=args.mode, support_mode=args.support_mode,
-                      chunk=args.chunk)
+                      table_mode=args.table_mode,
+                      chunk=args.chunk or (1 << 12))
     t0 = time.perf_counter()
     h = eng.open(E, local_frac=args.local_frac)
     t_open = time.perf_counter() - t0
@@ -92,12 +93,21 @@ def main(argv=None):
     ap.add_argument("--order", default="kco", choices=["kco", "natural"])
     ap.add_argument("--engine", default="pkt",
                     choices=["pkt", "dist", "trilist", "wc", "ros"])
-    ap.add_argument("--chunk", type=int, default=1 << 14)
+    ap.add_argument("--chunk", type=int, default=None,
+                    help="peel chunk size (default: derived from the table "
+                         "size, see kernels.wedge_common.auto_chunk)")
     from repro.core.pkt import PEEL_MODES
-    from repro.core.support import SUPPORT_MODES
+    from repro.core.support import SUPPORT_MODES, TABLE_MODES
     ap.add_argument("--mode", default="chunked", choices=list(PEEL_MODES))
     ap.add_argument("--support-mode", default="jnp",
                     choices=list(SUPPORT_MODES))
+    ap.add_argument("--table-mode", default="device",
+                    choices=list(TABLE_MODES),
+                    help="where wedge tables are built: jitted XLA on "
+                         "device (default) or host numpy (parity oracle)")
+    ap.add_argument("--compact-frac", type=float, default=0.25,
+                    help="live-edge compaction threshold for the peel loop "
+                         "(0 disables; see DESIGN.md §10)")
     ap.add_argument("--verify", action="store_true",
                     help="check against the numpy oracle (small graphs!)")
     ap.add_argument("--update-stream", type=int, default=0, metavar="K",
@@ -127,12 +137,16 @@ def main(argv=None):
     t0 = time.perf_counter()
     if args.engine == "pkt":
         res = pkt(g, chunk=args.chunk, mode=args.mode,
-                  support_mode=args.support_mode)
+                  support_mode=args.support_mode,
+                  table_mode=args.table_mode,
+                  compact_frac=args.compact_frac or None)
         truss = res.trussness
-        extra = f"levels={res.levels} sublevels={res.sublevels}"
+        extra = (f"levels={res.levels} sublevels={res.sublevels} "
+                 f"compactions={res.compactions}")
     elif args.engine == "dist":
-        truss = pkt_dist(g, chunk=min(args.chunk, 1 << 12),
-                         support_mode=args.support_mode)
+        truss = pkt_dist(g, chunk=min(args.chunk or (1 << 12), 1 << 12),
+                         support_mode=args.support_mode,
+                         table_mode=args.table_mode)
         extra = ""
     elif args.engine == "trilist":
         truss = truss_trilist(g)

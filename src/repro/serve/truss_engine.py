@@ -7,11 +7,16 @@ compile time and per-dispatch overhead dominate if each graph is decomposed
 alone. This engine amortizes both:
 
   * **Bucketing** — every submission is preprocessed on host (canonicalize,
-    optional k-core reorder, CSR + wedge tables) and assigned to a *size
-    class*: all dimensions padded up to powers of two —
-    ``(m_pad, sup_pad, peel_pad, chunk)``.  Graphs in one class share one
-    compiled executable; the pow2 policy bounds the number of distinct
-    compiles to O(log m · log wedges) over any workload.
+    optional k-core reorder, CSR build) and assigned to a *size class*: all
+    dimensions padded up to powers of two —
+    ``(m_pad, sup_pad, peel_pad, chunk, n_pad)``.  Graphs in one class share
+    one compiled executable; the pow2 policy bounds the number of distinct
+    compiles to O(log m · log wedges) over any workload.  With the default
+    ``table_mode="device"`` the wedge tables never exist on host: their
+    entry counts are bounded by an O(m) host pass, the *CSR arrays alone*
+    are shipped (``CSROperand``), and both tables are built by the vmapped
+    device builders inside the batched jit (DESIGN.md §10);
+    ``table_mode="numpy"`` keeps the original host-built table operands.
   * **Batching** — a bucket is decomposed by a single ``jax.vmap`` of the
     support + peel pipeline from ``core/pkt.py`` over the stacked, padded
     operands.  Padding edges are pre-marked processed with sentinel support,
@@ -75,6 +80,15 @@ class SizeClass(NamedTuple):
     iters: int        # binary-search iteration bound for 2*m_pad-length rows
     sup_chunk: int    # support-kernel chunk size (pow2, <= sup_pad)
     sup_n_chunks: int  # sup_pad // sup_chunk
+    n_pad: int        # padded vertex count (pow2; 0 in table_mode="numpy",
+    #                   whose operands carry no vertex-indexed arrays)
+
+
+class _TableDims(NamedTuple):
+    """Stand-in for a wedge table when only its entry count is known —
+    ``table_mode="device"`` sizes buckets without materializing tables."""
+
+    size: int
 
 
 class BatchOperand(NamedTuple):
@@ -93,6 +107,24 @@ class BatchOperand(NamedTuple):
     c_start: jnp.ndarray    # (m_pad,) first chunk of edge's entry range
     c_end: jnp.ndarray      # (m_pad,) last chunk (inclusive)
     has_entries: jnp.ndarray  # (m_pad,) bool
+    m_real: jnp.ndarray     # () int32 — live edge count of this graph
+
+
+class CSROperand(NamedTuple):
+    """Per-graph padded *CSR* operands (``table_mode="device"``).
+
+    Only graph-sized arrays cross the host boundary; both wedge tables are
+    constructed inside the batched jit (vmapped device builders), so a
+    submission uploads O(m + n) bytes instead of O(table) — the tables are
+    several× the graph size on triangle-rich graphs.
+    """
+
+    N: jnp.ndarray          # (2*m_pad,) adjacency values
+    Eid: jnp.ndarray        # (2*m_pad,) slot → edge id
+    Es: jnp.ndarray         # (n_pad+1,) CSR row offsets
+    Eo: jnp.ndarray         # (n_pad,) first >u slot per row
+    u: jnp.ndarray          # (m_pad,) edge endpoints (u < v; padding 0)
+    v: jnp.ndarray          # (m_pad,)
     m_real: jnp.ndarray     # () int32 — live edge count of this graph
 
 
@@ -128,10 +160,53 @@ def _batched_truss(ops: BatchOperand, *, m: int, chunk: int, n_chunks: int,
         processed0 = ~edge_ok
         tabs = PeelTables(op.p_e1, op.p_cand, op.p_lo, op.p_hi,
                           op.c_start, op.c_end, op.has_entries)
-        S, levels, subs = _peel_loop(
+        S_ext, _, levels, subs = _peel_loop(
             op.N, op.Eid, S_ext0, processed0, tabs, m=m, chunk=chunk,
             n_chunks=n_chunks, iters=iters, mode=mode, interpret=interpret)
-        return S, S0, levels, subs
+        return S_ext[:m], S0, levels, subs
+
+    return jax.vmap(one)(ops)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("m", "chunk", "n_chunks", "iters", "mode",
+                     "support_mode", "sup_chunk", "sup_n_chunks", "sup_pad",
+                     "peel_pad", "interpret"),
+)
+def _batched_truss_dev(ops: CSROperand, *, m: int, chunk: int, n_chunks: int,
+                       iters: int, mode: str, support_mode: str,
+                       sup_chunk: int, sup_n_chunks: int, sup_pad: int,
+                       peel_pad: int, interpret: bool):
+    """vmap of (build tables → support → peel) across one bucket of graphs.
+
+    The ``table_mode="device"`` pipeline: both wedge tables are built by the
+    vmapped device builders (``core.support._build_*_table_dev``) inside
+    this one compiled program, so ``flush`` dispatches exactly one
+    executable per bucket and no table ever exists on the host.
+    """
+
+    def one(op: CSROperand):
+        s_e1, s_cand, s_lo, s_hi, _ = support_mod._build_support_table_dev(
+            op.u, op.v, op.Es, op.Eo, op.m_real, m=m, size=sup_pad)
+        S0 = support_mod.support_from_table_arrays(
+            s_e1, s_cand, s_lo, s_hi, op.N, op.Eid, m=m, mode=support_mode,
+            chunk=sup_chunk, n_chunks=sup_n_chunks, iters=iters,
+            interpret=interpret)
+        p_e1, p_cand, p_lo, p_hi, _off, c_start, c_end, has = \
+            support_mod._build_peel_table_dev(
+                op.u, op.v, op.Es, op.m_real, m=m, size=peel_pad, chunk=chunk)
+        edge_ok = jnp.arange(m + 1, dtype=jnp.int32) < op.m_real
+        S_ext0 = jnp.where(
+            edge_ok,
+            jnp.concatenate([S0, jnp.zeros((1,), jnp.int32)]),
+            _SENTINEL_S)
+        processed0 = ~edge_ok
+        tabs = PeelTables(p_e1, p_cand, p_lo, p_hi, c_start, c_end, has)
+        S_ext, _, levels, subs = _peel_loop(
+            op.N, op.Eid, S_ext0, processed0, tabs, m=m, chunk=chunk,
+            n_chunks=n_chunks, iters=iters, mode=mode, interpret=interpret)
+        return S_ext[:m], S0, levels, subs
 
     return jax.vmap(one)(ops)
 
@@ -144,7 +219,7 @@ class _Pending:
     in_keys: np.ndarray       # per input row: canonical key in relabeled space
     key: SizeClass
     E: np.ndarray             # canonical pre-relabel edges (handle promotion)
-    operand: BatchOperand | None = None
+    operand: BatchOperand | CSROperand | None = None
 
 
 class TrussHandle:
@@ -194,21 +269,25 @@ class TrussEngine:
     """Queue API over the batched decomposition pipeline."""
 
     def __init__(self, *, mode: str = "chunked", support_mode: str = "jnp",
-                 chunk: int = 1 << 12, reorder: bool = True,
-                 max_pending: int = 32, max_edges: int = 1 << 22,
-                 interpret: bool | None = None):
+                 table_mode: str = "device", chunk: int = 1 << 12,
+                 reorder: bool = True, max_pending: int = 32,
+                 max_edges: int = 1 << 22, interpret: bool | None = None):
         if mode not in PEEL_MODES:
             raise ValueError(f"mode must be one of {PEEL_MODES}, got {mode!r}")
         if support_mode not in support_mod.SUPPORT_MODES:
             raise ValueError(f"support_mode must be one of "
                              f"{support_mod.SUPPORT_MODES}, "
                              f"got {support_mode!r}")
+        if table_mode not in support_mod.TABLE_MODES:
+            raise ValueError(f"table_mode must be one of "
+                             f"{support_mod.TABLE_MODES}, got {table_mode!r}")
         if chunk < 1:
             raise ValueError("chunk must be positive")
         if max_edges < 1:
             raise ValueError("max_edges must be positive")
         self.mode = mode
         self.support_mode = support_mode
+        self.table_mode = table_mode
         self.max_edges = max_edges
         self.chunk = _next_pow2(chunk)
         self.reorder = reorder
@@ -268,12 +347,22 @@ class TrussEngine:
         in_keys = edge_keys(np.minimum(rl, rh), np.maximum(rl, rh), n)
 
         g = build_csr(r_edges, n)
-        stab = support_mod.build_support_table(g)
-        ptab = support_mod.build_peel_table(g)
-        key = self._size_class(g, stab, ptab)
+        if self.table_mode == "device":
+            # tables never materialize on host: bucket by their exact entry
+            # counts (O(m) host math) and ship only the CSR arrays
+            stab = _TableDims(support_mod.support_table_size(g))
+            ptab = _TableDims(support_mod.peel_table_size(g))
+            key = self._size_class(g, stab, ptab)
+            support_mod._check_table_size(max(key.sup_pad, key.peel_pad))
+            operand = self._make_csr_operand(g, key)
+        else:
+            stab = support_mod.build_support_table(g)
+            ptab = support_mod.build_peel_table(g)
+            key = self._size_class(g, stab, ptab)
+            operand = self._make_operand(g, key, stab, ptab)
         self._pending.append(_Pending(
             ticket=ticket, g=g, n=n, in_keys=in_keys,
-            key=key, E=E, operand=self._make_operand(g, key, stab, ptab)))
+            key=key, E=E, operand=operand))
         if len(self._pending) >= self.max_pending:
             self.flush()
         return ticket
@@ -313,8 +402,8 @@ class TrussEngine:
         """
         inc = IncrementalTruss(
             edges, mode=self.mode, support_mode=self.support_mode,
-            chunk=self.chunk, local_frac=local_frac,
-            interpret=self.interpret)
+            table_mode=self.table_mode, chunk=self.chunk,
+            local_frac=local_frac, interpret=self.interpret)
         h = TrussHandle(self._next_handle, inc)
         self._next_handle += 1
         self._handles[h.hid] = h
@@ -379,8 +468,22 @@ class TrussEngine:
         n_chunks = peel_pad // chunk
         iters = int(np.ceil(np.log2(2 * m_pad + 1))) + 1
         sup_chunk = min(self.chunk, sup_pad)
+        n_pad = _next_pow2(g.n + 1) if self.table_mode == "device" else 0
         return SizeClass(m_pad, sup_pad, peel_pad, chunk, n_chunks, iters,
-                         sup_chunk, sup_pad // sup_chunk)
+                         sup_chunk, sup_pad // sup_chunk, n_pad)
+
+    def _make_csr_operand(self, g: CSRGraph, key: SizeClass) -> CSROperand:
+        m_pad = key.m_pad
+        two_m = 2 * g.m
+        return CSROperand(
+            N=jnp.asarray(_pad1(g.N, 2 * m_pad, _PAD_N)),
+            Eid=jnp.asarray(_pad1(g.Eid, 2 * m_pad, m_pad)),
+            Es=jnp.asarray(_pad1(g.Es, key.n_pad + 1, two_m)),
+            Eo=jnp.asarray(_pad1(g.Eo, key.n_pad, two_m)),
+            u=jnp.asarray(_pad1(g.El[:, 0], m_pad, 0)),
+            v=jnp.asarray(_pad1(g.El[:, 1], m_pad, 0)),
+            m_real=jnp.int32(g.m),
+        )
 
     def _make_operand(self, g: CSRGraph, key: SizeClass, stab,
                       ptab) -> BatchOperand:
@@ -417,11 +520,19 @@ class TrussEngine:
             t0 = time.perf_counter()
             ops = jax.tree.map(lambda *xs: jnp.stack(xs),
                                *[p.operand for p in group])
-            S, S0, levels, subs = _batched_truss(
-                ops, m=key.m_pad, chunk=key.chunk, n_chunks=key.n_chunks,
-                iters=key.iters, mode=self.mode,
-                support_mode=self.support_mode, sup_chunk=key.sup_chunk,
-                sup_n_chunks=key.sup_n_chunks, interpret=self.interpret)
+            if self.table_mode == "device":
+                S, S0, levels, subs = _batched_truss_dev(
+                    ops, m=key.m_pad, chunk=key.chunk,
+                    n_chunks=key.n_chunks, iters=key.iters, mode=self.mode,
+                    support_mode=self.support_mode, sup_chunk=key.sup_chunk,
+                    sup_n_chunks=key.sup_n_chunks, sup_pad=key.sup_pad,
+                    peel_pad=key.peel_pad, interpret=self.interpret)
+            else:
+                S, S0, levels, subs = _batched_truss(
+                    ops, m=key.m_pad, chunk=key.chunk, n_chunks=key.n_chunks,
+                    iters=key.iters, mode=self.mode,
+                    support_mode=self.support_mode, sup_chunk=key.sup_chunk,
+                    sup_n_chunks=key.sup_n_chunks, interpret=self.interpret)
             S = np.asarray(S)
             for i, p in enumerate(group):
                 truss = (S[i][: p.g.m] + 2).astype(np.int64)
@@ -452,10 +563,12 @@ class TrussEngine:
 
 
 def truss_batched(graphs, *, mode: str = "chunked",
-                  support_mode: str = "jnp", chunk: int = 1 << 12,
+                  support_mode: str = "jnp", table_mode: str = "device",
+                  chunk: int = 1 << 12,
                   reorder: bool = True) -> list[np.ndarray]:
     """One-shot convenience: decompose a list of edge arrays, order-aligned."""
     graphs = list(graphs)
-    eng = TrussEngine(mode=mode, support_mode=support_mode, chunk=chunk,
+    eng = TrussEngine(mode=mode, support_mode=support_mode,
+                      table_mode=table_mode, chunk=chunk,
                       reorder=reorder, max_pending=len(graphs) or 1)
     return eng.map(graphs)

@@ -1,0 +1,189 @@
+"""Device-side wedge-table construction (DESIGN.md §10): the jitted XLA
+builders must reproduce the host numpy builders row-for-row, and every
+pipeline that consumes them (support, pkt, engine, dist) must be bitwise
+identical across ``table_mode`` ∈ {numpy, device}.
+
+Runs under real ``hypothesis`` and under the deterministic fallback shim
+(``repro/testing/hypothesis_fallback.py``) — same contract as
+``tests/test_parity_matrix.py``.
+"""
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from hypothesis import HealthCheck, given, settings
+from hypothesis import strategies as st
+
+from repro.core import support as support_mod
+from repro.core.pkt import pkt
+from repro.graphs.csr import build_csr, edges_from_arrays
+from repro.graphs.gen import (barabasi_albert_edges, erdos_renyi_edges,
+                              ring_of_cliques_edges, rmat_edges)
+from repro.kernels.wedge_common import next_pow2
+
+
+def _star(k):
+    return np.stack([np.zeros(k, np.int64), np.arange(1, k + 1)], axis=1)
+
+
+#: adversarial shapes: empty graph, triangle-free (star has an *empty*
+#: oriented support table, the path an empty-range-heavy one), raw
+#: multi-edge/self-loop/swapped input (canonicalized like production entry
+#: points), plus dense and skewed standards
+ADVERSARIAL = {
+    "empty": np.zeros((0, 2), np.int64),
+    "single_edge": np.array([[0, 1]], np.int64),
+    "star": _star(9),
+    "path": np.array([[0, 1], [1, 2], [2, 3], [3, 4]], np.int64),
+    "multi_edge_input": np.array(
+        [[0, 1], [1, 0], [0, 1], [2, 2], [1, 2], [0, 2], [3, 3], [2, 3]],
+        np.int64),
+    "clique": edges_from_arrays(*np.nonzero(np.triu(np.ones((7, 7)), 1)), 7),
+    "ring_of_cliques": ring_of_cliques_edges(4, 5),
+    "rmat": rmat_edges(6, edge_factor=5, seed=3),
+}
+
+
+def _graph(raw):
+    E = edges_from_arrays(raw[:, 0], raw[:, 1]) if raw.size else raw
+    return build_csr(E)
+
+
+def _assert_tables_equal(g):
+    """Device builders reproduce the numpy builders bit-for-bit, with inert
+    sentinel padding beyond the real entries."""
+    stab = support_mod.build_support_table(g)
+    ptab = support_mod.build_peel_table(g)
+    assert support_mod.support_table_size(g) == stab.size
+    assert support_mod.peel_table_size(g) == ptab.size
+    if g.m == 0:
+        return
+    dev = g.device_arrays()
+
+    sp = next_pow2(max(1, stab.size))
+    e1, cand, lo, hi, off = support_mod._build_support_table_dev(
+        dev["El"][:, 0], dev["El"][:, 1], dev["Es"], dev["Eo"],
+        jnp.int32(g.m), m=g.m, size=sp)
+    k = stab.size
+    assert np.array_equal(np.asarray(e1)[:k], stab.e1)
+    assert np.array_equal(np.asarray(cand)[:k], stab.cand_slot)
+    assert np.array_equal(np.asarray(lo)[:k], stab.lo)
+    assert np.array_equal(np.asarray(hi)[:k], stab.hi)
+    assert np.array_equal(np.asarray(off), stab.off)
+    assert (np.asarray(e1)[k:] == g.m).all()          # anchor sentinel
+    assert (np.asarray(lo)[k:] == np.asarray(hi)[k:]).all()  # empty range
+
+    pp = next_pow2(max(1, ptab.size))
+    chunk = max(1, min(64, pp))
+    e1, cand, lo, hi, off, c_start, c_end, has = \
+        support_mod._build_peel_table_dev(
+            dev["El"][:, 0], dev["El"][:, 1], dev["Es"], jnp.int32(g.m),
+            m=g.m, size=pp, chunk=chunk)
+    k = ptab.size
+    assert np.array_equal(np.asarray(e1)[:k], ptab.e1)
+    assert np.array_equal(np.asarray(cand)[:k], ptab.cand_slot)
+    assert np.array_equal(np.asarray(lo)[:k], ptab.lo)
+    assert np.array_equal(np.asarray(hi)[:k], ptab.hi)
+    assert np.array_equal(np.asarray(off), ptab.off)
+    assert (np.asarray(e1)[k:] == g.m).all()
+    # chunk-range metadata matches the host bookkeeping
+    from repro.core.pkt import chunk_ranges
+
+    h_has, h_cs, h_ce = chunk_ranges(ptab.off, chunk)
+    assert np.array_equal(np.asarray(has), h_has)
+    assert np.array_equal(np.asarray(c_start)[h_has], h_cs[h_has])
+    assert np.array_equal(np.asarray(c_end)[h_has], h_ce[h_has])
+
+
+@pytest.mark.parametrize("name", sorted(ADVERSARIAL))
+def test_builders_equal_adversarial(name):
+    _assert_tables_equal(_graph(ADVERSARIAL[name]))
+
+
+@st.composite
+def raw_graph(draw):
+    kind = draw(st.sampled_from(["er", "powerlaw", "noisy"]))
+    seed = draw(st.integers(min_value=0, max_value=9999))
+    if kind == "er":
+        n = draw(st.integers(min_value=4, max_value=26))
+        return erdos_renyi_edges(
+            n, avg_degree=float(draw(st.integers(min_value=2, max_value=8))),
+            seed=seed)
+    if kind == "powerlaw":
+        return barabasi_albert_edges(
+            draw(st.integers(min_value=6, max_value=22)),
+            m_attach=draw(st.integers(min_value=2, max_value=4)), seed=seed)
+    n = draw(st.integers(min_value=3, max_value=14))
+    k = draw(st.integers(min_value=1, max_value=40))
+    rng = np.random.default_rng(seed)
+    return np.stack([rng.integers(0, n, k), rng.integers(0, n, k)],
+                    axis=1).astype(np.int64)
+
+
+@settings(max_examples=8, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+@given(raw_graph())
+def test_builders_equal_random(raw):
+    g = _graph(raw)
+    if g.m == 0:
+        return
+    _assert_tables_equal(g)
+
+
+@settings(max_examples=6, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+@given(raw_graph())
+def test_support_table_mode_parity(raw):
+    g = _graph(raw)
+    if g.m == 0:
+        return
+    base = support_mod.compute_support(g, table_mode="numpy")
+    for mode in support_mod.SUPPORT_MODES:
+        S = support_mod.compute_support(g, mode=mode, table_mode="device")
+        assert np.array_equal(S, base), mode
+        assert S.dtype == base.dtype
+
+
+def test_pkt_table_mode_parity_full_result():
+    for raw in (ring_of_cliques_edges(3, 5), rmat_edges(6, edge_factor=4,
+                                                        seed=7)):
+        g = _graph(raw)
+        a = pkt(g, table_mode="numpy")
+        b = pkt(g, table_mode="device")
+        assert np.array_equal(a.trussness, b.trussness)
+        assert np.array_equal(a.support, b.support)
+        assert (a.levels, a.sublevels) == (b.levels, b.sublevels)
+
+
+def test_device_arrays_cached_per_graph():
+    g = _graph(ring_of_cliques_edges(3, 4))
+    d1 = g.device_arrays()
+    d2 = g.device_arrays()
+    assert d1 is d2
+    assert d1["N"] is d2["N"]
+    assert set(d1) == {"N", "Eid", "Es", "Eo", "El"}
+    assert np.array_equal(np.asarray(d1["N"]), g.N)
+
+
+def test_invalid_table_mode_rejected():
+    g = _graph(np.array([[0, 1]], np.int64))
+    with pytest.raises(ValueError, match="table_mode"):
+        pkt(g, table_mode="gpu")
+    with pytest.raises(ValueError, match="table_mode"):
+        support_mod.compute_support(g, table_mode="gpu")
+    from repro.serve.truss_engine import TrussEngine
+
+    with pytest.raises(ValueError, match="table_mode"):
+        TrussEngine(table_mode="gpu")
+
+
+def test_prebuilt_table_forces_numpy_path():
+    """Passing a prebuilt host table keeps the legacy path (the table is
+    honored, not silently rebuilt on device)."""
+    g = _graph(ring_of_cliques_edges(3, 4))
+    stab = support_mod.build_support_table(g)
+    ptab = support_mod.build_peel_table(g)
+    res = pkt(g, support_table=stab, peel_table=ptab)
+    assert np.array_equal(res.trussness, pkt(g).trussness)
