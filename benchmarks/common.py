@@ -4,9 +4,7 @@ from __future__ import annotations
 
 import time
 
-import numpy as np
-
-from repro.graphs.csr import build_csr, relabel, degeneracy_order, CSRGraph
+from repro.graphs.csr import build_csr, relabel, degeneracy_order
 from repro.graphs.datasets import named_graph
 
 

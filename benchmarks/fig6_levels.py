@@ -16,7 +16,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import support as support_mod
-from repro.core.pkt import prepare_peel, PeelTables, _SENTINEL_S
+from repro.core.pkt import prepare_peel, _SENTINEL_S
 from benchmarks.common import prep_graph, row
 
 

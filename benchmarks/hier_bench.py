@@ -1,0 +1,133 @@
+"""Community-index build cost, query latency, and device/host label parity.
+
+The serving claim of the hierarchy index (DESIGN.md §11): build once per
+decomposition — the device path floods every level's labels in a single
+vmapped dispatch — then answer community queries many times without
+touching the decomposition pipeline again.  For each graph this bench
+times:
+
+  * ``index_build_*_seconds`` — ``TrussHierarchy.build_all()`` per mode
+    (device label propagation warm vs the host union-find oracle),
+  * ``query_*_seconds`` — per-call latency of the handle query API
+    (``communities(k)`` once the index is warm, and per-edge
+    ``community(edge, k)`` lookups),
+  * ``parity`` — bitwise equality of every level's labels between the two
+    builders, which is the CI ``bench-trend`` gate: any device/host label
+    mismatch exits nonzero.
+
+Output: ``BENCH_hier.json``.
+
+  PYTHONPATH=src python -m benchmarks.hier_bench [--smoke] [--out F]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+
+import numpy as np
+
+
+def _bench_graph(name: str, queries: int) -> dict:
+    from repro.core.hierarchy import TrussHierarchy
+    from repro.graphs.datasets import named_graph
+    from repro.serve.truss_engine import TrussEngine
+
+    E = named_graph(name)
+    eng = TrussEngine()
+    h = eng.open(E)
+
+    # device build: one timed cold build_all (includes the jit compile),
+    # one warm rebuild on a fresh index (compiled executable reused)
+    t0 = time.perf_counter()
+    hier_dev = h.hierarchy(mode="device").build_all()
+    t_dev_cold = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    TrussHierarchy(h._inc.T, h._inc.tri, mode="device").build_all()
+    t_dev_warm = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    hier_host = TrussHierarchy(h._inc.T, h._inc.tri, mode="host").build_all()
+    t_host = time.perf_counter() - t0
+
+    parity = all(
+        np.array_equal(hier_dev.level_labels(k), hier_host.level_labels(k))
+        for k in hier_dev.levels)
+
+    # query latency at a mid level, against the warm device index
+    k_mid = max(2, (2 + hier_dev.k_max) // 2)
+    t0 = time.perf_counter()
+    comms = h.communities(k_mid)
+    t_comms = time.perf_counter() - t0
+    rng = np.random.default_rng(0)
+    sample = rng.integers(0, h.m, size=queries)
+    E = h.edges                         # hoisted: El copies stay untimed
+    t0 = time.perf_counter()
+    for eid in sample:
+        h.community(tuple(E[int(eid)]), k_mid)
+    t_query = (time.perf_counter() - t0) / max(1, queries)
+
+    return {
+        "graph": name, "n": h.n, "m": h.m,
+        "k_max": hier_dev.k_max,
+        "levels": len(list(hier_dev.levels)),
+        "triangles": int(h._inc.tri.shape[0]),
+        "index_build_device_seconds": t_dev_cold,
+        "index_build_device_warm_seconds": t_dev_warm,
+        "index_build_host_seconds": t_host,
+        "communities_at_k": {"k": k_mid, "count": len(comms),
+                             "seconds": t_comms},
+        "query_edge_seconds": t_query,
+        "parity": parity,
+    }
+
+
+def run(graphs=("ba-small", "er-small", "rmat-small"), queries: int = 64,
+        out_path: str = "BENCH_hier.json") -> int:
+    report = {"bench": "hierarchy-index", "graphs": [], "ok": True}
+    for name in graphs:
+        g = _bench_graph(name, queries)
+        report["graphs"].append(g)
+        report["ok"] = report["ok"] and g["parity"]
+    with open(out_path, "w") as f:
+        json.dump(report, f, indent=2, sort_keys=True)
+    print(json.dumps(report, indent=2, sort_keys=True))
+    if not report["ok"]:
+        print("HIER BENCH FAILED: device/host community-label mismatch",
+              file=sys.stderr)
+        return 1
+    return 0
+
+
+def rows(quick: bool = True) -> list[str]:
+    """benchmarks/run.py adapter: CSV rows from a quick in-memory run."""
+    from benchmarks.common import row
+
+    out = []
+    for name in ("ba-small",) if quick else ("ba-small", "rmat-small"):
+        g = _bench_graph(name, 16)
+        out.append(row(
+            f"hier/{name}/build-device",
+            g["index_build_device_warm_seconds"],
+            f"levels={g['levels']};parity={int(g['parity'])}"))
+        out.append(row(f"hier/{name}/query-edge", g["query_edge_seconds"],
+                       f"k={g['communities_at_k']['k']}"))
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small graph, few queries (the CI parity gate)")
+    ap.add_argument("--out", default="BENCH_hier.json")
+    args = ap.parse_args()
+    if args.smoke:
+        raise SystemExit(run(graphs=("ba-small",), queries=16,
+                             out_path=args.out))
+    raise SystemExit(run(out_path=args.out))
+
+
+if __name__ == "__main__":
+    main()

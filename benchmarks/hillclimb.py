@@ -14,12 +14,11 @@ os.environ.setdefault("XLA_FLAGS",
 
 import argparse
 import dataclasses
-import json
 
 import jax
 
 from repro.launch.mesh import make_production_mesh
-from repro.configs import get_config, SHAPES
+from repro.configs import get_config
 from repro.launch.dryrun import cost_cell, lower_cell
 from benchmarks.roofline import PEAK_FLOPS, HBM_BW, ICI_BW, CHIPS, model_flops
 
@@ -73,9 +72,10 @@ def main():
     frac = (mf / CHIPS / PEAK_FLOPS) / max(bound, 1e-12)
     print(f"[{args.tag}] {args.arch}/{args.shape} mb={args.mb} "
           f"{' '.join(args.set)}")
+    dominant = max((("compute", compute_s), ("memory", memory_s),
+                    ("collective", coll_s)), key=lambda t: t[1])[0]
     print(f"  compute {compute_s:.3f}s  memory {memory_s:.3f}s  "
-          f"collective {coll_s:.3f}s  -> dominant "
-          f"{max((('compute', compute_s), ('memory', memory_s), ('collective', coll_s)), key=lambda t: t[1])[0]}"
+          f"collective {coll_s:.3f}s  -> dominant {dominant}"
           f"  roofline_frac {frac:.4f}")
     for k, v in rec["collectives"].items():
         if isinstance(v, dict) and v["bytes"]:

@@ -21,8 +21,6 @@ from __future__ import annotations
 import json
 import os
 
-import numpy as np
-
 PEAK_FLOPS = 197e12          # bf16 / chip (v5e)
 HBM_BW = 819e9               # B/s / chip
 ICI_BW = 50e9                # B/s / link

@@ -7,6 +7,8 @@
   fig4    — phase breakdown per peel mode               (paper Fig 4)
   fig6    — per-level time vs trussness distribution    (paper Fig 6)
   engine  — batched multi-graph throughput (graphs/sec)
+  inc     — incremental update vs recompute speedup     (DESIGN.md §9)
+  hier    — community-index build/query + label parity  (DESIGN.md §11)
   roofline— LM arch × shape roofline terms from dry-run (deliverable g)
 
 ``--smoke`` is the CI gate: a tiny RMAT graph decomposed by every
@@ -125,7 +127,7 @@ def main() -> None:
 
     from benchmarks import (table2_support, table3_decomp, table4_parallel,
                             fig4_phases, fig6_levels, engine_bench, inc_bench,
-                            roofline)
+                            hier_bench, roofline)
     benches = {
         "table2": lambda: table2_support.run(suite),
         "table3": lambda: table3_decomp.run(suite),
@@ -139,6 +141,7 @@ def main() -> None:
             n_graphs=12 if args.quick else 24),
         "roofline": lambda: roofline.run(),
         "inc": lambda: inc_bench.rows(quick=args.quick),
+        "hier": lambda: hier_bench.rows(quick=args.quick),
     }
     print("name,us_per_call,derived")
     for name, fn in benches.items():

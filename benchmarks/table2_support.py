@@ -9,8 +9,6 @@ from __future__ import annotations
 
 import time
 
-import numpy as np
-
 from repro.graphs.csr import build_csr, relabel, degeneracy_order
 from repro.graphs.datasets import named_graph, GRAPH_SUITE
 from repro.core.support import compute_support, build_support_table

@@ -26,7 +26,8 @@ def run(suite=None) -> list[str]:
     out = []
     for name in suite or GRAPH_SUITE:
         g, stats = prep_graph(name, order="kco")
-        gweps = lambda t: stats["wedges"] / max(t, 1e-12) / 1e9
+        def gweps(t):
+            return stats["wedges"] / max(t, 1e-12) / 1e9
 
         t_pkt = timeit(lambda: pkt(g), warmup=1, reps=2)
         res = pkt(g)

@@ -8,7 +8,6 @@ pass --full for the real 135M config (slow on CPU, same code path).
 """
 
 import argparse
-import sys
 
 from repro.launch.train import main as train_main
 

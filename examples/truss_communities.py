@@ -1,12 +1,19 @@
 """Community detection via truss decomposition (paper's motivating use case).
 
-k-trusses as community seeds: peel to a target k, take connected components
-of the surviving edges.  The decomposition now goes through the batched
-``TrussEngine``: the planted-communities graph, an RMAT instance, and a batch
-of per-"user" ego-net-style subgraphs are all submitted to one engine, which
-buckets them by padded size class and decomposes each bucket in a single
-vmapped dispatch.  Single-graph engines (PKT, triangle-list) cross-check the
-engine's output.
+k-trusses as communities, served from the hierarchy index (DESIGN.md §11):
+a graph opened as a persistent ``TrussEngine`` handle carries a lazily-built
+*truss community index* — for every level k, the triangle-connected
+components of the edges with trussness >= k, nested into a hierarchy with
+parent links.  Queries (``handle.communities(k)``,
+``handle.community(edge_or_vertex, k)``) read the index; the ad-hoc per-k
+union-find this example used to run on the host is now just the index's
+parity oracle (``hier_mode="host"``).
+
+The batched single-read path is still shown: a stream of ego-net-style
+windows goes through ``submit``/``result`` tickets, bucketed by size class
+and decomposed in vmapped dispatches.  And the index *survives updates*:
+an edge-churn batch through ``TrussEngine.update`` remaps the untouched
+levels instead of rebuilding them.
 
     PYTHONPATH=src python examples/truss_communities.py
 """
@@ -20,35 +27,6 @@ from repro.graphs.csr import build_csr, relabel, degeneracy_order
 from repro.core import pkt, truss_trilist
 from repro.core.pkt import align_to_input
 from repro.serve.truss_engine import TrussEngine
-
-
-def connected_components(edges: np.ndarray, n: int) -> np.ndarray:
-    """Union-find over an edge list."""
-    parent = np.arange(n)
-
-    def find(x):
-        while parent[x] != x:
-            parent[x] = parent[parent[x]]
-            x = parent[x]
-        return x
-
-    for u, v in edges:
-        ru, rv = find(u), find(v)
-        if ru != rv:
-            parent[ru] = rv
-    return np.array([find(v) for v in range(n)])
-
-
-def communities(edges: np.ndarray, trussness: np.ndarray, k: int):
-    """Vertex sets of the k-truss components."""
-    keep = trussness >= k
-    if keep.sum() == 0:
-        return keep, np.zeros(0, np.int64)
-    n = int(edges.max()) + 1
-    comp = connected_components(edges[keep], n)
-    verts = np.unique(edges[keep])
-    sizes = np.sort(np.bincount(comp[verts]))[::-1]
-    return keep, sizes[sizes > 0]
 
 
 def main():
@@ -65,17 +43,18 @@ def main():
         lo = int(rng.integers(0, max(1, E_rmat.shape[0] - 400)))
         windows.append(E_rmat[lo:lo + 400])
 
+    # single-read tickets for the window stream (bucketed + vmapped)
     t0 = time.perf_counter()
-    tickets = [eng.submit(E_ring), eng.submit(E_rmat)]
-    tickets += [eng.submit(w) for w in windows]
+    tickets = [eng.submit(w) for w in windows]
     eng.flush()
     dt = time.perf_counter() - t0
-    print(f"engine: {len(tickets)} graphs in {dt:.3f}s "
+    print(f"engine: {len(tickets)} window graphs in {dt:.3f}s "
           f"({eng.throughput:.1f} graphs/s across "
           f"{len(eng.stats['buckets'])} buckets)")
 
-    t_ring = eng.result(tickets[0])
-    t_rmat = eng.result(tickets[1])
+    # persistent handles for the graphs we'll query communities on
+    h_ring = eng.open(E_ring)
+    h_rmat = eng.open(E_rmat)
 
     # cross-check the engine against the single-graph engines
     n = int(E_ring.max()) + 1
@@ -87,23 +66,48 @@ def main():
     assert np.array_equal(truss_trilist(g), res.trussness)
     print("engines agree (batched == pkt == trilist)")
 
-    # extract k-truss communities for k = 12: exactly the planted cliques
+    # k-truss communities for k = 12: exactly the planted cliques
     k = 12
-    _, sizes = communities(E_ring, t_ring, k)
-    print(f"{k}-truss communities: {len(sizes)} (planted: 12)")
-    assert len(sizes) == 12
-    assert int(t_ring.max()) == 12
+    comms = h_ring.communities(k)
+    print(f"{k}-truss communities: {len(comms)} (planted: 12)")
+    assert len(comms) == 12
+    assert all(c.shape[0] == 66 for c in comms)  # K12 = 66 edges each
+    # and the device index agrees bitwise with the host union-find oracle
+    hier = h_ring.hierarchy()
+    oracle = h_ring.hierarchy(mode="host")
+    assert all(np.array_equal(hier.level_labels(kk), oracle.level_labels(kk))
+               for kk in hier.levels)
+    print("index parity: device label-prop == host union-find")
+
+    # point queries: the community around one edge / all around one vertex
+    c_edge = h_ring.community(tuple(h_ring.edges[0]), k)
+    c_vert = h_ring.community(0, k)
+    print(f"community of edge {tuple(h_ring.edges[0])} at k={k}: "
+          f"{c_edge.shape[0]} edges; vertex 0 sits in {len(c_vert)} "
+          f"{k}-truss communities")
 
     # community-size spectrum of the RMAT instance at several k
     for k in (3, 4, 6, 8):
-        keep, sizes = communities(E_rmat, t_rmat, k)
-        if sizes.size == 0:
+        comms = h_rmat.communities(k)
+        if not comms:
             continue
-        print(f"k={k}: {keep.sum():6d} edges, {len(sizes):4d} communities, "
+        sizes = sorted((c.shape[0] for c in comms), reverse=True)
+        print(f"k={k}: {sum(sizes):6d} edges, {len(comms):4d} communities, "
               f"largest {sizes[:3]}")
 
+    # the index survives updates: churn a few low-trussness fringe edges —
+    # the repair stays local and the untouched (higher) levels remap
+    h_rmat.hierarchy().build_all()
+    cur = h_rmat.edges
+    fringe = cur[np.argsort(h_rmat.trussness)[:2]]
+    st = eng.update(h_rmat, remove_edges=fringe)
+    hier = h_rmat.hierarchy()
+    print(f"update ({st.mode}): index carried "
+          f"{hier.stats['remapped_levels']} levels by remap, "
+          f"{sum(lv is None for lv in hier._labels)} rebuilt lazily")
+
     # per-window max trussness (the "serving" answer a caller would read)
-    tws = [int(eng.result(t).max(initial=2)) for t in tickets[2:]]
+    tws = [int(eng.result(t).max(initial=2)) for t in tickets]
     print(f"window t_max spectrum: {sorted(tws)}")
 
 

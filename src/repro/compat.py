@@ -53,7 +53,17 @@ def cost_analysis(compiled) -> dict:
 
 
 def make_mesh(shape, axes) -> jax.sharding.Mesh:
-    """``jax.make_mesh`` with Auto axis types where the release supports them."""
+    """``jax.make_mesh`` with Auto axis types where the release supports them.
+
+    ``jax.make_mesh`` itself only exists from ~0.4.35; on the declared
+    floor (0.4.30, see pyproject/CI's jax matrix) the mesh is assembled the
+    pre-0.4.35 way from ``mesh_utils.create_device_mesh``.
+    """
+    if not hasattr(jax, "make_mesh"):  # pragma: no cover - floor releases
+        from jax.experimental import mesh_utils
+
+        devices = mesh_utils.create_device_mesh(shape)
+        return jax.sharding.Mesh(devices, axes)
     if AxisType is not None:
         try:
             return jax.make_mesh(shape, axes,

@@ -2,6 +2,8 @@
 
 from repro.core.pkt import pkt, truss_pkt, PKTResult, peel_live_subset
 from repro.core.truss_inc import IncrementalTruss, UpdateStats
+from repro.core.hierarchy import (TrussHierarchy, HIER_MODES,
+                                  hierarchy_from_graph)
 from repro.core.support import (
     compute_support,
     compute_support_ros,
@@ -22,6 +24,7 @@ from repro.core.pkt_dist import pkt_dist, make_pkt_dist, make_support_dist
 __all__ = [
     "pkt", "truss_pkt", "PKTResult", "peel_live_subset",
     "IncrementalTruss", "UpdateStats",
+    "TrussHierarchy", "HIER_MODES", "hierarchy_from_graph",
     "compute_support", "compute_support_ros", "triangle_count",
     "build_support_table", "build_peel_table",
     "support_table_size", "peel_table_size", "TABLE_MODES",

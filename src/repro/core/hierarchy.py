@@ -1,0 +1,424 @@
+"""Truss community index — the nested triangle-connected k-truss hierarchy.
+
+The paper motivates truss decomposition by community detection, and Wang &
+Cheng (Truss Decomposition in Massive Networks) define the query object that
+serving actually needs: a *k-truss community* is a triangle-connected
+component of the edges with trussness >= k — two edges belong together iff
+they are linked by a chain of triangles all of whose edges survive at level
+k.  Sariyuce et al. (Local Algorithms for Hierarchical Dense Subgraph
+Discovery) observe these components nest as k grows, so the right serving
+structure is a *hierarchy index* built once per decomposition and queried
+many times (DESIGN.md §11):
+
+  * **Per-level labels** — for each level k in [2, k_max], every live edge
+    (trussness >= k) carries the id of the *minimum edge in its
+    triangle-connected component*.  The min-id representative makes the
+    labeling canonical: any correct builder produces bitwise-identical
+    arrays, which is what the device/host parity gate checks.
+  * **Parent links** — level-k communities refine level-(k-1) communities
+    (every active-at-k triangle is active at k-1), so each community's
+    parent is just the (k-1)-label of its representative edge.
+  * **Two builders, one contract** (the PR-4 ``table_mode`` pattern):
+    ``mode="device"`` floods min-labels over the triangle rows with a jitted
+    scatter-min + pointer-jumping loop (O(log diameter) rounds, one XLA
+    dispatch per level — or one for the whole index via ``build_all``);
+    ``mode="host"`` is an independent union-find oracle (union-by-min over
+    triangles sorted by level, shared across levels top-down).  Both
+    converge to the same canonical labels.
+
+Triangle connectivity comes from the decomposition's triangle list — the
+same (T, 3) edge-id rows the wedge-table pipeline enumerates
+(``core.truss_inc.triangle_list``) and that incremental handles already
+maintain across updates, so a handle's index build does zero extra triangle
+work.
+
+Levels build lazily and cache; ``core/truss_inc.py`` keeps a handle's index
+alive across ``update`` batches by remapping the untouched high levels
+(edge-id translation only) and marking the levels the repair could have
+reached (k <= ``k_hi``) dirty for lazy rebuild — see
+``TrussHierarchy.remapped``.  The serving wrapper is
+``serve.truss_engine.TrussHandle.communities / community``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+
+#: where per-level labels are computed: jitted label propagation on device
+#: (the serving path) or the independent host union-find (the parity oracle)
+HIER_MODES = ("device", "host")
+
+
+# ------------------------------------------------------- device label flood --
+
+def _labelprop_jit_factory():
+    """Build the jitted per-level label-propagation function lazily so the
+    module imports without jax (numpy-only contexts use mode="host")."""
+    import jax
+    import jax.numpy as jnp
+
+    @functools.partial(jax.jit, static_argnames=("mp",))
+    def _labelprop(tri, tri_lvl, k, L0, *, mp: int):
+        """Min-label flood over active triangle rows to the fixed point.
+
+        ``tri`` is the (Tp, 3) padded triangle table (sentinel rows point at
+        a dead slot), ``tri_lvl`` its per-row level (min member trussness,
+        sentinel rows -1), ``k`` the dynamic level, ``L0`` the (mp,) initial
+        labels (live edges: any in-component id <= their own; dead slots:
+        themselves).  Each round scatter-mins every active row's 3-way label
+        minimum into its member edges, then pointer-jumps ``L <- min(L,
+        L[L])`` — labels always point at smaller in-component edges, so the
+        composition doubles the hop distance and the flood converges in
+        O(log component diameter) rounds to the component-min fixed point.
+        """
+        act = tri_lvl >= k
+        sink = jnp.int32(mp - 1)
+
+        def body(state):
+            L, _ = state
+            lm = jnp.min(L[tri], axis=1)
+            idx = jnp.where(act[:, None], tri, sink)
+            lmw = jnp.where(act, lm, sink)
+            L2 = (L.at[idx[:, 0]].min(lmw)
+                   .at[idx[:, 1]].min(lmw)
+                   .at[idx[:, 2]].min(lmw))
+            L2 = jnp.minimum(L2, L2[L2])
+            return L2, L
+
+        def cond(state):
+            L, prev = state
+            return jnp.any(L != prev)
+
+        L, _ = jax.lax.while_loop(cond, body, (L0, jnp.full_like(L0, -1)))
+        return L
+
+    @functools.partial(jax.jit, static_argnames=("mp",))
+    def _labelprop_all(tri, tri_lvl, ks, L0s, *, mp: int):
+        """All levels in one dispatch: vmap of the per-level flood."""
+        return jax.vmap(
+            lambda k, l0: _labelprop(tri, tri_lvl, k, l0, mp=mp))(ks, L0s)
+
+    return _labelprop, _labelprop_all
+
+
+_LABELPROP = None
+
+
+def _labelprop_fns():
+    global _LABELPROP
+    if _LABELPROP is None:
+        _LABELPROP = _labelprop_jit_factory()
+    return _LABELPROP
+
+
+# ------------------------------------------------------ host union-find oracle
+
+def _uf_find(parent: np.ndarray, x: int) -> int:
+    while parent[x] != x:
+        parent[x] = parent[parent[x]]
+        x = parent[x]
+    return int(x)
+
+
+def _uf_union_min(parent: np.ndarray, a: int, b: int) -> None:
+    """Union with the *smaller root winning* — the component root is then
+    always the component's minimum edge id, the canonical representative."""
+    ra, rb = _uf_find(parent, a), _uf_find(parent, b)
+    if ra != rb:
+        if ra < rb:
+            parent[rb] = ra
+        else:
+            parent[ra] = rb
+
+
+def _uf_roots(parent: np.ndarray, idx: np.ndarray) -> np.ndarray:
+    """Vectorized root lookup for an index array (no mutation needed for
+    correctness; unions keep doing their own path compression)."""
+    r = parent[idx]
+    while True:
+        rr = parent[r]
+        if np.array_equal(rr, r):
+            return r
+        r = rr
+
+
+def host_level_labels(m: int, trussness: np.ndarray, tri: np.ndarray,
+                      tri_lvl: np.ndarray, k: int) -> np.ndarray:
+    """One level's labels by a fresh union-find — the standalone oracle."""
+    labels = np.full(m, -1, np.int64)
+    live = np.nonzero(trussness >= k)[0]
+    if live.size == 0:
+        return labels
+    parent = np.arange(m, dtype=np.int64)
+    for a, b, c in tri[tri_lvl >= k]:
+        _uf_union_min(parent, int(a), int(b))
+        _uf_union_min(parent, int(a), int(c))
+    labels[live] = _uf_roots(parent, live)
+    return labels
+
+
+# --------------------------------------------------------------- the index --
+
+class TrussHierarchy:
+    """Nested k-truss community index over one finished decomposition.
+
+    Construct from per-edge ``trussness`` (aligned to the graph's canonical
+    edge rows) and the (T, 3) triangle list in the same edge-id space.
+    Levels are k = 2 .. ``k_max``; each builds lazily on first access and is
+    cached.  ``stats`` counts the work actually done (levels built per mode,
+    levels carried across updates by remap, flood rounds are implicit in the
+    device dispatch).
+    """
+
+    def __init__(self, trussness: np.ndarray, triangles: np.ndarray, *,
+                 mode: str = "device", interpret: bool | None = None):
+        if mode not in HIER_MODES:
+            raise ValueError(
+                f"mode must be one of {HIER_MODES}, got {mode!r}")
+        self.mode = mode
+        self.interpret = interpret  # accepted for symmetry; flood is pure XLA
+        self.T = np.asarray(trussness, dtype=np.int64)
+        self.m = int(self.T.shape[0])
+        tri = np.asarray(triangles, dtype=np.int64)
+        if tri.size == 0:
+            tri = np.zeros((0, 3), np.int64)
+        if tri.size and int(tri.max()) >= self.m:
+            raise ValueError(
+                f"triangle row references edge id {int(tri.max())} beyond "
+                f"m={self.m}")
+        self.tri = tri
+        self.tri_lvl = (self.T[tri].min(axis=1) if tri.size
+                        else np.zeros(0, np.int64))
+        self.k_max = int(self.T.max(initial=1))
+        self._labels: list[np.ndarray | None] = \
+            [None] * max(0, self.k_max - 1)
+        self._dev = None          # (tri_dev, lvl_dev, mp) device upload cache
+        self._uf = None           # (parent, order, ptr, k_at) host UF state
+        self.stats = {"device_levels": 0, "host_levels": 0,
+                      "remapped_levels": 0, "batch_builds": 0}
+
+    # ---------------------------------------------------------- level access
+
+    @property
+    def levels(self) -> range:
+        """The populated levels: k = 2 .. k_max (empty when m == 0)."""
+        return range(2, self.k_max + 1)
+
+    def level_labels(self, k: int) -> np.ndarray:
+        """(m,) int64 labels at level ``k``: for each edge with trussness
+        >= k the minimum edge id of its triangle-connected component, else
+        -1.  Built lazily (and cached) by the configured ``mode``."""
+        k = int(k)
+        if k < 2 or k > self.k_max:
+            return np.full(self.m, -1, np.int64)
+        li = k - 2
+        if self._labels[li] is None:
+            self._labels[li] = (self._build_device(k) if self.mode == "device"
+                                else self._build_host(k))
+        return self._labels[li]
+
+    def build_all(self) -> "TrussHierarchy":
+        """Materialize every level eagerly.
+
+        Device mode batches all still-dirty levels into a single vmapped
+        dispatch (the index-build cost ``benchmarks/hier_bench.py``
+        measures); host mode runs the shared top-down union-find.
+        """
+        todo = [k for k in self.levels if self._labels[k - 2] is None]
+        if not todo:
+            return self
+        if self.mode == "device":
+            self._build_device_batch(todo)
+        else:
+            # coarse-to-fine: each level extends the shared union-find with
+            # exactly its own triangle stratum (never a fresh rebuild)
+            for k in sorted(todo, reverse=True):
+                self.level_labels(k)
+        return self
+
+    # ------------------------------------------------------------- queries --
+
+    def communities(self, k: int) -> list[np.ndarray]:
+        """Sorted edge-id arrays of every level-``k`` community, ordered by
+        representative (= minimum member) edge id."""
+        labels = self.level_labels(k)
+        live = np.nonzero(labels >= 0)[0]
+        if live.size == 0:
+            return []
+        order = np.argsort(labels[live], kind="stable")
+        live = live[order]
+        cuts = np.nonzero(np.diff(labels[live]))[0] + 1
+        return np.split(live, cuts)
+
+    def community_of(self, edge_id: int, k: int) -> np.ndarray:
+        """Edge ids of the level-``k`` community containing ``edge_id``
+        (empty when the edge is below level k)."""
+        labels = self.level_labels(k)
+        edge_id = int(edge_id)
+        if not 0 <= edge_id < self.m or labels[edge_id] < 0:
+            return np.zeros(0, np.int64)
+        return np.nonzero(labels == labels[edge_id])[0].astype(np.int64)
+
+    def parents(self, k: int) -> tuple[np.ndarray, np.ndarray]:
+        """(reps, parent_reps): each level-``k`` community's representative
+        and the representative of the level-(k-1) community containing it.
+        At k == 2 the parents array equals the reps (no coarser level)."""
+        labels = self.level_labels(k)
+        reps = np.unique(labels[labels >= 0])
+        if k <= 2 or reps.size == 0:
+            return reps, reps.copy()
+        return reps, self.level_labels(k - 1)[reps]
+
+    # ------------------------------------------------------- device builder --
+
+    def _pad_dims(self) -> tuple[int, int]:
+        from repro.kernels.wedge_common import next_pow2
+
+        mp = max(8, next_pow2(self.m + 1))
+        tp = max(8, next_pow2(max(1, self.tri.shape[0])))
+        return mp, tp
+
+    def _device_tables(self):
+        """Upload the padded triangle table once per hierarchy."""
+        if self._dev is None:
+            import jax.numpy as jnp
+
+            mp, tp = self._pad_dims()
+            tri = np.full((tp, 3), mp - 1, np.int32)
+            tri[: self.tri.shape[0]] = self.tri
+            lvl = np.full(tp, -1, np.int32)
+            lvl[: self.tri.shape[0]] = self.tri_lvl
+            self._dev = (jnp.asarray(tri), jnp.asarray(lvl), mp)
+        return self._dev
+
+    def _init_labels(self, k: int, mp: int) -> np.ndarray:
+        """Initial (mp,) int32 labels for level ``k``: live edges warm-start
+        from the nearest already-built finer level (its labels are
+        in-component ids, so the flood only has fewer rounds to run); dead
+        and padding slots point at themselves."""
+        L0 = np.arange(mp, dtype=np.int32)
+        warm = None
+        for j in range(k + 1, self.k_max + 1):
+            if self._labels[j - 2] is not None:
+                warm = self._labels[j - 2]
+                break
+        if warm is not None:
+            fine = warm >= 0
+            L0[:self.m][fine] = warm[fine]
+        dead = self.T < k
+        L0[:self.m][dead] = np.nonzero(dead)[0]
+        return L0
+
+    def _build_device(self, k: int) -> np.ndarray:
+        import jax.numpy as jnp
+
+        labelprop, _ = _labelprop_fns()
+        tri_dev, lvl_dev, mp = self._device_tables()
+        L = labelprop(tri_dev, lvl_dev, jnp.int32(k),
+                      jnp.asarray(self._init_labels(k, mp)), mp=mp)
+        self.stats["device_levels"] += 1
+        return self._finish(np.asarray(L), k)
+
+    def _build_device_batch(self, ks: list[int]) -> None:
+        import jax.numpy as jnp
+
+        _, labelprop_all = _labelprop_fns()
+        tri_dev, lvl_dev, mp = self._device_tables()
+        L0s = np.stack([self._init_labels(k, mp) for k in ks])
+        Ls = np.asarray(labelprop_all(
+            tri_dev, lvl_dev, jnp.asarray(np.asarray(ks, np.int32)),
+            jnp.asarray(L0s), mp=mp))
+        for i, k in enumerate(ks):
+            self._labels[k - 2] = self._finish(Ls[i], k)
+        self.stats["device_levels"] += len(ks)
+        self.stats["batch_builds"] += 1
+
+    def _finish(self, L: np.ndarray, k: int) -> np.ndarray:
+        labels = L[: self.m].astype(np.int64)
+        labels[self.T < k] = -1
+        return labels
+
+    # --------------------------------------------------------- host builder --
+
+    def _build_host(self, k: int) -> np.ndarray:
+        """Shared top-down union-find: triangles sorted by level descending
+        are unioned once in total across all levels; each level snapshot is
+        a vectorized root lookup.  The shared state is only valid while
+        requests descend — once it has advanced past level ``k`` its
+        partition includes unions from coarser levels, so a request *above*
+        the frontier answers from a fresh single-level union-find instead
+        (``build_all`` walks levels coarse-to-fine, paying the shared cost
+        exactly once)."""
+        self.stats["host_levels"] += 1
+        if self._uf is not None and k > self._uf["k_at"]:
+            return host_level_labels(self.m, self.T, self.tri,
+                                     self.tri_lvl, k)
+        if self._uf is None:
+            order = np.argsort(-self.tri_lvl, kind="stable")
+            self._uf = {"parent": np.arange(self.m, dtype=np.int64),
+                        "order": order, "ptr": 0,
+                        "k_at": self.k_max + 1}
+        uf = self._uf
+        parent, order = uf["parent"], uf["order"]
+        ptr = uf["ptr"]
+        while ptr < order.size and self.tri_lvl[order[ptr]] >= k:
+            a, b, c = self.tri[order[ptr]]
+            _uf_union_min(parent, int(a), int(b))
+            _uf_union_min(parent, int(a), int(c))
+            ptr += 1
+        uf["ptr"] = ptr
+        uf["k_at"] = k
+        labels = np.full(self.m, -1, np.int64)
+        live = np.nonzero(self.T >= k)[0]
+        if live.size:
+            labels[live] = _uf_roots(parent, live)
+        return labels
+
+    # -------------------------------------------------- update survival ------
+
+    def remapped(self, trussness: np.ndarray, triangles: np.ndarray,
+                 old_to_new: np.ndarray, k_hi: int) -> "TrussHierarchy":
+        """The index after a *local* repair touched nothing above ``k_hi``.
+
+        ``old_to_new`` maps this index's edge ids to the post-update ids
+        (-1 for deleted edges).  Levels k > ``k_hi`` have an unchanged
+        edge set and active-triangle set — every inserted/deleted edge and
+        every trussness change sits at or below ``k_hi``, and a triangle's
+        level is the min over its members — so their partition survives
+        verbatim; only the ids need translating.  Canonical-form bonus: the
+        surviving edges keep their relative order under the key-sorted id
+        space, so the old component minimum maps exactly onto the new one
+        and the translated labels stay canonical without a re-scan.  Levels
+        <= ``k_hi`` come back dirty and rebuild lazily.
+        """
+        h = TrussHierarchy(trussness, triangles, mode=self.mode,
+                           interpret=self.interpret)
+        old_to_new = np.asarray(old_to_new, dtype=np.int64)
+        for k in range(max(int(k_hi) + 1, 2), h.k_max + 1):
+            old = (self._labels[k - 2]
+                   if k - 2 < len(self._labels) else None)
+            if old is None:
+                continue
+            src = np.nonzero(old >= 0)[0]
+            dst = old_to_new[src]
+            if dst.size and dst.min(initial=0) < 0:
+                # defensive: a live-above-k_hi edge vanished — the caller's
+                # k_hi was wrong; fall back to a dirty level
+                continue
+            lab = np.full(h.m, -1, np.int64)
+            lab[dst] = old_to_new[old[src]]
+            h._labels[k - 2] = lab
+            h.stats["remapped_levels"] += 1
+        return h
+
+
+def hierarchy_from_graph(g, trussness: np.ndarray, *,
+                         mode: str = "device") -> TrussHierarchy:
+    """Index a plain (graph, trussness) pair — enumerates the triangle list
+    first.  Handles (``TrussEngine.open``) skip this: they already maintain
+    the triangle list incrementally."""
+    from repro.core.truss_inc import triangle_list
+
+    return TrussHierarchy(trussness, triangle_list(g), mode=mode)

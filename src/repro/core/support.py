@@ -47,7 +47,10 @@ import jax.numpy as jnp
 from repro.graphs.csr import CSRGraph
 from repro.kernels.wedge_common import (chunk_layout, interpret_default,
                                         next_pow2, pad_chunked, pow2_chunk,
-                                        probe, ranged_searchsorted)
+                                        probe)
+# re-export: the triangle-list engine binary-searches through this module's
+# namespace (kernels.wedge_common is the canonical home)
+from repro.kernels.wedge_common import ranged_searchsorted  # noqa: F401
 
 #: executors for the support phase; "pallas" = kernels/support.py
 SUPPORT_MODES = ("jnp", "pallas")

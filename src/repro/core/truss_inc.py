@@ -57,6 +57,7 @@ from repro.graphs.csr import (CSRGraph, build_csr, canonical_edges_with_rows,
                               check_edge_array, degeneracy_order, edge_keys,
                               relabel)
 from repro.core import support as support_mod
+from repro.core.hierarchy import HIER_MODES, TrussHierarchy
 from repro.core.pkt import (_COMPACT_FRAC, _COMPACT_MIN, PEEL_MODES,
                             align_to_input, peel_live_subset, pkt)
 from repro.kernels import wedge_common
@@ -339,7 +340,7 @@ class IncrementalTruss:
 
     def __init__(self, edges, *, n: int | None = None, mode: str = "chunked",
                  support_mode: str = "jnp", table_mode: str = "device",
-                 chunk: int = 1 << 12,
+                 hier_mode: str = "device", chunk: int = 1 << 12,
                  local_frac: float = 0.25, host_peel_max: int = 4096,
                  compact_frac: float | None = _COMPACT_FRAC,
                  compact_min: int = _COMPACT_MIN,
@@ -354,6 +355,9 @@ class IncrementalTruss:
             raise ValueError(
                 f"table_mode must be one of {support_mod.TABLE_MODES}, "
                 f"got {table_mode!r}")
+        if hier_mode not in HIER_MODES:
+            raise ValueError(
+                f"hier_mode must be one of {HIER_MODES}, got {hier_mode!r}")
         if chunk < 1:
             raise ValueError("chunk must be positive")
         if not 0.0 <= local_frac <= 1.0:
@@ -361,6 +365,8 @@ class IncrementalTruss:
         self.mode = mode
         self.support_mode = support_mode
         self.table_mode = table_mode
+        self.hier_mode = hier_mode
+        self._hier: TrussHierarchy | None = None
         self.compact_frac = compact_frac
         self.compact_min = int(compact_min)
         self.chunk = wedge_common.next_pow2(chunk)
@@ -399,8 +405,8 @@ class IncrementalTruss:
         """Current (T, 3) triangle list (edge-id rows, each once)."""
         return self.tri.copy()
 
-    def query(self, edges) -> np.ndarray:
-        """Trussness for specific edges, aligned to the given rows.
+    def edge_ids(self, edges) -> np.ndarray:
+        """Canonical row ids of specific edges, aligned to the given rows.
 
         Rows may be endpoint-swapped or duplicated; an edge not currently in
         the graph raises the descriptive ``align_to_input`` ValueError.
@@ -415,8 +421,36 @@ class IncrementalTruss:
             raise ValueError(
                 f"edge ({int(lo[i])}, {int(hi[i])}) not present in the "
                 f"graph's edge list (vertex id beyond the graph)")
-        return align_to_input(self.T, self.g, None, self.n,
-                              keys=edge_keys(lo, hi, self.n))
+        return align_to_input(np.arange(self.g.m, dtype=np.int64), self.g,
+                              None, self.n, keys=edge_keys(lo, hi, self.n))
+
+    def query(self, edges) -> np.ndarray:
+        """Trussness for specific edges, aligned to the given rows."""
+        return self.T[self.edge_ids(edges)]
+
+    def hierarchy(self, *, mode: str | None = None) -> TrussHierarchy:
+        """The community index over the current decomposition (lazy, cached).
+
+        Built from the handle's own trussness + maintained triangle list on
+        first access; levels themselves materialize lazily inside the index.
+        The cache survives *local* ``update`` batches (untouched levels are
+        id-remapped, repaired levels come back dirty — see ``_hier_update``)
+        and is dropped whole by full rebuilds.  ``mode`` overrides the
+        handle's ``hier_mode``: a *different* mode returns a standalone
+        (uncached) index, so parity-oracle reads never evict the serving
+        cache.
+        """
+        mode = self.hier_mode if mode is None else mode
+        if mode not in HIER_MODES:
+            raise ValueError(
+                f"mode must be one of {HIER_MODES}, got {mode!r}")
+        if mode != self.hier_mode:
+            return TrussHierarchy(self.T, self.tri, mode=mode,
+                                  interpret=self.interpret)
+        if self._hier is None:
+            self._hier = TrussHierarchy(self.T, self.tri, mode=mode,
+                                        interpret=self.interpret)
+        return self._hier
 
     # ------------------------------------------------------------- update --
     def update(self, add_edges=None, remove_edges=None) -> UpdateStats:
@@ -459,6 +493,9 @@ class IncrementalTruss:
                     ok = (posn < m_after) & (kn[safe] == old_keys)
                 changed = int((self.T[posn[ok]] != T_old_ref[ok]).sum()) \
                     + int(I_keys.size)
+                if mode == "local" and self._hier is not None:
+                    self._hier_update(old_keys, I_keys, T_old_ref, posn, ok,
+                                      kn if m_after else None)
             st = UpdateStats(
                 mode=mode, m_before=m_before, m_after=m_after,
                 inserted=int(I_keys.size), deleted=int(D_keys.size),
@@ -696,6 +733,36 @@ class IncrementalTruss:
         return tau_L[np.searchsorted(L, A)]
 
     # ---------------------------------------------------------- internals --
+    def _hier_update(self, old_keys, I_keys, T_old, posn, ok, kn) -> None:
+        """Carry the community index across a *local* repair (DESIGN.md §11).
+
+        Every edge the repair touched bounds the levels whose community
+        structure can differ: ``k_hi`` is the maximum trussness involved in
+        any insertion, deletion, or trussness change (old or new value).
+        Levels above ``k_hi`` keep their exact partition — only edge ids
+        shifted — so they are remapped in O(m); levels at or below come
+        back dirty and rebuild lazily on next query.  Full rebuilds (the
+        past-``local_frac`` path) drop the index in ``_full_rebuild``.
+        """
+        m_before = old_keys.shape[0]
+        m_after = self.g.m
+        if m_after == 0 or kn is None or self._hier is None:
+            self._hier = None
+            return
+        k_hi = 1
+        if (~ok).any():                      # deletions: old death levels
+            k_hi = max(k_hi, int(T_old[~ok].max()))
+        t_new = self.T[posn[ok]]
+        t_old = T_old[ok]
+        diff = t_new != t_old
+        if diff.any():                       # changed: both old and new
+            k_hi = max(k_hi, int(t_old[diff].max()), int(t_new[diff].max()))
+        if I_keys.size:                      # insertions: their new levels
+            k_hi = max(k_hi, int(self.T[np.searchsorted(kn, I_keys)].max()))
+        old_to_new = np.full(m_before, -1, np.int64)
+        old_to_new[np.nonzero(ok)[0]] = posn[ok]
+        self._hier = self._hier.remapped(self.T, self.tri, old_to_new, k_hi)
+
     @staticmethod
     def _batch_keys(batch: np.ndarray, n: int) -> np.ndarray:
         if batch.size == 0:
@@ -713,6 +780,7 @@ class IncrementalTruss:
 
     def _full_rebuild(self, E: np.ndarray) -> None:
         """From-scratch decomposition through the standard (KCO) pipeline."""
+        self._hier = None        # full rebuild: community index rebuilt lazily
         g = build_csr(E, self.n)
         if g.m == 0:
             self.open_phases = {}

@@ -38,7 +38,7 @@ from repro.compat import cost_analysis
 from repro.launch.mesh import make_production_mesh
 from repro.configs import (ARCHS, SHAPES, get_config, input_specs,
                            cell_is_valid)
-from repro.models.model import ModelConfig, init_params, init_cache
+from repro.models.model import ModelConfig, init_params
 from repro.models import sharding as shard_rules
 from repro.train.step import TrainState, train_step
 from repro.optim.adamw import adamw_init, AdamWConfig

@@ -33,7 +33,7 @@ def main(argv=None):
     args = ap.parse_args(argv)
 
     cfg = reduced_config(args.arch) if args.reduced else get_config(args.arch)
-    mesh = make_host_mesh()
+    make_host_mesh()   # device-mesh init (serving here is single-host)
     params = init_params(cfg, jr.PRNGKey(args.seed))
     B, P, G = args.requests, args.prompt_len, args.gen
     max_seq = P + G

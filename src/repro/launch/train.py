@@ -12,12 +12,9 @@ compile-only proof).
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import functools
 import os
 import time
-
-import numpy as np
 
 import jax
 import jax.numpy as jnp
@@ -28,7 +25,7 @@ from repro.models.model import init_params
 from repro.models import sharding as shard_rules
 from repro.train.step import TrainState, train_step
 from repro.optim.adamw import AdamWConfig, adamw_init
-from repro.data.pipeline import SyntheticTokens, Prefetcher
+from repro.data.pipeline import SyntheticTokens
 from repro.checkpoint import CheckpointManager
 from repro.runtime.fault import StragglerMonitor, Heartbeat, run_with_retries
 from repro.launch.mesh import make_host_mesh

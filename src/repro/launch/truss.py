@@ -11,6 +11,16 @@ from-scratch PKT:
 
   PYTHONPATH=src python -m repro.launch.truss --graph rmat-small \
       --update-stream 16 --churn 0.01 [--verify]
+
+Community serving (DESIGN.md §11): open the graph as a handle, build the
+triangle-connected k-truss community index, and answer queries at level k —
+with ``--verify`` the device label-propagation labels are checked bitwise
+against the host union-find oracle on every level.  Composes with
+``--update-stream`` (the index is queried on the post-churn graph, having
+survived the updates through remap/dirty-level invalidation):
+
+  PYTHONPATH=src python -m repro.launch.truss --graph rmat-small \
+      --query-communities 4 [--hier-mode device|host] [--verify]
 """
 
 from __future__ import annotations
@@ -49,6 +59,42 @@ def churn_batch(edges: np.ndarray, n: int, frac: float, rng):
     return np.asarray(add, np.int64), rm
 
 
+def report_communities(handle, k: int, *, verify: bool = False) -> None:
+    """Build the community index on ``handle`` and report level-``k`` stats.
+
+    Prints index-build cost (one vmapped dispatch in device mode), the
+    level-k community size spectrum, and a sampled per-query latency; with
+    ``verify`` every level's labels are checked bitwise against the host
+    union-find oracle.
+    """
+    t0 = time.perf_counter()
+    hier = handle.hierarchy().build_all()
+    t_build = time.perf_counter() - t0
+    comms = handle.communities(k)
+    sizes = sorted((c.shape[0] for c in comms), reverse=True)
+    E = handle.edges                    # hoisted: El copies stay untimed
+    t0 = time.perf_counter()
+    n_q = 0
+    for eid in range(0, handle.m, max(1, handle.m // 64)):
+        handle.community(tuple(E[eid]), k)
+        n_q += 1
+    t_query = (time.perf_counter() - t0) / max(1, n_q)
+    print(f"community index: k_max={hier.k_max} "
+          f"levels={len(list(hier.levels))} build {t_build * 1e3:.1f}ms "
+          f"({hier.stats})")
+    print(f"k={k}: {len(comms)} communities, edge sizes top5={sizes[:5]}, "
+          f"query {t_query * 1e6:.0f}us/edge")
+    if verify:
+        other = "host" if hier.mode == "device" else "device"
+        oracle = handle.hierarchy(mode=other).build_all()
+        ok = all(np.array_equal(hier.level_labels(kk), oracle.level_labels(kk))
+                 for kk in hier.levels)
+        print(f"verify {hier.mode} labels vs {other} builder:",
+              "OK" if ok else "MISMATCH")
+        if not ok:
+            raise SystemExit(1)
+
+
 def run_update_stream(args) -> None:
     """Replay ``--update-stream`` churn batches through an engine handle."""
     from repro.serve.truss_engine import TrussEngine
@@ -56,13 +102,17 @@ def run_update_stream(args) -> None:
     E = named_graph(args.graph)
     n = int(E.max()) + 1
     eng = TrussEngine(mode=args.mode, support_mode=args.support_mode,
-                      table_mode=args.table_mode,
+                      table_mode=args.table_mode, hier_mode=args.hier_mode,
                       chunk=args.chunk or (1 << 12))
     t0 = time.perf_counter()
     h = eng.open(E, local_frac=args.local_frac)
     t_open = time.perf_counter() - t0
     print(f"graph={args.graph} n={n} m={h.m} open {t_open:.3f}s "
           f"mode={args.mode} sup={args.support_mode}")
+    if args.query_communities:
+        # build the index up front so the stream exercises its survival
+        # (local repairs remap untouched levels, dirty the rest)
+        h.hierarchy().build_all()
 
     rng = np.random.default_rng(args.update_seed)
     for i in range(args.update_stream):
@@ -79,12 +129,31 @@ def run_update_stream(args) -> None:
           f"({s['updates_local']} local / {s['updates_full']} full), "
           f"mean {mean_ms:.1f}ms vs open {t_open * 1e3:.1f}ms")
 
+    if args.query_communities:
+        report_communities(h, args.query_communities, verify=args.verify)
+
     if args.verify:
         from repro.core import truss_pkt
         ok = np.array_equal(h.trussness, truss_pkt(h.edges))
         print("verify vs from-scratch pkt:", "OK" if ok else "MISMATCH")
         if not ok:
             raise SystemExit(1)
+
+
+def run_query_communities(args) -> None:
+    """Open the graph as a serving handle and answer community queries."""
+    from repro.serve.truss_engine import TrussEngine
+
+    E = named_graph(args.graph)
+    eng = TrussEngine(mode=args.mode, support_mode=args.support_mode,
+                      table_mode=args.table_mode, hier_mode=args.hier_mode,
+                      chunk=args.chunk or (1 << 12))
+    t0 = time.perf_counter()
+    h = eng.open(E)
+    t_open = time.perf_counter() - t0
+    print(f"graph={args.graph} n={h.n} m={h.m} open {t_open:.3f}s "
+          f"hier_mode={args.hier_mode}")
+    report_communities(h, args.query_communities, verify=args.verify)
 
 
 def main(argv=None):
@@ -108,6 +177,15 @@ def main(argv=None):
     ap.add_argument("--compact-frac", type=float, default=0.25,
                     help="live-edge compaction threshold for the peel loop "
                          "(0 disables; see DESIGN.md §10)")
+    from repro.core.hierarchy import HIER_MODES
+    ap.add_argument("--query-communities", type=int, default=0, metavar="K",
+                    help="build the truss community index and report the "
+                         "K-truss communities (DESIGN.md §11); composes "
+                         "with --update-stream")
+    ap.add_argument("--hier-mode", default="device",
+                    choices=list(HIER_MODES),
+                    help="community-index builder: device label propagation "
+                         "(default) or the host union-find parity oracle")
     ap.add_argument("--verify", action="store_true",
                     help="check against the numpy oracle (small graphs!)")
     ap.add_argument("--update-stream", type=int, default=0, metavar="K",
@@ -123,6 +201,8 @@ def main(argv=None):
 
     if args.update_stream:
         return run_update_stream(args)
+    if args.query_communities:
+        return run_query_communities(args)
 
     E = named_graph(args.graph)
     n = int(E.max()) + 1

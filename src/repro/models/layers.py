@@ -8,7 +8,6 @@ accumulation (the production-standard mixed-precision recipe).
 
 from __future__ import annotations
 
-import dataclasses
 from typing import Any
 
 import jax

@@ -79,7 +79,6 @@ def _mamba1_scan(xc, dt, Bm, Cm, A, h0, q_chunk: int, unroll=1):
     chained by a short lax.scan carrying the boundary state.
     """
     B, S, DI = xc.shape
-    N = Bm.shape[-1]
     Q = min(q_chunk, S)
     nq = -(-S // Q)
     pad = nq * Q - S

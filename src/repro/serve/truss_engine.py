@@ -58,6 +58,7 @@ import jax.numpy as jnp
 from repro.graphs.csr import (CSRGraph, build_csr, canonical_edges_with_rows,
                               degeneracy_order, edge_keys, relabel)
 from repro.core import support as support_mod
+from repro.core.hierarchy import HIER_MODES
 from repro.core.pkt import (PEEL_MODES, PeelTables, _SENTINEL_S, _peel_loop,
                             align_to_input, chunk_ranges)
 from repro.core.truss_inc import IncrementalTruss, UpdateStats
@@ -260,6 +261,54 @@ class TrussHandle:
         """Trussness for specific edges, aligned to the given rows."""
         return self._inc.query(edges)
 
+    # --------------------------------------------- community queries (§11) --
+    def hierarchy(self, *, mode: str | None = None):
+        """The handle's :class:`~repro.core.hierarchy.TrussHierarchy`.
+
+        Lazily built from the handle's maintained trussness + triangle list
+        and cached; local ``TrussEngine.update`` batches carry it forward
+        (untouched levels are id-remapped, repaired levels rebuild lazily),
+        full rebuilds drop it.  ``mode`` ∈ ``HIER_MODES`` overrides the
+        engine's default ("device" label propagation vs the "host"
+        union-find oracle — bitwise-identical labels either way); a
+        non-default mode returns a standalone index without touching the
+        cache, so oracle reads never evict the serving state.
+        """
+        return self._inc.hierarchy(mode=mode)
+
+    def communities(self, k: int) -> list[np.ndarray]:
+        """Every k-truss community as a (c, 2) array of edge endpoints.
+
+        Communities are the *triangle-connected* components of the edges
+        with trussness >= k (Wang & Cheng), ordered by their representative
+        (minimum) edge id; an edge in no surviving triangle forms a
+        singleton.  k above the graph's max trussness yields ``[]``.
+        """
+        E = self._inc.edges
+        return [E[ids] for ids in self._inc.hierarchy().communities(k)]
+
+    def community(self, edge_or_vertex, k: int):
+        """The k-truss community around one edge — or all around one vertex.
+
+        An ``(u, v)`` pair returns that edge's community as a (c, 2)
+        endpoint array (empty when the edge's trussness is below ``k``; an
+        edge not in the graph raises the descriptive alignment ValueError).
+        A scalar vertex id returns a *list* of communities, one per distinct
+        level-``k`` community among the vertex's incident edges — a vertex,
+        unlike an edge, can sit on the border of several k-trusses.
+        """
+        h = self._inc.hierarchy()
+        E = self._inc.edges
+        q = np.asarray(edge_or_vertex)
+        if q.ndim == 0:                       # vertex query
+            v = int(q)
+            inc_ids = np.nonzero((E[:, 0] == v) | (E[:, 1] == v))[0]
+            labels = h.level_labels(k)[inc_ids]
+            reps = np.unique(labels[labels >= 0])
+            return [E[h.community_of(int(r), k)] for r in reps]
+        eid = int(self._inc.edge_ids(q.reshape(1, 2))[0])
+        return E[h.community_of(eid, k)]
+
     def __repr__(self):
         state = "closed" if self.closed else f"m={self._inc.m}"
         return f"TrussHandle({self.hid}, {state})"
@@ -269,7 +318,8 @@ class TrussEngine:
     """Queue API over the batched decomposition pipeline."""
 
     def __init__(self, *, mode: str = "chunked", support_mode: str = "jnp",
-                 table_mode: str = "device", chunk: int = 1 << 12,
+                 table_mode: str = "device", hier_mode: str = "device",
+                 chunk: int = 1 << 12,
                  reorder: bool = True, max_pending: int = 32,
                  max_edges: int = 1 << 22, interpret: bool | None = None):
         if mode not in PEEL_MODES:
@@ -281,6 +331,9 @@ class TrussEngine:
         if table_mode not in support_mod.TABLE_MODES:
             raise ValueError(f"table_mode must be one of "
                              f"{support_mod.TABLE_MODES}, got {table_mode!r}")
+        if hier_mode not in HIER_MODES:
+            raise ValueError(f"hier_mode must be one of {HIER_MODES}, "
+                             f"got {hier_mode!r}")
         if chunk < 1:
             raise ValueError("chunk must be positive")
         if max_edges < 1:
@@ -288,6 +341,7 @@ class TrussEngine:
         self.mode = mode
         self.support_mode = support_mode
         self.table_mode = table_mode
+        self.hier_mode = hier_mode
         self.max_edges = max_edges
         self.chunk = _next_pow2(chunk)
         self.reorder = reorder
@@ -402,8 +456,9 @@ class TrussEngine:
         """
         inc = IncrementalTruss(
             edges, mode=self.mode, support_mode=self.support_mode,
-            table_mode=self.table_mode, chunk=self.chunk,
-            local_frac=local_frac, interpret=self.interpret)
+            table_mode=self.table_mode, hier_mode=self.hier_mode,
+            chunk=self.chunk, local_frac=local_frac,
+            interpret=self.interpret)
         h = TrussHandle(self._next_handle, inc)
         self._next_handle += 1
         self._handles[h.hid] = h

@@ -17,7 +17,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.models.model import ModelConfig, forward, init_params
 from repro.models import sharding as shard_rules
-from repro.optim.adamw import adamw_init, adamw_update, AdamWConfig
+from repro.optim.adamw import adamw_update, AdamWConfig
 
 Params = dict[str, Any]
 
@@ -131,7 +131,6 @@ def make_train_step(cfg: ModelConfig, mesh: jax.sharding.Mesh,
         functools.partial(init_params, cfg), jax.random.PRNGKey(0))
     pspec = shard_rules.param_specs(cfg, pshape, axes,
                                     fsdp_enabled=fsdp_enabled)
-    oshape = jax.eval_shape(lambda p: adamw_init(p), pshape)
     ospec = {"m": pspec, "v": pspec}
     state_spec = TrainState(step=P(), params=pspec, opt=ospec)
     state_sharding = jax.tree.map(

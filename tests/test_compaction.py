@@ -16,8 +16,8 @@ from repro.core.pkt import PEEL_MODES, peel_live_subset, pkt, truss_pkt
 from repro.core.ref import truss_numpy
 from repro.core.support import SUPPORT_MODES, compute_support
 from repro.graphs.csr import build_csr, edges_from_arrays
-from repro.graphs.gen import (barabasi_albert_edges, erdos_renyi_edges,
-                              ring_of_cliques_edges, rmat_edges)
+from repro.graphs.gen import (barabasi_albert_edges, ring_of_cliques_edges,
+                              rmat_edges)
 
 MATRIX = [(pm, sm) for pm in PEEL_MODES for sm in SUPPORT_MODES]
 

@@ -5,8 +5,6 @@ import os
 import subprocess
 import sys
 
-import pytest
-
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 # 8 virtual devices on a <4-core host makes XLA's spin-waiting CPU

@@ -1,0 +1,306 @@
+"""Truss community hierarchy (DESIGN.md §11): device label-propagation vs
+host union-find parity, nesting invariants, and index survival across
+``engine.update`` — all against a brute-force triangle-BFS oracle."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st, HealthCheck
+
+from repro.graphs.csr import build_csr, edges_from_arrays
+from repro.graphs.datasets import k4_edges, paper_fig1_edges, path_edges
+from repro.graphs.gen import ring_of_cliques_edges
+from repro.core.pkt import PEEL_MODES
+from repro.core.hierarchy import HIER_MODES, TrussHierarchy, \
+    hierarchy_from_graph
+from repro.core.truss_inc import IncrementalTruss
+from repro.serve.truss_engine import TrussEngine
+
+SETTINGS = dict(max_examples=10, deadline=None,
+                suppress_health_check=[HealthCheck.too_slow])
+
+
+def _er_edges(n, p, seed):
+    rng = np.random.default_rng(seed)
+    mask = rng.random((n, n)) < p
+    src, dst = np.nonzero(np.triu(mask, 1))
+    return edges_from_arrays(src, dst, n)
+
+
+def _brute_labels(T, tri, k):
+    """Third implementation: python BFS over the active triangle adjacency.
+
+    Deliberately structure-free (dict-of-sets + queue) so it shares nothing
+    with either production builder."""
+    m = T.shape[0]
+    labels = np.full(m, -1, np.int64)
+    adj = {e: set() for e in range(m)}
+    for row in tri:
+        if T[row].min() >= k:
+            a, b, c = (int(x) for x in row)
+            adj[a] |= {b, c}
+            adj[b] |= {a, c}
+            adj[c] |= {a, b}
+    seen = set()
+    for e in range(m):
+        if T[e] < k or e in seen:
+            continue
+        queue, comp = [e], {e}
+        while queue:
+            x = queue.pop()
+            for y in adj[x]:
+                if y not in comp:
+                    comp.add(y)
+                    queue.append(y)
+        seen |= comp
+        for x in comp:
+            labels[x] = e          # ascending scan: e is the component min
+    return labels
+
+
+def _hier_pair(inc):
+    dev = TrussHierarchy(inc.trussness, inc.triangles, mode="device")
+    host = TrussHierarchy(inc.trussness, inc.triangles, mode="host")
+    return dev, host
+
+
+def _assert_full_parity(inc, ctx=None):
+    dev, host = _hier_pair(inc)
+    dev.build_all()
+    host.build_all()
+    for k in dev.levels:
+        ld, lh = dev.level_labels(k), host.level_labels(k)
+        assert np.array_equal(ld, lh), (ctx, k)
+        assert np.array_equal(
+            ld, _brute_labels(inc.trussness, inc.triangles, k)), (ctx, k)
+    return dev
+
+
+# --------------------------------------------------------------- parity -----
+
+def test_parity_random_graphs():
+    for seed, (n, p) in enumerate([(12, 0.5), (20, 0.3), (28, 0.2)]):
+        E = _er_edges(n, p, seed)
+        if E.shape[0] == 0:
+            continue
+        _assert_full_parity(IncrementalTruss(E), seed)
+
+
+@pytest.mark.parametrize("edges_fn", [
+    paper_fig1_edges, k4_edges, lambda: path_edges(6),
+    lambda: ring_of_cliques_edges(4, 5),
+    lambda: np.array([[0, 1]], np.int64),
+])
+def test_parity_adversarial(edges_fn):
+    _assert_full_parity(IncrementalTruss(edges_fn()))
+
+
+@pytest.mark.parametrize("mode", PEEL_MODES)
+@pytest.mark.parametrize("hier_mode", HIER_MODES)
+def test_parity_across_executor_modes(mode, hier_mode):
+    """The index is identical whatever executor decomposed the graph and
+    whichever builder labels it."""
+    eng = TrussEngine(mode=mode, hier_mode=hier_mode)
+    h = eng.open(ring_of_cliques_edges(3, 5))
+    hier = h.hierarchy()
+    assert hier.mode == hier_mode
+    ref = _assert_full_parity(h._inc, (mode, hier_mode))
+    for k in ref.levels:
+        assert np.array_equal(hier.level_labels(k), ref.level_labels(k))
+
+
+def test_host_out_of_order_level_requests():
+    """Regression: the shared top-down union-find must not leak coarser
+    unions into a later request for a finer (higher-k) level."""
+    E = ring_of_cliques_edges(4, 5)
+    inc = IncrementalTruss(E)
+    h = TrussHierarchy(inc.trussness, inc.triangles, mode="host")
+    l2 = h.level_labels(2)           # advances the shared state to k=2
+    l5 = h.level_labels(5)           # above the frontier: fresh union-find
+    assert np.array_equal(l5, _brute_labels(inc.trussness, inc.triangles, 5))
+    assert np.array_equal(l2, _brute_labels(inc.trussness, inc.triangles, 2))
+
+
+def test_device_lazy_equals_batch():
+    inc = IncrementalTruss(_er_edges(24, 0.3, 3))
+    batch = TrussHierarchy(inc.trussness, inc.triangles).build_all()
+    lazy = TrussHierarchy(inc.trussness, inc.triangles)
+    for k in sorted(lazy.levels, reverse=True):   # warm-start path
+        assert np.array_equal(lazy.level_labels(k), batch.level_labels(k))
+    assert batch.stats["batch_builds"] == 1
+
+
+# ------------------------------------------------------------- structure ----
+
+def test_nesting_and_parent_links():
+    """Level-k communities refine level-(k-1): every community maps into
+    exactly one parent, and all its edges share that parent's label."""
+    inc = IncrementalTruss(_er_edges(26, 0.35, 7))
+    hier = TrussHierarchy(inc.trussness, inc.triangles).build_all()
+    for k in hier.levels:
+        if k == 2:
+            reps, parents = hier.parents(2)
+            assert np.array_equal(reps, parents)
+            continue
+        lk, lcoarse = hier.level_labels(k), hier.level_labels(k - 1)
+        live = lk >= 0
+        assert (lcoarse[live] >= 0).all()        # live at k => live at k-1
+        # the coarse label is constant across each fine community
+        assert np.array_equal(lcoarse[live], lcoarse[lk[live]])
+        reps, parents = hier.parents(k)
+        assert np.array_equal(parents, lcoarse[reps])
+
+
+def test_triangle_free_edges_are_singletons():
+    inc = IncrementalTruss(path_edges(7))
+    hier = TrussHierarchy(inc.trussness, inc.triangles).build_all()
+    assert hier.k_max == 2
+    comms = hier.communities(2)
+    assert len(comms) == inc.m
+    assert all(c.shape == (1,) for c in comms)
+
+
+def test_empty_and_out_of_range_levels():
+    inc = IncrementalTruss(np.zeros((0, 2), np.int64))
+    hier = TrussHierarchy(inc.trussness, inc.triangles)
+    assert list(hier.levels) == []
+    assert hier.communities(2) == []
+    inc = IncrementalTruss(k4_edges())
+    hier = TrussHierarchy(inc.trussness, inc.triangles)
+    assert hier.communities(1) == []              # k < 2: nothing is labeled
+    assert hier.level_labels(1).tolist() == [-1] * inc.m
+    assert hier.communities(hier.k_max + 1) == []
+    assert hier.community_of(0, hier.k_max + 1).shape == (0,)
+    assert hier.community_of(99, 2).shape == (0,)
+
+
+def test_validation():
+    with pytest.raises(ValueError, match="mode must be one of"):
+        TrussHierarchy(np.zeros(0, np.int64), np.zeros((0, 3), np.int64),
+                       mode="gpu")
+    with pytest.raises(ValueError, match="beyond"):
+        TrussHierarchy(np.array([2, 2], np.int64),
+                       np.array([[0, 1, 7]], np.int64))
+    with pytest.raises(ValueError, match="hier_mode"):
+        TrussEngine(hier_mode="nope")
+    with pytest.raises(ValueError, match="hier_mode"):
+        IncrementalTruss(k4_edges(), hier_mode="nope")
+
+
+def test_hierarchy_from_graph():
+    E = paper_fig1_edges()
+    inc = IncrementalTruss(E)
+    g = build_csr(E.astype(np.int64))
+    hier = hierarchy_from_graph(g, inc.trussness)
+    ref = TrussHierarchy(inc.trussness, inc.triangles).build_all()
+    for k in ref.levels:
+        assert np.array_equal(hier.level_labels(k), ref.level_labels(k))
+
+
+# -------------------------------------------------------------- serving -----
+
+def test_handle_query_api():
+    eng = TrussEngine()
+    h = eng.open(ring_of_cliques_edges(4, 6))
+    comms = h.communities(6)
+    assert len(comms) == 4 and all(c.shape == (15, 2) for c in comms)
+    # edge query: one clique; endpoint order / swap tolerated
+    c = h.community((1, 0), 6)
+    assert c.shape == (15, 2)
+    # the community contains the queried edge
+    assert ((c[:, 0] == 0) & (c[:, 1] == 1)).any()
+    # vertex query: list of communities around the vertex
+    vs = h.community(0, 6)
+    assert [x.shape for x in vs] == [(15, 2)]
+    # below-level edge: empty; absent edge: descriptive error
+    t = h.query(np.array([[0, 1]]))[0]
+    assert h.community((0, 1), int(t) + 1).shape[0] == 0
+    with pytest.raises(ValueError, match="not present"):
+        h.community((0, 9999), 3)
+    # the index is cached on the handle until an update invalidates it
+    assert h.hierarchy() is h.hierarchy()
+
+
+def test_index_survives_local_update_bridge():
+    """Deterministic remap case: deleting a trussness-2 bridge carries all
+    higher levels by id translation and only dirties level 2."""
+    eng = TrussEngine()
+    h = eng.open(ring_of_cliques_edges(4, 6), local_frac=1.0)
+    h.hierarchy().build_all()
+    bridge = h.edges[int(np.argmin(h.trussness))]
+    st = eng.update(h, remove_edges=bridge.reshape(1, 2))
+    assert st.mode == "local"
+    hier = h.hierarchy()
+    assert hier.stats["remapped_levels"] >= hier.k_max - 2
+    _assert_full_parity(h._inc, "bridge")
+    fresh = TrussHierarchy(h._inc.trussness, h._inc.triangles,
+                           mode="host").build_all()
+    for k in fresh.levels:
+        assert np.array_equal(hier.level_labels(k), fresh.level_labels(k))
+
+
+@st.composite
+def update_scripts(draw):
+    n = draw(st.integers(6, 18))
+    density = draw(st.floats(0.15, 0.5))
+    seed = draw(st.integers(0, 2**31 - 1))
+    E = _er_edges(n, density, seed)
+    batches = []
+    for _ in range(draw(st.integers(1, 3))):
+        batches.append((draw(st.integers(0, 5)), draw(st.integers(0, 5))))
+    return n, E, batches, seed
+
+
+@given(update_scripts())
+@settings(**SETTINGS)
+def test_property_index_survives_updates(script):
+    """After any insert/delete script, the carried index is bitwise equal
+    to a fresh rebuild of either mode (and to the brute oracle)."""
+    n, E, batches, seed = script
+    if E.shape[0] == 0:
+        return
+    eng = TrussEngine()
+    h = eng.open(E, local_frac=1.0)
+    h.hierarchy().build_all()
+    rng = np.random.default_rng(seed + 1)
+    for n_add, n_rm in batches:
+        cur = h.edges
+        m = cur.shape[0]
+        rm = cur[rng.choice(m, size=min(n_rm, m), replace=False)] \
+            if m else np.zeros((0, 2), np.int64)
+        add = np.stack([rng.integers(0, n + 2, n_add),
+                        rng.integers(0, n + 2, n_add)], axis=1)
+        add = add[add[:, 0] != add[:, 1]]
+        eng.update(h, add_edges=add, remove_edges=rm)
+        if h.m == 0:
+            continue
+        hier = h.hierarchy()
+        fresh = _assert_full_parity(h._inc, (n_add, n_rm))
+        for k in fresh.levels:
+            assert np.array_equal(hier.level_labels(k),
+                                  fresh.level_labels(k)), k
+
+
+@given(update_scripts())
+@settings(max_examples=4, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+def test_property_full_fallback_drops_index(script):
+    """local_frac=0 forces full rebuilds; the index must come back fresh
+    (never stale) through that path too."""
+    n, E, batches, seed = script
+    if E.shape[0] == 0:
+        return
+    eng = TrussEngine()
+    h = eng.open(E, local_frac=0.0)
+    h.hierarchy().build_all()
+    rng = np.random.default_rng(seed + 1)
+    for n_add, n_rm in batches:
+        cur = h.edges
+        m = cur.shape[0]
+        rm = cur[rng.choice(m, size=min(n_rm, m), replace=False)] \
+            if m else np.zeros((0, 2), np.int64)
+        add = np.stack([rng.integers(0, n + 2, n_add),
+                        rng.integers(0, n + 2, n_add)], axis=1)
+        add = add[add[:, 0] != add[:, 1]]
+        eng.update(h, add_edges=add, remove_edges=rm)
+        if h.m:
+            _assert_full_parity(h._inc, "full-fallback")

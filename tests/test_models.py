@@ -8,7 +8,7 @@ import jax
 import jax.numpy as jnp
 import jax.random as jr
 
-from repro.configs import ARCHS, ARCH_IDS, get_config, reduced_config
+from repro.configs import ARCHS, get_config, reduced_config
 from repro.models.model import init_params, forward, init_cache
 from repro.models import ssm
 from repro.models.moe import moe_apply

@@ -9,7 +9,7 @@ import jax.numpy as jnp
 import jax.random as jr
 
 from repro.graphs.gen import rmat_edges, ring_of_cliques_edges
-from repro.graphs.csr import build_csr, relabel, degeneracy_order
+from repro.graphs.csr import build_csr
 from repro.core import truss_pkt, pkt, truss_trilist
 from repro.configs import reduced_config
 from repro.models.model import init_params, init_cache

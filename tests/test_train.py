@@ -5,14 +5,13 @@ import dataclasses
 import os
 
 import numpy as np
-import pytest
 import jax
 import jax.numpy as jnp
 import jax.random as jr
 
 from repro.configs import reduced_config
 from repro.models.model import init_params
-from repro.train.step import TrainState, train_step, loss_fn
+from repro.train.step import TrainState, train_step
 from repro.optim.adamw import AdamWConfig, adamw_init, lr_at_step
 from repro.data.pipeline import SyntheticTokens, BinaryTokenFile, Prefetcher
 from repro.checkpoint import save_checkpoint, restore_checkpoint, \

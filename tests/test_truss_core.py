@@ -7,7 +7,7 @@ from hypothesis import given, settings, strategies as st, HealthCheck
 from repro.graphs.csr import build_csr, edges_from_arrays, relabel, \
     degeneracy_order
 from repro.graphs.datasets import (paper_fig1_edges, k4_edges, triangle_edges,
-                                   path_edges, karate_like_edges, named_graph)
+                                   path_edges, karate_like_edges)
 from repro.graphs.gen import rmat_edges, ring_of_cliques_edges
 from repro.core import (pkt, truss_pkt, truss_wc, truss_ros, truss_numpy,
                         truss_trilist, compute_support, compute_support_ros,

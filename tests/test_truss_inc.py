@@ -45,7 +45,6 @@ def update_scripts(draw):
     n = draw(st.integers(6, 20))
     density = draw(st.floats(0.08, 0.5))
     seed = draw(st.integers(0, 2**31 - 1))
-    rng = np.random.default_rng(seed)
     E = _er_edges(n, density, seed)
     batches = []
     for _ in range(draw(st.integers(1, 3))):
