@@ -1,0 +1,272 @@
+"""Sustained-QPS serving benchmark: latency vs offered load, parity-gated.
+
+The ROADMAP's "millions of users" claim needs a number behind it
+(DESIGN.md §12): this bench replays mixed 90/9/1 query/update/open traffic
+through the async :class:`~repro.serve.scheduler.TrussScheduler` at a sweep
+of offered QPS points and reports p50/p99 latency per request kind.  Every
+run is **parity-gated**: the same request schedule is replayed through a
+synchronous ``TrussEngine`` and every async result must be bitwise-equal —
+query rows, post-churn trussness per handle, and opened-handle trussness.
+A mismatch exits nonzero, which is the CI bench-trend gate.
+
+Traffic shape: a fixed pool of open handles takes trussness queries (90 %)
+and churn updates (9 %, toggling a reserved extra-edge pool so queried rows
+always exist in both replays); 1 % of requests open fresh same-size-class
+graphs.  Offered load is paced deterministically (request i enqueues at
+``i / qps``); latency is future-completion minus enqueue.
+
+Output: ``BENCH_serve.json`` rows per offered-QPS point.
+
+  PYTHONPATH=src python -m benchmarks.serve_bench [--smoke] [--out F]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+
+import numpy as np
+
+
+def build_fleet(n_handles: int, n_extras: int, seed: int):
+    """Handle-pool graphs plus, per handle, a disjoint extra-edge churn pool."""
+    from repro.graphs.gen import erdos_renyi_edges
+
+    graphs, extras = [], []
+    for i in range(n_handles):
+        E = erdos_renyi_edges(64, 8.0, seed=seed + i)
+        present = {(int(u), int(v)) for u, v in E}
+        rng = np.random.default_rng(seed + 1000 + i)
+        pool = []
+        while len(pool) < n_extras:
+            u, v = int(rng.integers(0, 64)), int(rng.integers(0, 64))
+            if u == v:
+                continue
+            e = (min(u, v), max(u, v))
+            if e not in present:
+                present.add(e)
+                pool.append(e)
+        graphs.append(E)
+        extras.append(pool)
+    return graphs, extras
+
+
+def make_workload(graphs, extras, n_requests: int, seed: int,
+                  mix=(0.90, 0.09, 0.01)):
+    """A deterministic mixed request schedule (same for async and sync).
+
+    Updates toggle extra-pool edges (tracking presence at generation time),
+    so the schedule is valid — removals always hit present edges — and
+    queries only touch the never-removed base rows.
+    """
+    from repro.graphs.gen import erdos_renyi_edges
+
+    rng = np.random.default_rng(seed)
+    present = [set() for _ in graphs]
+    ops, n_open = [], 0
+    for _ in range(n_requests):
+        r = rng.random()
+        hid = int(rng.integers(0, len(graphs)))
+        if r < mix[0]:
+            rows = graphs[hid][
+                rng.integers(0, graphs[hid].shape[0], size=8)]
+            ops.append(("query", hid, rows))
+        elif r < mix[0] + mix[1]:
+            picks = rng.choice(len(extras[hid]),
+                               size=min(4, len(extras[hid])), replace=False)
+            add = [extras[hid][j] for j in picks
+                   if extras[hid][j] not in present[hid]]
+            rem = [extras[hid][j] for j in picks
+                   if extras[hid][j] in present[hid]]
+            present[hid] |= set(add)
+            present[hid] -= set(rem)
+            ops.append(("update", hid,
+                        np.array(add or np.zeros((0, 2)), np.int64),
+                        np.array(rem or np.zeros((0, 2)), np.int64)))
+        else:
+            ops.append(("open", erdos_renyi_edges(
+                64, 8.0, seed=seed + 5000 + n_open)))
+            n_open += 1
+    return ops
+
+
+def replay_async(sched, graphs, ops, qps: float):
+    """Pace ``ops`` through the scheduler at ``qps``; returns measurements."""
+    handles = [sched.open_async(g).result(timeout=600) for g in graphs]
+    lat = []          # (op index, kind, seconds) — appended on completion
+    futs = []
+    t_start = time.perf_counter()
+    for i, op in enumerate(ops):
+        target = t_start + i / qps
+        now = time.perf_counter()
+        if target > now:
+            time.sleep(target - now)
+        kind = op[0]
+        t_enq = time.perf_counter()
+        if kind == "query":
+            f = sched.query_async(handles[op[1]], op[2])
+        elif kind == "update":
+            f = sched.update_async(handles[op[1]], add_edges=op[2],
+                                   remove_edges=op[3])
+        else:
+            f = sched.open_async(op[1])
+        f.add_done_callback(
+            lambda f, i=i, k=kind, t=t_enq:
+            lat.append((i, k, time.perf_counter() - t)))
+        futs.append((i, kind, f))
+    results = {i: f.result(timeout=600) for i, _, f in futs}
+    duration = time.perf_counter() - t_start
+    return handles, results, lat, duration
+
+
+def replay_sync(engine, graphs, ops):
+    """The synchronous oracle: same schedule, same order, caller-thread."""
+    handles = [engine.open(g) for g in graphs]
+    t0 = time.perf_counter()
+    results = {}
+    for i, op in enumerate(ops):
+        kind = op[0]
+        if kind == "query":
+            results[i] = handles[op[1]].query(op[2])
+        elif kind == "update":
+            results[i] = engine.update(handles[op[1]], add_edges=op[2],
+                                       remove_edges=op[3])
+        else:
+            results[i] = engine.open(op[1])
+    return handles, results, time.perf_counter() - t0
+
+
+def check_parity(ops, a_handles, a_results, s_handles, s_results) -> bool:
+    """Every async result bitwise-equal to the synchronous engine's."""
+    ok = True
+    for i, op in enumerate(ops):
+        if op[0] == "query":
+            ok = ok and np.array_equal(a_results[i], s_results[i])
+        elif op[0] == "open":
+            ok = ok and np.array_equal(a_results[i].trussness,
+                                       s_results[i].trussness)
+    for ha, hs in zip(a_handles, s_handles):
+        ok = ok and np.array_equal(ha.trussness, hs.trussness)
+        ok = ok and np.array_equal(ha.edges, hs.edges)
+    return bool(ok)
+
+
+def _percentiles(lat, kind=None):
+    ms = [1e3 * s for _, k, s in lat if kind is None or k == kind]
+    if not ms:
+        return None
+    return {"n": len(ms),
+            "p50_ms": float(np.percentile(ms, 50)),
+            "p99_ms": float(np.percentile(ms, 99)),
+            "mean_ms": float(np.mean(ms)),
+            "max_ms": float(np.max(ms))}
+
+
+def run(qps_points=(50.0, 200.0, 800.0), n_requests: int = 240,
+        n_handles: int = 3, n_extras: int = 24, seed: int = 0,
+        out_path: str = "BENCH_serve.json") -> int:
+    """The bench: one latency row per offered-QPS point, parity-gated."""
+    from repro.serve.scheduler import TrussScheduler
+    from repro.serve.truss_engine import TrussEngine
+
+    graphs, extras = build_fleet(n_handles, n_extras, seed)
+    report = {"bench": "serve-scheduler", "mix": {"query": 0.90,
+              "update": 0.09, "open": 0.01},
+              "n_handles": n_handles, "m_per_graph": int(graphs[0].shape[0]),
+              "rows": [], "ok": True}
+
+    # warmup: pay the open/update/query compiles outside the timed window
+    warm = TrussEngine()
+    wh = warm.open(graphs[0])
+    warm.update(wh, add_edges=np.array([extras[0][0]], np.int64))
+    wh.query(graphs[0][:4])
+
+    for qps in qps_points:
+        ops = make_workload(graphs, extras, n_requests, seed)
+        sched = TrussScheduler(max_batch=16, max_delay_ms=2.0,
+                               max_queue=1 << 20, max_inflight=1 << 20)
+        a_handles, a_results, lat, duration = replay_async(
+            sched, graphs, ops, qps)
+        sched_stats = sched.stats()
+        sched.close()
+
+        s_engine = TrussEngine()
+        s_handles, s_results, sync_seconds = replay_sync(
+            s_engine, graphs, ops)
+        parity = check_parity(ops, a_handles, a_results,
+                              s_handles, s_results)
+        report["ok"] = report["ok"] and parity
+        row = {
+            "offered_qps": qps,
+            "achieved_qps": n_requests / duration,
+            "duration_seconds": duration,
+            "sync_replay_seconds": sync_seconds,
+            "n_requests": n_requests,
+            "shed": sched_stats["counters"]["shed"],
+            "dispatches": sched_stats["counters"]["dispatches"],
+            "coalesced_updates": sched_stats["counters"]["coalesced_updates"],
+            "latency": {k: _percentiles(lat, None if k == "all" else k)
+                        for k in ("all", "query", "update", "open")},
+            "stages": sched_stats["stages"],
+            "parity": parity,
+        }
+        report["rows"].append(row)
+
+    with open(out_path, "w") as f:
+        json.dump(report, f, indent=2, sort_keys=True)
+    print(json.dumps(report, indent=2, sort_keys=True))
+    if not report["ok"]:
+        print("SERVE BENCH FAILED: async/sync parity regression",
+              file=sys.stderr)
+        return 1
+    return 0
+
+
+def rows(quick: bool = True) -> list[str]:
+    """benchmarks/run.py adapter: CSV rows from a quick in-memory run."""
+    import io
+    from contextlib import redirect_stdout
+
+    from benchmarks.common import row
+
+    buf = io.StringIO()
+    path = "BENCH_serve.json"
+    with redirect_stdout(buf):
+        code = run(qps_points=(100.0,) if quick else (50.0, 200.0),
+                   n_requests=120 if quick else 240, out_path=path)
+    with open(path) as f:
+        rep = json.load(f)
+    out = []
+    for r in rep["rows"]:
+        q = r["latency"]["query"] or {}
+        out.append(row(
+            f"serve/qps-{r['offered_qps']:.0f}",
+            q.get("mean_ms", 0.0) / 1e3,
+            f"p50={q.get('p50_ms', 0):.2f}ms;p99={q.get('p99_ms', 0):.2f}ms"
+            f";achieved={r['achieved_qps']:.0f}qps"
+            f";parity={int(r['parity'])};exit={code}"))
+    return out
+
+
+def main() -> None:
+    """CLI entry: ``--smoke`` is the CI parity gate on a small schedule."""
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="one small QPS point, quick parity gate (CI)")
+    ap.add_argument("--out", default="BENCH_serve.json")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--qps", type=float, nargs="*", default=None,
+                    help="override the offered-QPS sweep")
+    args = ap.parse_args()
+    if args.smoke:
+        raise SystemExit(run(qps_points=tuple(args.qps or (150.0,)),
+                             n_requests=120, n_handles=2, seed=args.seed,
+                             out_path=args.out))
+    raise SystemExit(run(qps_points=tuple(args.qps or (50.0, 200.0, 800.0)),
+                         seed=args.seed, out_path=args.out))
+
+
+if __name__ == "__main__":
+    main()

@@ -70,6 +70,8 @@ class PeelTables(NamedTuple):
 
 @dataclasses.dataclass(frozen=True)
 class PKTResult:
+    """Full output of one ``pkt`` decomposition, with phase accounting."""
+
     trussness: np.ndarray   # (m,) int32, >= 2
     support: np.ndarray     # (m,) int32 initial support
     levels: int             # number of peel levels executed
@@ -233,7 +235,6 @@ def _peel_loop(N, Eid, S_ext0, processed0, tabs: PeelTables, *, m: int,
     the caller can gather survivors into a compacted edge space and re-enter
     with bitwise-identical continuation.
     """
-
     def chunk_contrib(c, dec, S_ext, processed, inCurr, l):
         """Decrement contributions from one chunk of the wedge table."""
         base = c * chunk
@@ -577,26 +578,49 @@ def pkt(g: CSRGraph, *, chunk: int | None = None, mode: str = "chunked",
         compact_frac: float | None = _COMPACT_FRAC,
         compact_min: int = _COMPACT_MIN,
         phase_timings: bool = False) -> PKTResult:
-    """Full PKT truss decomposition. Returns trussness per edge (S+2).
+    """Full PKT truss decomposition of one CSR graph.
 
-    ``mode`` (alias ``peel_mode``, which wins when both are given) selects
-    the peel executor and ``support_mode`` the support executor — the two
-    axes are independent (see module docstring); ``interpret``
-    forces/forbids Pallas interpret mode (default: interpret off-TPU).
+    Every executor pairing produces bitwise-identical trussness
+    (``tests/test_parity_matrix.py``).
 
-    ``table_mode`` selects where the wedge tables are built
-    (``support_mod.TABLE_MODES``): "device" — the default, unless prebuilt
-    host tables are passed — constructs them as jitted XLA programs over the
-    (cached) device CSR arrays, so no table bytes cross the host boundary;
-    "numpy" is the original host builder, kept as the parity oracle.
+    Args:
+        g: the graph as a :class:`~repro.graphs.csr.CSRGraph`.
+        chunk: wedge-table chunk size (pow2; ``None`` derives it from the
+            table size, see ``kernels.wedge_common.auto_chunk``).
+        mode: peel executor — one of ``PEEL_MODES`` ("chunked", "dense",
+            "pallas"); alias ``peel_mode`` wins when both are given.
+        peel_mode: alias for ``mode``.
+        support_mode: support executor — one of
+            ``support.SUPPORT_MODES`` ("jnp", "pallas"); the two executor
+            axes are independent (see module docstring).
+        table_mode: where the wedge tables are built
+            (``support.TABLE_MODES``): "device" — the default, unless
+            prebuilt host tables are passed — constructs them as jitted XLA
+            programs over the (cached) device CSR arrays, so no table bytes
+            cross the host boundary; "numpy" is the original host builder,
+            kept as the parity oracle.
+        support_table: optional prebuilt host support table (implies
+            ``table_mode="numpy"`` unless overridden).
+        peel_table: optional prebuilt host peel table (same implication).
+        interpret: force/forbid Pallas interpret mode (default: interpret
+            when not on a TPU).
+        compact_frac: live-edge compaction threshold (DESIGN.md §10): once
+            a peel segment leaves fewer than ``compact_frac · m`` edges
+            live (and more than ``compact_min``), survivors are gathered
+            into a compacted pow2-bucketed subproblem and peeling re-enters
+            there.  ``None`` disables compaction; results are bitwise
+            identical either way.
+        compact_min: minimum live-edge count for compaction to trigger.
+        phase_timings: populate ``PKTResult.phases`` with a
+            {tables, support, peel, compact} wall-time split (adds sync
+            barriers between phases).
 
-    ``compact_frac`` / ``compact_min`` control live-edge compaction
-    (DESIGN.md §10): once a peel segment leaves fewer than
-    ``compact_frac · m`` edges live (and more than ``compact_min``),
-    survivors are gathered into a compacted pow2-bucketed subproblem and
-    peeling re-enters there.  ``compact_frac=None`` disables compaction.
-    Results are bitwise identical either way.  ``phase_timings`` populates
-    ``PKTResult.phases`` (adds sync barriers between phases).
+    Returns:
+        :class:`PKTResult` — per-edge trussness (support + 2, aligned to
+        ``g.El`` rows), initial support, and loop/compaction counters.
+
+    Raises:
+        ValueError: unknown ``mode`` / ``support_mode`` / ``table_mode``.
     """
     import time as _time
 

@@ -164,6 +164,12 @@ def make_pkt_dist(mesh: jax.sharding.Mesh, axes: Sequence[str], *, m: int,
 def make_support_dist(mesh: jax.sharding.Mesh, axes: Sequence[str], *, m: int,
                       iters: int, mode: str = "jnp", chunk: int = 0,
                       interpret: bool = True):
+    """Jitted shard_map support computation over ``mesh`` (DESIGN.md §6).
+
+    Wedge-table shards live per-device along ``axes``; each device counts
+    triangles for its shard against the replicated CSR arrays and the
+    results are psum-reduced to a replicated (m,) support vector.
+    """
     spec_rep = P()
     spec_sh = P(tuple(axes))
     fn = shard_map(

@@ -45,5 +45,6 @@ def truss_numpy(edges: np.ndarray) -> np.ndarray:
 
 
 def max_truss(edges: np.ndarray) -> int:
+    """Largest k such that the k-truss is non-empty (numpy oracle)."""
     t = truss_numpy(edges)
     return int(t.max(initial=2))

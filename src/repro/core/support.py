@@ -73,6 +73,7 @@ class WedgeTable:
 
     @property
     def size(self) -> int:
+        """Number of wedge entries (Nw)."""
         return int(self.e1.shape[0])
 
 

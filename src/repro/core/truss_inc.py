@@ -77,6 +77,47 @@ class UpdateStats:
     changed: int         # current edges whose trussness is new or different
     seconds: float
     handle: object = None  # set by TrussEngine.update
+    coalesced: int = 1   # queued batches merged into this repair (§12)
+
+
+def compose_update_batches(batches) -> tuple[np.ndarray, np.ndarray]:
+    """Collapse a sequence of update batches into one equivalent batch.
+
+    One ``update`` batch maps ``E → (E − remove) ∪ add`` (set-wise, add
+    wins on overlap).  That composition is closed: applying batches
+    ``(a_1, r_1) … (a_k, r_k)`` in order equals applying the single batch
+    ``(A, R)`` with ``A`` the surviving adds (each ``a_i`` minus every
+    *later* remove) and ``R`` the union of all removes — the scheduler's
+    coalescing rule (DESIGN.md §12).
+
+    Args:
+        batches: iterable of ``(add_edges, remove_edges)`` pairs in arrival
+            order; either element may be ``None`` or empty.
+
+    Returns:
+        ``(add, remove)`` int64 ``(k, 2)`` canonical edge arrays such that
+        one ``update(add_edges=add, remove_edges=remove)`` produces the
+        same graph as applying the batches sequentially.
+
+    Raises:
+        ValueError: any batch fails edge validation (self-loops, negative
+            or overflowing vertex ids).
+    """
+    A: set[tuple[int, int]] = set()
+    R: set[tuple[int, int]] = set()
+    empty = np.zeros((0, 2), np.int64)
+    for add, rem in batches:
+        a = check_edge_array(add if add is not None else empty)
+        r = check_edge_array(rem if rem is not None else empty)
+        a_set = {(min(int(u), int(v)), max(int(u), int(v))) for u, v in a}
+        r_set = {(min(int(u), int(v)), max(int(u), int(v))) for u, v in r}
+        A -= r_set
+        A |= a_set
+        R |= r_set
+    def to_arr(s):
+        return np.array(sorted(s), np.int64) if s else empty
+
+    return to_arr(A), to_arr(R)
 
 
 # --------------------------------------------------------------- triangles --
@@ -336,6 +377,28 @@ class IncrementalTruss:
     exists, or removing one that doesn't, is a no-op for that row (the
     batch semantics are set-wise; an edge in both batches ends up present).
     Returns :class:`UpdateStats`.
+
+    Args:
+        edges: initial (k, 2) integer edge array (validated like every
+            batch entry point).
+        n: vertex-space size (default: max id + 1; grows with updates).
+        mode: peel executor (see ``core.pkt.pkt``).
+        support_mode: support executor.
+        table_mode: wedge-table builder ("device" / "numpy", §10).
+        hier_mode: community-index builder ("device" / "host", §11).
+        chunk: peel chunk size (pow2).
+        local_frac: affected-region fraction above which an update falls
+            back to full recompute.
+        host_peel_max: region size ceiling for the host re-peel path;
+            larger affected regions use the masked device re-peel.
+        compact_frac: live-edge compaction threshold for full recomputes
+            (``None`` disables; §10).
+        compact_min: minimum live-edge count for compaction.
+        interpret: force/forbid Pallas interpret mode.
+
+    Raises:
+        ValueError: unknown mode axis, invalid edge array, or
+            out-of-range ``local_frac``.
     """
 
     def __init__(self, edges, *, n: int | None = None, mode: str = "chunked",
@@ -383,6 +446,7 @@ class IncrementalTruss:
     # ------------------------------------------------------------ queries --
     @property
     def m(self) -> int:
+        """Current canonical edge count."""
         return self.g.m
 
     @property
@@ -453,7 +517,49 @@ class IncrementalTruss:
         return self._hier
 
     # ------------------------------------------------------------- update --
+    def update_many(self, batches) -> UpdateStats:
+        """Apply several update batches as one composed repair.
+
+        Args:
+            batches: iterable of ``(add_edges, remove_edges)`` pairs in
+                arrival order (either element may be ``None``).
+
+        Returns:
+            The :class:`UpdateStats` of the single composed ``update``,
+            with ``coalesced`` set to the number of merged batches.  The
+            final state is bitwise-identical to applying the batches one
+            at a time (see :func:`compose_update_batches`).
+
+        Raises:
+            ValueError: any batch fails edge validation.
+        """
+        batches = list(batches)
+        add, rem = compose_update_batches(batches)
+        st = self.update(add_edges=add, remove_edges=rem)
+        st = dataclasses.replace(st, coalesced=max(1, len(batches)))
+        self.stats["last"] = st
+        return st
+
     def update(self, add_edges=None, remove_edges=None) -> UpdateStats:
+        """Apply one insert/delete batch: ``E → (E − remove) ∪ add``.
+
+        Args:
+            add_edges: ``(k, 2)`` integer edge array to insert (either
+                endpoint order; duplicates collapse; inserting a present
+                edge is a no-op for that row).  ``None`` means none.
+            remove_edges: ``(k, 2)`` integer edge array to delete (removing
+                an absent edge is a no-op for that row).  An edge in both
+                batches ends up present.
+
+        Returns:
+            :class:`UpdateStats` — ``mode`` reports whether the batch was
+            absorbed by local repair (``"local"``), fell back to a full
+            recompute (``"full"``), or changed nothing (``"noop"``).
+
+        Raises:
+            ValueError: edge arrays fail validation (self-loops, negative
+                or overflowing vertex ids).
+        """
         t0 = time.perf_counter()
         add = check_edge_array(add_edges if add_edges is not None
                                else np.zeros((0, 2), np.int64))

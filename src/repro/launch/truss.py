@@ -21,6 +21,15 @@ survived the updates through remap/dirty-level invalidation):
 
   PYTHONPATH=src python -m repro.launch.truss --graph rmat-small \
       --query-communities 4 [--hier-mode device|host] [--verify]
+
+Async serving (DESIGN.md §12): replay paced mixed 90/9/1 query/update/open
+traffic through the continuous-batching ``TrussScheduler``, printing
+per-kind latency percentiles and the scheduler's per-stage timing; with
+``--verify`` every async result is checked bitwise against a synchronous
+engine replay of the same schedule:
+
+  PYTHONPATH=src python -m repro.launch.truss --graph rmat-small \
+      --serve 200 --qps 200 [--max-batch 16] [--max-delay-ms 2] [--verify]
 """
 
 from __future__ import annotations
@@ -140,6 +149,130 @@ def run_update_stream(args) -> None:
             raise SystemExit(1)
 
 
+def run_serve(args) -> None:
+    """Replay paced mixed traffic through the async scheduler (``--serve``).
+
+    Opens the named graph as a persistent handle, then replays ``--serve``
+    requests at ``--qps`` in the 90/9/1 query/update/open serving mix
+    (DESIGN.md §12): trussness queries on base rows, churn updates toggling
+    a reserved extra-edge pool (so queried rows always exist), and opens of
+    small fresh graphs.  Prints per-kind latency and the scheduler's stage
+    breakdown; ``--verify`` replays the same schedule through a synchronous
+    engine and checks every result bitwise.
+    """
+    from repro.graphs.gen import erdos_renyi_edges
+    from repro.serve.scheduler import TrussScheduler
+
+    E = named_graph(args.graph)
+    n = int(E.max()) + 1
+    rng = np.random.default_rng(args.update_seed)
+    # reserved churn pool: absent edges the updates toggle, disjoint from
+    # the base rows the queries sample (keeps both replays valid)
+    present = {(int(u), int(v)) for u, v in E}
+    pool = []
+    while len(pool) < 32:
+        u, v = int(rng.integers(0, n)), int(rng.integers(0, n))
+        if u != v and (min(u, v), max(u, v)) not in present:
+            pool.append((min(u, v), max(u, v)))
+            present.add(pool[-1])
+
+    # a replay measures latency, not shedding: admit the whole schedule
+    sched = TrussScheduler(
+        max_batch=args.max_batch, max_delay_ms=args.max_delay_ms,
+        max_queue=max(256, 4 * args.serve),
+        max_inflight=max(64, 4 * args.serve),
+        mode=args.mode, support_mode=args.support_mode,
+        table_mode=args.table_mode, hier_mode=args.hier_mode,
+        chunk=args.chunk or (1 << 12))
+    t0 = time.perf_counter()
+    h = sched.open_async(E, local_frac=args.local_frac).result()
+    print(f"graph={args.graph} n={n} m={h.m} open "
+          f"{time.perf_counter() - t0:.3f}s qps={args.qps} "
+          f"mix=90/9/1 query/update/open")
+
+    # deterministic schedule (generation tracks pool presence so removals
+    # always hit present edges)
+    ops, in_pool, n_open = [], set(), 0
+    for _ in range(args.serve):
+        r = rng.random()
+        if r < 0.90:
+            ops.append(("query", E[rng.integers(0, E.shape[0], size=8)]))
+        elif r < 0.99:
+            picks = [pool[j] for j in rng.choice(len(pool), size=4,
+                                                 replace=False)]
+            add = [e for e in picks if e not in in_pool]
+            rem = [e for e in picks if e in in_pool]
+            in_pool |= set(add)
+            in_pool -= set(rem)
+            ops.append(("update", np.array(add or np.zeros((0, 2)), np.int64),
+                        np.array(rem or np.zeros((0, 2)), np.int64)))
+        else:
+            ops.append(("open", erdos_renyi_edges(
+                64, 8.0, seed=args.update_seed + 5000 + n_open)))
+            n_open += 1
+
+    lat, futs = [], []
+    t_start = time.perf_counter()
+    for i, op in enumerate(ops):
+        target = t_start + i / args.qps
+        if target > time.perf_counter():
+            time.sleep(target - time.perf_counter())
+        t_enq = time.perf_counter()
+        if op[0] == "query":
+            f = sched.query_async(h, op[1])
+        elif op[0] == "update":
+            f = sched.update_async(h, add_edges=op[1], remove_edges=op[2])
+        else:
+            f = sched.open_async(op[1])
+        f.add_done_callback(lambda f, k=op[0], t=t_enq:
+                            lat.append((k, time.perf_counter() - t)))
+        futs.append(f)
+    results = [f.result() for f in futs]
+    duration = time.perf_counter() - t_start
+    st = sched.stats()
+    sched.close()
+
+    for kind in ("query", "update", "open"):
+        ms = sorted(1e3 * s for k, s in lat if k == kind)
+        if ms:
+            print(f"{kind:6s} n={len(ms):4d} "
+                  f"p50={ms[len(ms) // 2]:.2f}ms "
+                  f"p99={ms[min(len(ms) - 1, int(0.99 * len(ms)))]:.2f}ms "
+                  f"max={ms[-1]:.2f}ms")
+    print(f"achieved {len(ops) / duration:.0f} qps "
+          f"(offered {args.qps:.0f}); dispatches="
+          f"{st['counters']['dispatches']} "
+          f"coalesced_updates={st['counters']['coalesced_updates']} "
+          f"shed={st['counters']['shed']}")
+    for stage, s in st["stages"].items():
+        if s["count"]:
+            print(f"  stage {stage:10s} n={s['count']:4d} "
+                  f"total={s['seconds'] * 1e3:.1f}ms "
+                  f"max={s['max_seconds'] * 1e3:.1f}ms")
+
+    if args.verify:
+        from repro.serve.truss_engine import TrussEngine
+
+        eng = TrussEngine(mode=args.mode, support_mode=args.support_mode,
+                          table_mode=args.table_mode,
+                          hier_mode=args.hier_mode,
+                          chunk=args.chunk or (1 << 12))
+        hs = eng.open(E, local_frac=args.local_frac)
+        ok = True
+        for op, got in zip(ops, results):
+            if op[0] == "query":
+                ok = ok and np.array_equal(got, hs.query(op[1]))
+            elif op[0] == "update":
+                eng.update(hs, add_edges=op[1], remove_edges=op[2])
+            else:
+                ok = ok and np.array_equal(got.trussness,
+                                           eng.open(op[1]).trussness)
+        ok = ok and np.array_equal(h.trussness, hs.trussness)
+        print("verify async vs sync engine:", "OK" if ok else "MISMATCH")
+        if not ok:
+            raise SystemExit(1)
+
+
 def run_query_communities(args) -> None:
     """Open the graph as a serving handle and answer community queries."""
     from repro.serve.truss_engine import TrussEngine
@@ -197,8 +330,21 @@ def main(argv=None):
                     help="affected-region fraction above which an update "
                          "falls back to full recompute")
     ap.add_argument("--update-seed", type=int, default=0)
+    ap.add_argument("--serve", type=int, default=0, metavar="N",
+                    help="replay N mixed 90/9/1 query/update/open requests "
+                         "through the async TrussScheduler (DESIGN.md §12)")
+    ap.add_argument("--qps", type=float, default=200.0,
+                    help="offered request rate for --serve")
+    ap.add_argument("--max-batch", type=int, default=16,
+                    help="scheduler bucket size before dispatch (--serve)")
+    ap.add_argument("--max-delay-ms", type=float, default=2.0,
+                    help="scheduler latency bound: a non-full bucket "
+                         "dispatches once its oldest request waits this "
+                         "long (--serve)")
     args = ap.parse_args(argv)
 
+    if args.serve:
+        return run_serve(args)
     if args.update_stream:
         return run_update_stream(args)
     if args.query_communities:

@@ -1,5 +1,9 @@
+"""Serving layer: batched truss engine, async scheduler, LM scaffolding."""
+
 from repro.serve.engine import make_prefill_step, make_decode_step
+from repro.serve.scheduler import Overloaded, TrussScheduler
 from repro.serve.truss_engine import TrussEngine, TrussHandle, truss_batched
 
 __all__ = ["make_prefill_step", "make_decode_step",
+           "Overloaded", "TrussScheduler",
            "TrussEngine", "TrussHandle", "truss_batched"]

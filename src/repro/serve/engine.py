@@ -44,6 +44,7 @@ def decode(params, cfg: ModelConfig, tokens, cache, *, positions=None,
 
 
 def make_prefill_step(cfg: ModelConfig, mesh):
+    """jitted prefill step for ``cfg`` on ``mesh``."""
     fn = functools.partial(prefill, cfg=cfg)
     return jax.jit(fn)
 
@@ -56,6 +57,7 @@ def make_decode_step(cfg: ModelConfig, mesh, *, seq_shard: bool = False):
 
 def cache_shardings(cfg: ModelConfig, mesh, batch: int, max_seq: int,
                     *, seq_shard: bool = False):
+    """NamedShardings for a fresh decode cache (seq_shard for long ctx)."""
     shape = jax.eval_shape(lambda: init_cache(cfg, batch, max_seq))
     spec = shard_rules.cache_specs(cfg, shape, mesh.axis_names,
                                    seq_shard=seq_shard)

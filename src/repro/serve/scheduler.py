@@ -1,0 +1,605 @@
+"""Async continuous-batching truss serving — the event-loop scheduler.
+
+``TrussEngine`` is a synchronous ticket queue: ``submit``/``open``/
+``update``/``hierarchy`` all execute on the caller's thread, and nothing
+coalesces mixed traffic into device dispatches.  This module puts the
+LLM-serving shape on top of it (DESIGN.md §12): requests are admitted
+asynchronously and return ``concurrent.futures.Future``s immediately, a
+single scheduler thread runs a continuous-batching tick loop, and
+compatible work coalesces per tick —
+
+  * **decompositions** (``submit_async``) of one pow2 size class merge into
+    one vmapped ``_batched_truss_dev`` dispatch (the engine's bucket
+    machinery), released either when the bucket reaches ``max_batch`` or
+    when its oldest request has waited ``max_delay_ms`` — the classic
+    latency-vs-batch-fullness policy;
+  * **handle updates** (``update_async``) queued against one handle merge
+    set-wise into a single :class:`~repro.core.truss_inc.IncrementalTruss`
+    repair (``compose_update_batches``: n churn batches, one
+    affected-region re-peel), bitwise-identical to applying them one at a
+    time;
+  * **queries** (``query_async``/``communities_async``) serve from the
+    handle's maintained trussness and cached hierarchy index, ordered FIFO
+    per handle against that handle's updates, so every query observes
+    exactly the prefix of updates admitted before it.
+
+Admission control sheds load with a typed :class:`Overloaded` error (never
+by silent queueing): a global queue-depth bound (``max_queue``) plus a
+per-tenant in-flight cap (``max_inflight``).  Per-stage timing — queue
+wait, operand build, device dispatch, result readback, repair, query — is
+accumulated and exposed via :meth:`TrussScheduler.stats`.
+
+Parity: the scheduler adds *no* numeric path of its own.  Async results
+are bitwise-equal to the synchronous engine's because every dispatch is an
+engine call (``submit``+``flush``+``result``, ``update_many``, handle
+queries) and the only reordering it ever performs is across independent
+requests — per-handle order is FIFO and update coalescing composes
+set-wise exactly (DESIGN.md §12 gives the argument;
+``benchmarks/serve_bench.py`` gates it in CI).
+
+Usage::
+
+    from repro.serve import TrussScheduler
+
+    with TrussScheduler(max_batch=16, max_delay_ms=2.0) as sched:
+        f1 = sched.submit_async(edges_a)          # Future[np.ndarray]
+        f2 = sched.open_async(edges_b)            # Future[TrussHandle]
+        h = f2.result()
+        f3 = sched.update_async(h, add_edges=new_rows)
+        f4 = sched.query_async(h, some_rows)
+        print(f1.result(), f3.result().mode, f4.result())
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from collections import deque
+from concurrent.futures import Future
+
+import numpy as np
+
+from repro.serve.truss_engine import TrussEngine, TrussHandle
+
+_KINDS = ("submit", "open", "update", "query", "communities")
+
+
+class Overloaded(RuntimeError):
+    """Request shed by admission control.
+
+    Raised synchronously by the ``*_async`` entry points when the global
+    queue depth reaches ``max_queue`` or the calling tenant already has
+    ``max_inflight`` requests in flight.  Shedding at admission (instead of
+    queueing unboundedly) keeps tail latency bounded under overload; the
+    caller owns the retry policy.
+    """
+
+
+@dataclasses.dataclass
+class _Request:
+    """One admitted request, queued between admission and completion."""
+
+    kind: str                      # one of _KINDS
+    tenant: str
+    future: Future
+    t_enq: float                   # perf_counter at admission
+    edges: np.ndarray | None = None        # submit/open/query payload
+    handle: TrussHandle | None = None      # update/query/communities target
+    add: np.ndarray | None = None          # update payload
+    remove: np.ndarray | None = None
+    k: int = 0                             # communities level
+    local_frac: float = 0.25               # open policy
+
+
+class TrussScheduler:
+    """Event-loop continuous-batching scheduler over a :class:`TrussEngine`.
+
+    One background thread owns the engine; callers interact only through
+    the ``*_async`` methods, each returning a ``concurrent.futures.Future``
+    (engine errors — validation, oversized graphs, closed handles —
+    surface as that future's exception; admission errors raise
+    :class:`Overloaded` synchronously).
+
+    Args:
+        engine: the engine to serve; ``None`` builds one from
+            ``engine_kwargs`` (with ``max_pending`` raised so the engine's
+            own auto-flush never preempts the dispatch policy).  Once
+            wrapped, the engine must not be driven concurrently from other
+            threads.
+        max_batch: dispatch a decomposition bucket as soon as it holds this
+            many requests.
+        max_delay_ms: dispatch a non-empty bucket once its oldest request
+            has waited this long, even if not full (the latency bound; 0
+            dispatches every tick).
+        max_queue: global admitted-but-unfinished request bound; beyond it
+            admissions shed with :class:`Overloaded`.
+        max_inflight: per-tenant in-flight bound (same shedding).
+        start: start the scheduler thread immediately; ``False`` leaves
+            requests queued until :meth:`start` (tests use this to stage
+            traffic deterministically).
+        **engine_kwargs: forwarded to :class:`TrussEngine` when ``engine``
+            is ``None`` (``mode``, ``support_mode``, ``table_mode``, …).
+
+    Raises:
+        ValueError: non-positive ``max_batch``/``max_queue``/
+            ``max_inflight`` or negative ``max_delay_ms``.
+    """
+
+    def __init__(self, engine: TrussEngine | None = None, *,
+                 max_batch: int = 16, max_delay_ms: float = 2.0,
+                 max_queue: int = 256, max_inflight: int = 64,
+                 start: bool = True, **engine_kwargs):
+        if max_batch < 1:
+            raise ValueError("max_batch must be positive")
+        if max_delay_ms < 0:
+            raise ValueError("max_delay_ms must be >= 0")
+        if max_queue < 1:
+            raise ValueError("max_queue must be positive")
+        if max_inflight < 1:
+            raise ValueError("max_inflight must be positive")
+        if engine is None:
+            engine_kwargs.setdefault("max_pending", 4 * max_batch + max_queue)
+            engine = TrussEngine(**engine_kwargs)
+        elif engine_kwargs:
+            raise ValueError("pass engine_kwargs only without an engine")
+        self.engine = engine
+        self.max_batch = int(max_batch)
+        self.max_delay = float(max_delay_ms) / 1e3
+        self.max_queue = int(max_queue)
+        self.max_inflight = int(max_inflight)
+
+        self._lock = threading.Lock()
+        self._work = threading.Condition(self._lock)
+        self._inbox: deque[_Request] = deque()
+        #: bucket key -> [(ticket, request)] awaiting batched dispatch
+        self._buckets: dict[object, list[tuple[int, _Request]]] = {}
+        #: handle id -> FIFO of update/query/communities requests
+        self._hqueues: dict[int, deque[_Request]] = {}
+        self._depth = 0                    # admitted, not yet finished
+        self._inflight: dict[str, int] = {}
+        self._closed = False
+        self._drain = True
+        self._counters = {k: 0 for k in _KINDS}
+        self._counters.update(shed=0, done=0, errors=0, cancelled=0,
+                              dispatches=0, coalesced_updates=0)
+        self._stages = {k: {"count": 0, "seconds": 0.0, "max_seconds": 0.0}
+                        for k in ("queue_wait", "build", "dispatch",
+                                  "readback", "open", "repair", "query")}
+        self._thread: threading.Thread | None = None
+        if start:
+            self.start()
+
+    # ------------------------------------------------------------ lifecycle --
+    def start(self) -> None:
+        """Start the scheduler thread (idempotent)."""
+        with self._lock:
+            if self._closed:
+                raise RuntimeError("scheduler is closed")
+            if self._thread is not None:
+                return
+            self._thread = threading.Thread(
+                target=self._loop, name="truss-scheduler", daemon=True)
+            self._thread.start()
+
+    def close(self, *, drain: bool = True) -> None:
+        """Stop the scheduler.
+
+        Args:
+            drain: ``True`` dispatches everything already admitted before
+                stopping (their futures complete); ``False`` cancels queued
+                requests (their futures report cancelled).
+        """
+        with self._work:
+            if self._closed and self._thread is None:
+                return
+            self._closed = True
+            self._drain = drain
+            self._work.notify_all()
+            t = self._thread
+        if t is not None:
+            t.join()
+        with self._lock:
+            self._thread = None
+
+    def __enter__(self):
+        """Context manager: returns self (thread already running)."""
+        self.start()
+        return self
+
+    def __exit__(self, *exc):
+        """Context manager exit: drain and stop the scheduler thread."""
+        self.close(drain=True)
+        return False
+
+    # ------------------------------------------------------------ admission --
+    def _admit(self, req: _Request) -> Future:
+        with self._work:
+            if self._closed:
+                raise RuntimeError("scheduler is closed")
+            if self._depth >= self.max_queue:
+                self._counters["shed"] += 1
+                raise Overloaded(
+                    f"queue depth {self._depth} at max_queue="
+                    f"{self.max_queue}: request shed; retry with backoff "
+                    f"or raise max_queue")
+            if self._inflight.get(req.tenant, 0) >= self.max_inflight:
+                self._counters["shed"] += 1
+                raise Overloaded(
+                    f"tenant {req.tenant!r} has "
+                    f"{self._inflight[req.tenant]} requests in flight "
+                    f"(max_inflight={self.max_inflight}): request shed")
+            self._depth += 1
+            self._inflight[req.tenant] = \
+                self._inflight.get(req.tenant, 0) + 1
+            self._counters[req.kind] += 1
+            self._inbox.append(req)
+            self._work.notify()
+        return req.future
+
+    @staticmethod
+    def _check_handle(handle) -> TrussHandle:
+        if not isinstance(handle, TrussHandle):
+            raise TypeError(
+                f"expected a TrussHandle (from open_async), got "
+                f"{type(handle).__name__}; the scheduler does not promote "
+                f"tickets — open the graph instead")
+        if handle.closed:
+            raise ValueError(f"handle {handle.hid} is closed")
+        return handle
+
+    def submit_async(self, edges, *, tenant: str = "default") -> Future:
+        """Queue one decomposition; the future resolves to its trussness.
+
+        Args:
+            edges: ``(k, 2)`` integer edge array (``TrussEngine.submit``
+                validation applies — on failure the *future* carries the
+                ValueError).
+            tenant: admission-control accounting key.
+
+        Returns:
+            ``Future[np.ndarray]`` — trussness aligned to the input rows,
+            bitwise-equal to ``TrussEngine.submit``/``result``.
+
+        Raises:
+            Overloaded: shed by queue-depth or per-tenant admission control.
+            RuntimeError: the scheduler is closed.
+        """
+        return self._admit(_Request(
+            kind="submit", tenant=tenant, future=Future(),
+            t_enq=time.perf_counter(), edges=np.asarray(edges)))
+
+    def open_async(self, edges, *, local_frac: float = 0.25,
+                   tenant: str = "default") -> Future:
+        """Queue a persistent-handle open (full decomposition).
+
+        Args:
+            edges: ``(k, 2)`` integer edge array.
+            local_frac: the handle's local-repair fallback threshold.
+            tenant: admission-control accounting key.
+
+        Returns:
+            ``Future[TrussHandle]`` — pass the handle to ``update_async``/
+            ``query_async``/``communities_async``.
+
+        Raises:
+            Overloaded: shed by admission control.
+            RuntimeError: the scheduler is closed.
+        """
+        return self._admit(_Request(
+            kind="open", tenant=tenant, future=Future(),
+            t_enq=time.perf_counter(), edges=np.asarray(edges),
+            local_frac=local_frac))
+
+    def update_async(self, handle: TrussHandle, *, add_edges=None,
+                     remove_edges=None, tenant: str = "default") -> Future:
+        """Queue one insert/delete batch against a handle.
+
+        Consecutive updates queued against the same handle (with no query
+        between them) coalesce into a single composed repair; each of their
+        futures then carries the same :class:`UpdateStats` with
+        ``coalesced`` set to the merge width.
+
+        Args:
+            handle: an open handle from ``open_async`` (or
+                ``TrussEngine.open``).
+            add_edges: edges to insert (``None`` for none).
+            remove_edges: edges to delete.
+            tenant: admission-control accounting key.
+
+        Returns:
+            ``Future[UpdateStats]`` for the (possibly coalesced) repair.
+
+        Raises:
+            Overloaded: shed by admission control.
+            TypeError: ``handle`` is not a :class:`TrussHandle`.
+            ValueError: the handle is already closed.
+            RuntimeError: the scheduler is closed.
+        """
+        return self._admit(_Request(
+            kind="update", tenant=tenant, future=Future(),
+            t_enq=time.perf_counter(), handle=self._check_handle(handle),
+            add=add_edges, remove=remove_edges))
+
+    def query_async(self, handle: TrussHandle, edges, *,
+                    tenant: str = "default") -> Future:
+        """Queue a trussness query; FIFO-ordered against the handle's updates.
+
+        Args:
+            handle: an open handle.
+            edges: ``(k, 2)`` rows to look up (endpoint order/dupes OK).
+            tenant: admission-control accounting key.
+
+        Returns:
+            ``Future[np.ndarray]`` — per-row trussness, observing exactly
+            the updates admitted on this handle before this query.
+
+        Raises:
+            Overloaded: shed by admission control.
+            TypeError: ``handle`` is not a :class:`TrussHandle`.
+            ValueError: the handle is already closed.
+            RuntimeError: the scheduler is closed.
+        """
+        return self._admit(_Request(
+            kind="query", tenant=tenant, future=Future(),
+            t_enq=time.perf_counter(), handle=self._check_handle(handle),
+            edges=np.asarray(edges)))
+
+    def communities_async(self, handle: TrussHandle, k: int, *,
+                          tenant: str = "default") -> Future:
+        """Queue a k-truss community listing against the cached index.
+
+        Args:
+            handle: an open handle.
+            k: community level (see ``TrussHandle.communities``).
+            tenant: admission-control accounting key.
+
+        Returns:
+            ``Future[list[np.ndarray]]`` — every level-``k`` community as a
+            ``(c, 2)`` endpoint array, served from the handle's lazily
+            built, update-surviving hierarchy index.
+
+        Raises:
+            Overloaded: shed by admission control.
+            TypeError: ``handle`` is not a :class:`TrussHandle`.
+            ValueError: the handle is already closed.
+            RuntimeError: the scheduler is closed.
+        """
+        return self._admit(_Request(
+            kind="communities", tenant=tenant, future=Future(),
+            t_enq=time.perf_counter(), handle=self._check_handle(handle),
+            k=int(k)))
+
+    # ------------------------------------------------------------- the loop --
+    def _loop(self) -> None:
+        while True:
+            with self._work:
+                if not self._inbox and not self._closed:
+                    due = self._seconds_to_deadline()
+                    if due is None or due > 0:
+                        self._work.wait(timeout=due)
+                batch = list(self._inbox)
+                self._inbox.clear()
+                closing = self._closed
+                drain = self._drain
+            if closing and not drain:
+                self._cancel_all(batch)
+                return
+            self._route(batch)
+            self._service_handles()
+            self._dispatch_buckets(force=closing)
+            with self._lock:
+                if (self._closed and not self._inbox and not self._buckets
+                        and not self._hqueues):
+                    return
+
+    def _seconds_to_deadline(self):
+        """Time until the next bucket must dispatch; None when no bucket waits.
+
+        The deadline of a bucket is ``oldest.t_enq + max_delay``; a bucket
+        at ``max_batch`` is due immediately.  Called under the lock.
+        """
+        if not self._buckets:
+            return None
+        now = time.perf_counter()
+        due = None
+        for entries in self._buckets.values():
+            if len(entries) >= self.max_batch:
+                return 0.0
+            oldest = entries[0][1].t_enq
+            d = max(0.0, oldest + self.max_delay - now)
+            due = d if due is None else min(due, d)
+        return due
+
+    def _finish(self, req: _Request, value=None, exc=None) -> None:
+        with self._lock:
+            self._depth -= 1
+            left = self._inflight.get(req.tenant, 1) - 1
+            if left <= 0:
+                self._inflight.pop(req.tenant, None)
+            else:
+                self._inflight[req.tenant] = left
+            self._counters["done"] += 1
+            if exc is not None:
+                self._counters["errors"] += 1
+        if exc is not None:
+            req.future.set_exception(exc)
+        else:
+            req.future.set_result(value)
+
+    def _cancel_all(self, batch) -> None:
+        """close(drain=False): cancel everything queued, nothing dispatches."""
+        pending = list(batch)
+        for entries in self._buckets.values():
+            for ticket, r in entries:
+                self.engine.discard(ticket)
+                pending.append(r)
+        for q in self._hqueues.values():
+            pending.extend(q)
+        self._buckets.clear()
+        self._hqueues.clear()
+        for req in pending:
+            with self._lock:
+                self._depth -= 1
+                self._counters["cancelled"] += 1
+            req.future.cancel()
+        with self._lock:
+            self._inflight.clear()
+
+    def _stage(self, name: str, seconds: float) -> None:
+        with self._lock:
+            s = self._stages[name]
+            s["count"] += 1
+            s["seconds"] += seconds
+            s["max_seconds"] = max(s["max_seconds"], seconds)
+
+    # ------------------------------------------------------------- routing --
+    def _route(self, batch) -> None:
+        """Admit a tick's inbox into the dispatch structures (build stage)."""
+        for req in batch:
+            now = time.perf_counter()
+            self._stage("queue_wait", now - req.t_enq)
+            if req.kind == "submit":
+                try:
+                    t0 = time.perf_counter()
+                    ticket = self.engine.submit(req.edges)
+                    self._stage("build", time.perf_counter() - t0)
+                    key = self.engine.bucket_of(ticket)
+                except Exception as e:          # noqa: BLE001 — to future
+                    self._finish(req, exc=e)
+                    continue
+                if key is None:
+                    # resolved at submit (empty graph / engine auto-flush)
+                    self._finish(req, value=self.engine.result(ticket))
+                else:
+                    with self._lock:
+                        self._buckets.setdefault(key, []).append(
+                            (ticket, req))
+            elif req.kind == "open":
+                try:
+                    t0 = time.perf_counter()
+                    h = self.engine.open(req.edges,
+                                         local_frac=req.local_frac)
+                    self._stage("open", time.perf_counter() - t0)
+                except Exception as e:          # noqa: BLE001 — to future
+                    self._finish(req, exc=e)
+                    continue
+                self._finish(req, value=h)
+            else:                               # update / query / communities
+                with self._lock:
+                    self._hqueues.setdefault(
+                        req.handle.hid, deque()).append(req)
+
+    # ------------------------------------------------- handle-op servicing --
+    def _service_handles(self) -> None:
+        """Drain every handle queue FIFO, coalescing update runs (§12).
+
+        Per handle, consecutive updates (up to the next query) compose into
+        one ``engine.update_many`` repair; queries then run against exactly
+        the state their admission order promises.
+        """
+        with self._lock:
+            if not self._hqueues:
+                return
+            queues, self._hqueues = self._hqueues, {}
+        for q in queues.values():
+            while q:
+                run = []
+                while q and q[0].kind == "update":
+                    run.append(q.popleft())
+                if run:
+                    self._run_update(run)
+                if q:
+                    self._run_query(q.popleft())
+
+    def _run_update(self, run) -> None:
+        handle = run[0].handle
+        t0 = time.perf_counter()
+        try:
+            st = self.engine.update_many(
+                handle, [(r.add, r.remove) for r in run])
+        except Exception as e:                  # noqa: BLE001 — to futures
+            for r in run:
+                self._finish(r, exc=e)
+            return
+        self._stage("repair", time.perf_counter() - t0)
+        with self._lock:
+            self._counters["dispatches"] += 1
+            self._counters["coalesced_updates"] += len(run) - 1
+        for r in run:
+            self._finish(r, value=st)
+
+    def _run_query(self, req: _Request) -> None:
+        t0 = time.perf_counter()
+        try:
+            if req.kind == "query":
+                out = req.handle.query(req.edges)
+            else:
+                out = req.handle.communities(req.k)
+        except Exception as e:                  # noqa: BLE001 — to future
+            self._finish(req, exc=e)
+            return
+        self._stage("query", time.perf_counter() - t0)
+        self._finish(req, value=out)
+
+    # ------------------------------------------------------ bucket dispatch --
+    def _dispatch_buckets(self, *, force: bool = False) -> None:
+        """Flush every due bucket: full, past deadline, or forced (drain)."""
+        now = time.perf_counter()
+        with self._lock:
+            due = []
+            for key in list(self._buckets):
+                entries = self._buckets[key]
+                oldest = entries[0][1].t_enq
+                if (force or len(entries) >= self.max_batch
+                        or now - oldest >= self.max_delay):
+                    due.append((key, entries))
+                    del self._buckets[key]
+        for key, entries in due:
+            t0 = time.perf_counter()
+            try:
+                self.engine.flush(only=[key])
+            except Exception as e:              # noqa: BLE001 — to futures
+                for ticket, r in entries:
+                    self.engine.discard(ticket)
+                    self._finish(r, exc=e)
+                continue
+            self._stage("dispatch", time.perf_counter() - t0)
+            with self._lock:
+                self._counters["dispatches"] += 1
+            for ticket, req in entries:
+                t1 = time.perf_counter()
+                try:
+                    out = self.engine.result(ticket)
+                except Exception as e:          # noqa: BLE001 — to future
+                    self._finish(req, exc=e)
+                    continue
+                self._stage("readback", time.perf_counter() - t1)
+                self._finish(req, value=out)
+
+    # --------------------------------------------------------------- stats --
+    def stats(self) -> dict:
+        """Snapshot of scheduler counters and per-stage timing.
+
+        Returns:
+            A JSON-serializable dict: request ``counters`` (per kind, plus
+            ``shed``/``done``/``errors``/``dispatches``/
+            ``coalesced_updates``), current ``depth`` and per-tenant
+            ``inflight``, ``buckets_waiting``, per-``stages`` timing
+            (``count``/``seconds``/``max_seconds`` for queue wait, operand
+            build, device dispatch, readback, open, repair, query), and the
+            engine's own counters under ``engine``.
+        """
+        with self._lock:
+            snap = {
+                "counters": dict(self._counters),
+                "depth": self._depth,
+                "inflight": dict(self._inflight),
+                "buckets_waiting": {
+                    str(tuple(k)): len(v) for k, v in self._buckets.items()},
+                "stages": {k: dict(v) for k, v in self._stages.items()},
+            }
+        eng = {k: (len(v) if isinstance(v, set) else v)
+               for k, v in self.engine.stats.items()}
+        snap["engine"] = eng
+        return snap

@@ -139,7 +139,6 @@ def _batched_truss(ops: BatchOperand, *, m: int, chunk: int, n_chunks: int,
                    iters: int, mode: str, support_mode: str, sup_chunk: int,
                    sup_n_chunks: int, interpret: bool):
     """vmap of (support → peel) across one bucket of padded graphs."""
-
     def one(op: BatchOperand):
         if support_mode == "pallas":
             from repro.kernels.support import (fold_support_targets,
@@ -186,7 +185,6 @@ def _batched_truss_dev(ops: CSROperand, *, m: int, chunk: int, n_chunks: int,
     this one compiled program, so ``flush`` dispatches exactly one
     executable per bucket and no table ever exists on the host.
     """
-
     def one(op: CSROperand):
         s_e1, s_cand, s_lo, s_hi, _ = support_mod._build_support_table_dev(
             op.u, op.v, op.Es, op.Eo, op.m_real, m=m, size=sup_pad)
@@ -251,10 +249,12 @@ class TrussHandle:
 
     @property
     def m(self) -> int:
+        """Current number of (unique, canonical) edges."""
         return self._inc.m
 
     @property
     def n(self) -> int:
+        """Vertex-space size (max id + 1 at open; stable across updates)."""
         return self._inc.n
 
     def query(self, edges) -> np.ndarray:
@@ -315,7 +315,34 @@ class TrussHandle:
 
 
 class TrussEngine:
-    """Queue API over the batched decomposition pipeline."""
+    """Queue API over the batched decomposition pipeline.
+
+    Two traffic shapes share one engine: *single-read tickets*
+    (``submit``/``flush``/``result``/``map``) batch same-size-class graphs
+    into one vmapped dispatch per bucket, and *persistent handles*
+    (``open``/``update``/``update_many``/``close``) absorb edge churn by
+    incremental repair (DESIGN.md §9).  ``repro.serve.TrussScheduler``
+    wraps an engine with an async continuous-batching facade (§12).
+
+    Args:
+        mode: peel executor for every decomposition (see ``core.pkt.pkt``).
+        support_mode: support executor (same axes as ``pkt``).
+        table_mode: wedge-table builder — "device" ships CSR-only operands
+            and builds both tables inside the batched jit (§10); "numpy" is
+            the host parity oracle.
+        hier_mode: community-index builder for handles (§11).
+        chunk: peel chunk size (rounded up to pow2).
+        reorder: degeneracy-reorder each submission before decomposition.
+        max_pending: auto-flush threshold — ``submit`` triggers a full
+            ``flush`` once this many submissions are queued.
+        max_edges: reject submissions beyond this many canonical edges.
+        interpret: force/forbid Pallas interpret mode (default: interpret
+            when not on a TPU).
+
+    Raises:
+        ValueError: unknown mode axis, or non-positive ``chunk`` /
+            ``max_edges``.
+    """
 
     def __init__(self, *, mode: str = "chunked", support_mode: str = "jnp",
                  table_mode: str = "device", hier_mode: str = "device",
@@ -422,6 +449,7 @@ class TrussEngine:
         return ticket
 
     def submit_many(self, graphs) -> list[int]:
+        """Submit each graph; returns order-aligned tickets."""
         return [self.submit(e) for e in graphs]
 
     # ------------------------------------------------------------ results --
@@ -482,6 +510,42 @@ class TrussEngine:
         """
         h = self._resolve_handle(ticket_or_handle)
         st = h._inc.update(add_edges=add_edges, remove_edges=remove_edges)
+        self.stats["updates"] += 1
+        if st.mode == "full":
+            self.stats["updates_full"] += 1
+        elif st.mode == "local":
+            self.stats["updates_local"] += 1
+        self.stats["update_seconds"] += st.seconds
+        return dataclasses.replace(st, handle=h)
+
+    def update_many(self, ticket_or_handle, batches) -> UpdateStats:
+        """Apply several queued update batches to one handle as one repair.
+
+        The scheduler's coalescing entry point (DESIGN.md §12): ``batches``
+        is a sequence of ``(add_edges, remove_edges)`` pairs in arrival
+        order; their set-wise composition (``core.truss_inc.
+        compose_update_batches``) is applied as a *single*
+        :meth:`IncrementalTruss.update`, so n queued churn batches cost one
+        affected-region repair instead of n.
+
+        Args:
+            ticket_or_handle: a :class:`TrussHandle` (or promotable ticket,
+                as in :meth:`update`).
+            batches: iterable of ``(add_edges, remove_edges)`` pairs;
+                either element may be ``None``.
+
+        Returns:
+            One :class:`UpdateStats` for the composed repair, with
+            ``coalesced`` set to the number of merged batches and
+            ``handle`` set to the target handle.  The final state is
+            bitwise-identical to applying the batches one at a time.
+
+        Raises:
+            ValueError: closed handle, or invalid edge arrays.
+            KeyError: a ticket that is not promotable.
+        """
+        h = self._resolve_handle(ticket_or_handle)
+        st = h._inc.update_many(batches)
         self.stats["updates"] += 1
         if st.mode == "full":
             self.stats["updates_full"] += 1
@@ -561,14 +625,63 @@ class TrussEngine:
             m_real=jnp.int32(g.m),
         )
 
-    def flush(self) -> None:
-        """Decompose every pending graph, bucket by bucket."""
+    def discard(self, ticket: int) -> None:
+        """Drop a ticket without computing or collecting it (scheduler hook).
+
+        Args:
+            ticket: a ticket returned by ``submit``; unknown tickets are
+                ignored.  Removes the pending operand (or the materialized
+                result) so cancelled or failed requests don't pin device
+                arrays.
+        """
+        self._pending = [p for p in self._pending if p.ticket != ticket]
+        self._results.pop(ticket, None)
+
+    def bucket_of(self, ticket: int) -> SizeClass | None:
+        """Size-class key of a still-pending ticket (scheduler hook).
+
+        Args:
+            ticket: a ticket returned by ``submit``.
+
+        Returns:
+            The pending submission's :class:`SizeClass` bucket key, or
+            ``None`` when the ticket is not pending (empty graphs resolve at
+            submit time; an auto-flush may have materialized the result) —
+            its result, if any, is already available through ``result``.
+        """
+        for p in self._pending:
+            if p.ticket == ticket:
+                return p.key
+        return None
+
+    def flush(self, only=None) -> None:
+        """Decompose pending graphs, bucket by bucket.
+
+        Args:
+            only: optional iterable of :class:`SizeClass` keys — flush only
+                the pending submissions in those buckets (the scheduler's
+                per-bucket dispatch hook).  ``None`` flushes everything.
+
+        Ordering contract: each bucket's results are materialized (and its
+        submissions removed from the pending queue) only after its batched
+        dispatch succeeds, in submission order within the bucket.  If a
+        dispatch raises, that bucket's submissions *and every bucket not yet
+        dispatched* remain pending — their tickets stay redeemable by a
+        later ``flush``/``result``, and a still-pending ticket can still be
+        promoted to a handle by ``update`` (promotions observe the results
+        of earlier ``submit`` calls flushed in the same batch: the flush
+        and the promotion's from-scratch decomposition agree bitwise, see
+        ``tests/test_truss_engine.py``).
+        """
         if not self._pending:
             return
         by_key: dict[SizeClass, list[_Pending]] = {}
+        keys = None if only is None else set(only)
         for p in self._pending:
-            by_key.setdefault(p.key, []).append(p)
-        self._pending = []
+            if keys is None or p.key in keys:
+                by_key.setdefault(p.key, []).append(p)
+        if not by_key:
+            return
 
         for key, group in by_key.items():
             warm = key in self.stats["buckets"]
@@ -593,6 +706,12 @@ class TrussEngine:
                 truss = (S[i][: p.g.m] + 2).astype(np.int64)
                 self._results[p.ticket] = align_to_input(
                     truss, p.g, None, p.n, keys=p.in_keys)
+            # only now is the bucket done: drop its submissions from the
+            # pending queue (a dispatch failure above leaves them — and
+            # every bucket after them — pending and retryable)
+            done = {p.ticket for p in group}
+            self._pending = [p for p in self._pending
+                             if p.ticket not in done]
             dt = time.perf_counter() - t0
             self.stats["batches"] += 1
             self.stats["buckets"].add(key)

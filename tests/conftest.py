@@ -2,9 +2,24 @@ import os
 import sys
 
 # Tests run on the single real CPU device (the dry-run and multi-device tests
-# spawn subprocesses that set XLA_FLAGS themselves — per the assignment this
-# must NOT be set globally).
+# spawn subprocesses that set XLA_FLAGS themselves — per the assignment the
+# device-count flag must NOT be set globally).
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+# XLA's CPU backend JIT-compiles each executable with a pool of parallel
+# codegen threads.  Over a long suite (hundreds of compilations) the
+# concurrent JIT eh-frame registration intermittently segfaults inside
+# libgcc's unwinder (observed as nondeterministic mid-suite crashes under
+# jax/_src/compiler.py backend_compile, on the seed as well as on later
+# revisions).  Serializing codegen removes the race; it changes compile
+# parallelism only — never device topology or numerics.  The multi-device
+# subprocess tests overwrite XLA_FLAGS wholesale in their own environments,
+# so this does not leak a device count into them.
+_CODEGEN_FLAG = "--xla_cpu_parallel_codegen_split_count=1"
+if _CODEGEN_FLAG not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "") + " " + _CODEGEN_FLAG
+    ).strip()
 
 # Make `import repro` work whether or not PYTHONPATH=src was exported.
 _SRC = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),

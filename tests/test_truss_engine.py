@@ -247,3 +247,110 @@ def test_duplicate_ticket_redemption():
         eng.result(t)
     with pytest.raises(KeyError, match="unknown"):
         eng.result(10_000)
+
+
+# ------------------------------------------------ scheduler hooks + flush --
+
+
+def test_flush_only_selected_bucket():
+    """flush(only=[key]) dispatches that bucket and leaves others pending."""
+    small, big = _er_edges(12, 0.4, 30), _er_edges(40, 0.2, 31)
+    eng = TrussEngine()
+    ts, tb = eng.submit(small), eng.submit(big)
+    ks, kb = eng.bucket_of(ts), eng.bucket_of(tb)
+    assert ks is not None and kb is not None and ks != kb
+    eng.flush(only=[ks])
+    assert eng.bucket_of(ts) is None          # materialized
+    assert eng.bucket_of(tb) == kb            # untouched
+    assert np.array_equal(eng.result(ts), _expected(small))
+    assert np.array_equal(eng.result(tb), _expected(big))
+    # flush(only=[unknown key]) is a no-op
+    eng.submit(small)
+    eng.flush(only=[kb])
+    assert eng.stats["graphs_done"] == 2
+
+
+def test_bucket_of_and_discard():
+    """discard releases a pending ticket; its result is gone for good."""
+    e = _er_edges(12, 0.4, 32)
+    eng = TrussEngine()
+    t = eng.submit(e)
+    assert eng.bucket_of(t) is not None
+    eng.discard(t)
+    assert eng.bucket_of(t) is None
+    with pytest.raises(KeyError):
+        eng.result(t)
+    eng.discard(123456)                       # unknown: ignored
+    # discard also drops an already-materialized result
+    t2 = eng.submit(e)
+    eng.flush()
+    eng.discard(t2)
+    with pytest.raises(KeyError):
+        eng.result(t2)
+
+
+def test_flush_failure_keeps_tickets_pending(monkeypatch):
+    """The flush-ordering contract: a raising dispatch loses no tickets.
+
+    Submissions whose bucket dispatch fails stay in the pending queue and
+    remain redeemable once the fault clears (regression: flush() used to
+    clear the queue *before* dispatching).
+    """
+    import repro.serve.truss_engine as te
+
+    e1, e2 = _er_edges(12, 0.4, 33), _er_edges(12, 0.4, 34)
+    eng = TrussEngine()
+    t1, t2 = eng.submit(e1), eng.submit(e2)
+
+    def boom(*a, **k):
+        raise RuntimeError("injected dispatch failure")
+
+    monkeypatch.setattr(te, "_batched_truss", boom)
+    monkeypatch.setattr(te, "_batched_truss_dev", boom)
+    with pytest.raises(RuntimeError, match="injected"):
+        eng.flush()
+    assert eng.bucket_of(t1) is not None      # still pending, not lost
+    assert eng.bucket_of(t2) is not None
+    monkeypatch.undo()
+    assert np.array_equal(eng.result(t1), _expected(e1))
+    assert np.array_equal(eng.result(t2), _expected(e2))
+
+
+def test_promotion_observes_earlier_submits_in_flush():
+    """A pending promotion and a same-bucket flush agree bitwise.
+
+    Promoting ticket B must not disturb ticket A's pending result, and the
+    promoted handle's trussness equals the batched flush of the same edges.
+    """
+    a, b = _er_edges(14, 0.4, 35), _er_edges(14, 0.4, 36)
+    eng = TrussEngine()
+    ta, tb = eng.submit(a), eng.submit(b)
+    st = eng.update(tb)                       # promote B while A pending
+    h = st.handle
+    assert np.array_equal(eng.result(ta), _expected(a))   # flush after
+    # the promotion's from-scratch decomposition matches the batched path
+    sep = TrussEngine()
+    assert np.array_equal(h.trussness, truss_pkt(h.edges))
+    assert np.array_equal(sep.map([b])[0], _expected(b))
+
+
+def test_engine_update_many_matches_sequential():
+    """update_many(batches) is bitwise one-at-a-time, at one repair."""
+    e = _er_edges(16, 0.35, 37)
+    b1 = (np.array([[0, 9], [1, 10]], np.int64), None)
+    b2 = (np.array([[2, 11]], np.int64), np.array([[0, 9]], np.int64))
+    b3 = (None, np.array([[1, 10]], np.int64))
+
+    eng = TrussEngine()
+    h_seq = eng.open(e)
+    for add, rem in (b1, b2, b3):
+        eng.update(h_seq, add_edges=add, remove_edges=rem)
+    h_one = eng.open(e)
+    updates_before = eng.stats["updates"]
+    st = eng.update_many(h_one, [b1, b2, b3])
+    assert st.coalesced == 3
+    assert st.handle is h_one
+    assert eng.stats["updates"] == updates_before + 1
+    assert np.array_equal(h_one.edges, h_seq.edges)
+    assert np.array_equal(h_one.trussness, h_seq.trussness)
+    assert np.array_equal(h_one.trussness, truss_pkt(h_one.edges))

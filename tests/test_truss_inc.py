@@ -276,3 +276,47 @@ def test_triangles_through_subset_anchors():
         want = {tuple(sorted(int(y) for y in row if y != x))
                 for row in tri if (row == x).any()}
         assert got == want, x
+
+
+# ------------------------------------------------------- batch composition --
+
+
+def test_compose_update_batches_set_algebra():
+    """Composition follows A <- (A \\ r) | a, R <- R | r: add-wins, sorted."""
+    from repro.core.truss_inc import compose_update_batches
+
+    b1 = (np.array([[0, 1], [2, 3]], np.int64), None)
+    b2 = (np.array([[4, 5]], np.int64), np.array([[0, 1]], np.int64))
+    b3 = (np.array([[0, 1]], np.int64), np.array([[8, 9]], np.int64))
+    add, rem = compose_update_batches([b1, b2, b3])
+    # [0,1] was added, removed, re-added -> survives in add; [8,9] was
+    # never added so it only accumulates in remove
+    assert add.tolist() == [[0, 1], [2, 3], [4, 5]]
+    assert rem.tolist() == [[0, 1], [8, 9]]
+    assert add.dtype == np.int64 and rem.dtype == np.int64
+
+
+def test_compose_update_batches_matches_sequential():
+    """One composed update == the same batches applied one at a time."""
+    from repro.core.truss_inc import compose_update_batches
+
+    e = _er_edges(16, 0.35, 40)
+    batches = [
+        (np.array([[0, 9], [1, 10]], np.int64), None),
+        (None, np.array([[0, 9]], np.int64)),
+        (np.array([[2, 11]], np.int64), np.array([[1, 10]], np.int64)),
+    ]
+    seq = IncrementalTruss(e)
+    for add, rem in batches:
+        seq.update(add_edges=add, remove_edges=rem)
+    one = IncrementalTruss(e)
+    st = one.update_many(batches)
+    assert st.coalesced == 3
+    assert np.array_equal(one.edges, seq.edges)
+    assert np.array_equal(one.trussness, seq.trussness)
+    assert np.array_equal(one.trussness, truss_pkt(one.edges))
+    # degenerate cases
+    add, rem = compose_update_batches([])
+    assert add.shape == (0, 2) and rem.shape == (0, 2)
+    with pytest.raises(ValueError):
+        compose_update_batches([(np.array([[1, 1]], np.int64), None)])
