@@ -1,16 +1,29 @@
-"""Incremental maintenance vs full recompute across churn batch sizes.
+"""Incremental maintenance vs full recompute across churn and batch size.
 
-The streaming serving story (DESIGN.md §9): a decomposed graph absorbs
-rolling-window edge churn.  For each churn fraction, a persistent
-``IncrementalTruss`` handle applies ``remove k existing + add k absent``
-batches (edge count preserved, so the full-recompute jit stays warm and the
-comparison is steady-state vs steady-state) and is timed against a warm
-from-scratch ``truss_pkt`` on the same final graph.  Every measured batch
-ends with a parity check against the from-scratch result — a mismatch
-fails the run (exit 1), which is the CI bench-trend gate.
+The streaming serving story (DESIGN.md §9, §13): a decomposed graph absorbs
+rolling edge churn.  Two workload shapes are measured:
 
-Output: ``BENCH_inc.json`` rows per (graph, churn): update seconds, full
-seconds, speedup, affected-region sizes, local/full repair counts.
+* **churn** — for each churn fraction, persistent ``IncrementalTruss``
+  handles apply ``remove k existing + add k random absent`` batches (edge
+  count preserved, so the full-recompute jit stays warm and the comparison
+  is steady-state vs steady-state).
+* **window** — a sliding-window stream: edges arrive in a fixed shuffled
+  order, the handle opens on the oldest ``window`` edges, and each batch
+  slides the window by ``step`` (evict the ``step`` oldest, admit the
+  ``step`` newest).  The ``step`` sweep is the batch-size axis: it locates
+  the point where one merged-region repair (§13) overtakes per-edge
+  repairs.
+
+Every workload drives **two** handles in lockstep — ``insert_mode="batched"``
+(the default single merged-region repair) and ``insert_mode="sequential"``
+(the per-edge oracle) — and times a warm from-scratch ``truss_pkt`` on the
+same final graph.  Every measured batch ends with a three-way bitwise
+parity check (batched ≡ sequential ≡ from-scratch); a mismatch fails the
+run (exit 1), which is the CI bench-trend gate.
+
+Output: ``BENCH_inc.json`` rows per (graph, churn) and (graph, step):
+batched/sequential/full seconds, both speedups, affected-region sizes,
+local/full repair counts per mode.
 
   PYTHONPATH=src python -m benchmarks.inc_bench [--smoke] [--out F]
 """
@@ -25,25 +38,85 @@ import time
 import numpy as np
 
 
-def _bench_graph(name: str, fracs, batches: int, rng) -> dict:
-    from repro.core.pkt import truss_pkt
+def _open_pair(E):
+    """Open batched + sequential handles on ``E``; time both opens."""
     from repro.core.truss_inc import IncrementalTruss
+
+    t0 = time.perf_counter()
+    inc = IncrementalTruss(E)
+    t_open = time.perf_counter() - t0
+    # the second open hits the now-warm compiles: the difference attributes
+    # the first-compile cost, and ``open_phases`` (recorded by the pkt
+    # pipeline) splits the rest into table-build / support / peel — with
+    # device-side construction the table phase is device work, not host
+    t0 = time.perf_counter()
+    seq = IncrementalTruss(E, insert_mode="sequential")
+    t_open_warm = time.perf_counter() - t0
+    return inc, seq, t_open, t_open_warm
+
+
+def _measure(inc, seq, batches) -> dict:
+    """Apply each (add, rm) batch to both handles; time and parity-check.
+
+    ``batches`` may be a lazy generator reading ``inc.edges``: each element
+    is produced after the previous batch has been applied, so generated
+    churn always targets the current lockstep state.
+    """
+    from repro.core.pkt import truss_pkt
+
+    t_bat, t_seq, affected = [], [], []
+    counts = {"batched": {"local": 0, "full": 0},
+              "sequential": {"local": 0, "full": 0}}
+    parity = True
+    for add, rm in batches:
+        t0 = time.perf_counter()
+        st_b = inc.update(add_edges=add, remove_edges=rm)
+        t_bat.append(time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        st_s = seq.update(add_edges=add, remove_edges=rm)
+        t_seq.append(time.perf_counter() - t0)
+        affected.append(st_b.affected)
+        for st, key in ((st_b, "batched"), (st_s, "sequential")):
+            if st.mode in counts[key]:
+                counts[key][st.mode] += 1
+        parity = parity and bool(
+            np.array_equal(inc.edges, seq.edges)
+            and np.array_equal(inc.trussness, seq.trussness))
+
+    # warm full recompute on the shared final graph
+    cur = inc.edges
+    truss_pkt(cur)
+    t0 = time.perf_counter()
+    ref = truss_pkt(cur)
+    t_full = time.perf_counter() - t0
+    parity = parity and bool(np.array_equal(inc.trussness, ref))
+
+    upd = float(np.mean(t_bat))
+    sq = float(np.mean(t_seq))
+    return {
+        "update_seconds": upd,
+        "sequential_seconds": sq,
+        "full_seconds": t_full,
+        "speedup": t_full / upd if upd > 0 else float("inf"),
+        "speedup_vs_sequential": sq / upd if upd > 0 else float("inf"),
+        "affected_mean": float(np.mean(affected)),
+        "local": counts["batched"]["local"], "full": counts["batched"]["full"],
+        "seq_local": counts["sequential"]["local"],
+        "seq_full": counts["sequential"]["full"],
+        "parity": parity,
+    }
+
+
+def _bench_graph(name: str, fracs, batches: int, rng) -> dict:
+    """Random-churn workload: preserved edge count, churn-fraction sweep."""
     from repro.graphs.datasets import named_graph
     from repro.launch.truss import churn_batch
 
     E = named_graph(name)
     n = int(E.max()) + 1
-    t0 = time.perf_counter()
-    inc = IncrementalTruss(E)
-    t_open = time.perf_counter() - t0
-    # a second open hits the now-warm compiles: the difference attributes
-    # the first-compile cost, and ``open_phases`` (recorded by the pkt
-    # pipeline) splits the rest into table-build / support / peel — with
-    # device-side construction the table phase is device work, not host
-    t0 = time.perf_counter()
-    IncrementalTruss(E)
-    t_open_warm = time.perf_counter() - t0
-    out = {"graph": name, "n": n, "m": inc.m, "open_seconds": t_open,
+    inc, seq, t_open, t_open_warm = _open_pair(E)
+    out = {"graph": name, "workload": "churn", "n": n, "m": inc.m,
+           "open_seconds": t_open,
            "open_warm_seconds": t_open_warm,
            "open_compile_seconds": max(0.0, t_open - t_open_warm),
            "open_phases": {k: round(v, 6)
@@ -54,55 +127,80 @@ def _bench_graph(name: str, fracs, batches: int, rng) -> dict:
         # warmup batch: pays the local-peel jit compiles for this shape class
         add, rm = churn_batch(inc.edges, n, frac, rng)
         inc.update(add_edges=add, remove_edges=rm)
+        seq.update(add_edges=add, remove_edges=rm)
 
-        times, affected, local, full = [], [], 0, 0
-        for _ in range(batches):
-            add, rm = churn_batch(inc.edges, n, frac, rng)
-            t0 = time.perf_counter()
-            st = inc.update(add_edges=add, remove_edges=rm)
-            times.append(time.perf_counter() - t0)
-            affected.append(st.affected)
-            local += st.mode == "local"
-            full += st.mode == "full"
-
-        # warm full recompute on the same final graph (same m by design)
-        cur = inc.edges
-        truss_pkt(cur)
-        t0 = time.perf_counter()
-        ref = truss_pkt(cur)
-        t_full = time.perf_counter() - t0
-
-        parity = bool(np.array_equal(inc.trussness, ref))
-        out["parity_ok"] = out["parity_ok"] and parity
-        t_upd = float(np.mean(times))
+        # lazy generator: each batch is drawn from the advanced state
+        gen = (churn_batch(inc.edges, n, frac, rng) for _ in range(batches))
+        res = _measure(inc, seq, gen)
+        out["parity_ok"] = out["parity_ok"] and res["parity"]
         out["rows"].append({
             "churn_frac": frac,
             "batch_edges": int(max(1, round(frac * inc.m))),
-            "update_seconds": t_upd,
-            "full_seconds": t_full,
-            "speedup": t_full / t_upd if t_upd > 0 else float("inf"),
-            "affected_mean": float(np.mean(affected)),
-            "local": local, "full": full,
-            "parity": parity,
+            **res,
         })
+    return out
+
+
+def _bench_window(name: str, steps, batches: int, rng) -> dict:
+    """Sliding-window workload: evict oldest ``step``, admit newest ``step``.
+
+    The ``steps`` sweep is the batch-size axis at (roughly) constant graph
+    size: larger steps amortise one merged-region repair over more inserted
+    edges, which is exactly the §13 batched-path win.
+    """
+    from repro.graphs.datasets import named_graph
+
+    E = named_graph(name)
+    n = int(E.max()) + 1
+    m = E.shape[0]
+    order = rng.permutation(m)
+    window = int(0.75 * m)
+    out = {"graph": name, "workload": "window", "n": n, "m": window,
+           "rows": [], "parity_ok": True}
+
+    for step in steps:
+        # every step restarts the stream from the same arrival order
+        cur = E[order[:window]]
+        inc, seq, _, _ = _open_pair(cur)
+        lo, hi = 0, window
+        todo = []
+        for _ in range(batches + 1):        # +1: warmup slide
+            if hi + step > m:
+                break
+            todo.append((E[order[hi:hi + step]], E[order[lo:lo + step]]))
+            lo, hi = lo + step, hi + step
+        if len(todo) < 2:
+            continue
+        inc.update(add_edges=todo[0][0], remove_edges=todo[0][1])  # warmup
+        seq.update(add_edges=todo[0][0], remove_edges=todo[0][1])
+        res = _measure(inc, seq, todo[1:])
+        out["parity_ok"] = out["parity_ok"] and res["parity"]
+        out["rows"].append({"step": int(step), "batch_edges": int(step),
+                            **res})
     return out
 
 
 def run(graphs=("ba-small", "er-small", "rmat-small"),
         fracs=(0.001, 0.01), batches: int = 3, seed: int = 0,
+        window_graphs=("ba-small",), steps=(4, 16, 64),
         out_path: str = "BENCH_inc.json") -> int:
     rng = np.random.default_rng(seed)
-    report = {"bench": "incremental-maintenance", "graphs": [], "ok": True}
+    report = {"bench": "incremental-maintenance", "graphs": [],
+              "windows": [], "ok": True}
     for name in graphs:
         g = _bench_graph(name, fracs, batches, rng)
         report["graphs"].append(g)
         report["ok"] = report["ok"] and g["parity_ok"]
+    for name in window_graphs:
+        w = _bench_window(name, steps, batches, rng)
+        report["windows"].append(w)
+        report["ok"] = report["ok"] and w["parity_ok"]
     with open(out_path, "w") as f:
         json.dump(report, f, indent=2, sort_keys=True)
     print(json.dumps(report, indent=2, sort_keys=True))
     if not report["ok"]:
-        print("INC BENCH FAILED: incremental/recompute parity regression",
-              file=sys.stderr)
+        print("INC BENCH FAILED: batched/sequential/recompute parity "
+              "regression", file=sys.stderr)
         return 1
     return 0
 
@@ -118,8 +216,17 @@ def rows(quick: bool = True) -> list[str]:
         for r in g["rows"]:
             out.append(row(
                 f"inc/{name}/churn-{r['churn_frac']}", r["update_seconds"],
-                f"speedup={r['speedup']:.2f}x;affected={r['affected_mean']:.0f}"
+                f"speedup={r['speedup']:.2f}x"
+                f";vs_seq={r['speedup_vs_sequential']:.2f}x"
+                f";affected={r['affected_mean']:.0f}"
                 f";local={r['local']};full={r['full']}"
+                f";parity={int(r['parity'])}"))
+        w = _bench_window(name, (16,), 2, rng)
+        for r in w["rows"]:
+            out.append(row(
+                f"inc/{name}/window-{r['step']}", r["update_seconds"],
+                f"speedup={r['speedup']:.2f}x"
+                f";vs_seq={r['speedup_vs_sequential']:.2f}x"
                 f";parity={int(r['parity'])}"))
     return out
 
@@ -133,7 +240,8 @@ def main() -> None:
     args = ap.parse_args()
     if args.smoke:
         raise SystemExit(run(graphs=("ba-small",), fracs=(0.001, 0.01),
-                             batches=2, seed=args.seed, out_path=args.out))
+                             batches=2, window_graphs=("ba-small",),
+                             steps=(16,), seed=args.seed, out_path=args.out))
     raise SystemExit(run(seed=args.seed, out_path=args.out))
 
 

@@ -21,11 +21,15 @@ region-local; a few O(m) vectorized mask/bound passes per step remain):
      triangle-connected in the old graph to a deleted edge through edges
      with ``T >= k`` (so deletions batch exactly; k = 2 can never drop), and
      can *rise* only if triangle-connected in the new graph to an inserted
-     edge through edges whose new trussness reaches k+1.  The rise filter is
-     only tight for a single insertion (trussness moves at most 1 per edge
-     inserted), so deletions are applied as one batch and insertions one at
-     a time against a single new CSR with not-yet-inserted edges masked
-     absent.
+     edge through edges whose new trussness reaches k+1.  Deletions batch
+     exactly; for insertions the default ``insert_mode="batched"`` path
+     (DESIGN.md §13, after Jakkula & Karypis) repairs the whole batch at
+     once — the per-edge rise filter generalizes to the batch bound
+     ``UB = min(S+2, T+b)`` and the per-edge candidate regions merge into
+     one shared region re-peeled in a single dispatch — while
+     ``insert_mode="sequential"`` keeps the one-at-a-time path (the tight
+     ±1 filter, not-yet-inserted edges masked absent) as the bitwise
+     parity oracle.
   3. **Local re-peel** — the region is re-peeled against a *pinned
      boundary*: exterior triangle partners are seeded at their known death
      level ``trussness − 2`` and shielded from decrements, replaying
@@ -62,6 +66,13 @@ from repro.core.pkt import (_COMPACT_FRAC, _COMPACT_MIN, PEEL_MODES,
                             align_to_input, peel_live_subset, pkt)
 from repro.kernels import wedge_common
 
+#: Insertion repair strategies (DESIGN.md §13): ``"batched"`` repairs the
+#: whole insertion batch against one merged candidate region; ``"sequential"``
+#: applies edges one at a time (the ±1 locality bound) and serves as the
+#: bitwise parity oracle for the batched path.
+INSERT_MODES = ("sequential", "batched")
+
+
 @dataclasses.dataclass(frozen=True)
 class UpdateStats:
     """Outcome of one ``IncrementalTruss.update`` call."""
@@ -78,6 +89,7 @@ class UpdateStats:
     seconds: float
     handle: object = None  # set by TrussEngine.update
     coalesced: int = 1   # queued batches merged into this repair (§12)
+    insert_mode: str | None = None  # path insertions took (None: no inserts)
 
 
 def compose_update_batches(batches) -> tuple[np.ndarray, np.ndarray]:
@@ -386,6 +398,9 @@ class IncrementalTruss:
         support_mode: support executor.
         table_mode: wedge-table builder ("device" / "numpy", §10).
         hier_mode: community-index builder ("device" / "host", §11).
+        insert_mode: insertion repair strategy ("batched" / "sequential",
+            §13) — one merged-region re-peel per batch vs one re-peel per
+            inserted edge; bitwise-identical results.
         chunk: peel chunk size (pow2).
         local_frac: affected-region fraction above which an update falls
             back to full recompute.
@@ -403,7 +418,8 @@ class IncrementalTruss:
 
     def __init__(self, edges, *, n: int | None = None, mode: str = "chunked",
                  support_mode: str = "jnp", table_mode: str = "device",
-                 hier_mode: str = "device", chunk: int = 1 << 12,
+                 hier_mode: str = "device", insert_mode: str = "batched",
+                 chunk: int = 1 << 12,
                  local_frac: float = 0.25, host_peel_max: int = 4096,
                  compact_frac: float | None = _COMPACT_FRAC,
                  compact_min: int = _COMPACT_MIN,
@@ -421,6 +437,10 @@ class IncrementalTruss:
         if hier_mode not in HIER_MODES:
             raise ValueError(
                 f"hier_mode must be one of {HIER_MODES}, got {hier_mode!r}")
+        if insert_mode not in INSERT_MODES:
+            raise ValueError(
+                f"insert_mode must be one of {INSERT_MODES}, "
+                f"got {insert_mode!r}")
         if chunk < 1:
             raise ValueError("chunk must be positive")
         if not 0.0 <= local_frac <= 1.0:
@@ -429,6 +449,7 @@ class IncrementalTruss:
         self.support_mode = support_mode
         self.table_mode = table_mode
         self.hier_mode = hier_mode
+        self.insert_mode = insert_mode
         self._hier: TrussHierarchy | None = None
         self.compact_frac = compact_frac
         self.compact_min = int(compact_min)
@@ -517,12 +538,15 @@ class IncrementalTruss:
         return self._hier
 
     # ------------------------------------------------------------- update --
-    def update_many(self, batches) -> UpdateStats:
+    def update_many(self, batches, *,
+                    insert_mode: str | None = None) -> UpdateStats:
         """Apply several update batches as one composed repair.
 
         Args:
             batches: iterable of ``(add_edges, remove_edges)`` pairs in
                 arrival order (either element may be ``None``).
+            insert_mode: per-call override of the handle's insertion
+                strategy (``None``: use the handle default).
 
         Returns:
             The :class:`UpdateStats` of the single composed ``update``,
@@ -535,12 +559,14 @@ class IncrementalTruss:
         """
         batches = list(batches)
         add, rem = compose_update_batches(batches)
-        st = self.update(add_edges=add, remove_edges=rem)
+        st = self.update(add_edges=add, remove_edges=rem,
+                         insert_mode=insert_mode)
         st = dataclasses.replace(st, coalesced=max(1, len(batches)))
         self.stats["last"] = st
         return st
 
-    def update(self, add_edges=None, remove_edges=None) -> UpdateStats:
+    def update(self, add_edges=None, remove_edges=None, *,
+               insert_mode: str | None = None) -> UpdateStats:
         """Apply one insert/delete batch: ``E → (E − remove) ∪ add``.
 
         Args:
@@ -550,6 +576,9 @@ class IncrementalTruss:
             remove_edges: ``(k, 2)`` integer edge array to delete (removing
                 an absent edge is a no-op for that row).  An edge in both
                 batches ends up present.
+            insert_mode: per-call override of the handle's insertion
+                strategy (``"batched"`` / ``"sequential"``, §13; ``None``:
+                use the handle default).
 
         Returns:
             :class:`UpdateStats` — ``mode`` reports whether the batch was
@@ -558,9 +587,13 @@ class IncrementalTruss:
 
         Raises:
             ValueError: edge arrays fail validation (self-loops, negative
-                or overflowing vertex ids).
+                or overflowing vertex ids), or unknown ``insert_mode``.
         """
         t0 = time.perf_counter()
+        imode = self.insert_mode if insert_mode is None else insert_mode
+        if imode not in INSERT_MODES:
+            raise ValueError(
+                f"insert_mode must be one of {INSERT_MODES}, got {imode!r}")
         add = check_edge_array(add_edges if add_edges is not None
                                else np.zeros((0, 2), np.int64))
         rem = check_edge_array(remove_edges if remove_edges is not None
@@ -607,7 +640,9 @@ class IncrementalTruss:
                 inserted=int(I_keys.size), deleted=int(D_keys.size),
                 affected=totals["affected"], boundary=totals["boundary"],
                 rounds=totals["passes"], changed=changed,
-                seconds=time.perf_counter() - t0)
+                seconds=time.perf_counter() - t0,
+                insert_mode=imode if (I_keys.size and mode != "noop")
+                else None)
             self.stats["updates"] += 1
             self.stats[mode] += 1
             self.stats["update_seconds"] += st.seconds
@@ -620,25 +655,37 @@ class IncrementalTruss:
         E_new = np.stack([new_keys // n, new_keys % n], axis=1)
         limit = self.local_frac * max(1, new_keys.shape[0])
 
+        # Both phases build the next state off to the side and it is
+        # committed exactly once, after the whole batch has succeeded — an
+        # exception mid-repair must leave the handle bitwise-untouched
+        # (no half-applied batch, §13).
+        state = (self.g, self.T, self.S, self.tri)
+
         # ---------------- phase D: all deletions as one exact batch -------
         if D_keys.size:
-            ok = self._apply_deletions(old_keys, D_keys, n, limit, totals)
-            if not ok:
+            state = self._apply_deletions(old_keys, D_keys, n, limit, totals)
+            if state is None:
                 self._full_rebuild(E_new)
                 return done("full")
 
-        # ---------------- phase I: insertions one at a time ---------------
+        # ---------------- phase I: insertions (batched or sequential) -----
         if I_keys.size:
-            ok = self._apply_insertions(new_keys, I_keys, n, limit, totals)
-            if not ok:
+            state = self._apply_insertions(state, new_keys, I_keys, n, limit,
+                                           totals, imode)
+            if state is None:
                 self._full_rebuild(E_new)
                 return done("full")
 
+        self._commit(*state)
         return done("local")
 
     # ------------------------------------------------------- deletion phase --
-    def _apply_deletions(self, old_keys, D_keys, n, limit, totals) -> bool:
-        """G → G − D in place.  Returns False to request full fallback."""
+    def _apply_deletions(self, old_keys, D_keys, n, limit, totals):
+        """G → G − D, built off to the side (committed state untouched).
+
+        Returns the repaired ``(g, T, S, tri)`` state tuple, or ``None`` to
+        request full fallback.
+        """
         g_old, T_old, S_old, tri_old = self.g, self.T, self.S, self.tri
         m_old = g_old.m
         del_old = np.searchsorted(old_keys, D_keys)
@@ -676,20 +723,26 @@ class IncrementalTruss:
         # one triangle-connected blob.
         if seeds.size:
             if np.unique(seeds).size > limit:
-                return False        # repair would touch too much: recompute
+                return None         # repair would touch too much: recompute
             inc_mid = _Incidence(tri_mid, m_mid)
             if not _h_descent(inc_mid, T_mid, seeds, totals, limit):
-                return False        # descent cascaded past local_frac
-        self._commit(g_mid, T_mid, S_mid, tri_mid)
-        return True
+                return None         # descent cascaded past local_frac
+        return g_mid, T_mid, S_mid, tri_mid
 
     # ------------------------------------------------------ insertion phase --
-    def _apply_insertions(self, new_keys, I_keys, n, limit, totals) -> bool:
-        """G → G + I, one edge at a time (the +1-per-insertion locality
-        bound is only valid per single insertion).  Not-yet-inserted edges
-        are masked absent against the one prebuilt new CSR.  Returns False
-        to request full fallback."""
-        g_mid, T_mid, S_mid, tri_mid = self.g, self.T, self.S, self.tri
+    def _apply_insertions(self, state, new_keys, I_keys, n, limit, totals,
+                          insert_mode):
+        """G → G + I, built off to the side (committed state untouched).
+
+        Builds the one new CSR, maps the mid-state values into the new edge
+        space, and dispatches on ``insert_mode``: ``"sequential"`` repairs
+        one edge at a time (the +1-per-insertion locality bound, with
+        not-yet-inserted edges masked absent), ``"batched"`` repairs the
+        whole batch against one merged candidate region (§13).  Returns the
+        repaired ``(g, T, S, tri)`` state tuple, or ``None`` to request
+        full fallback.
+        """
+        g_mid, T_mid, S_mid, tri_mid = state
         mid_keys = edge_keys(g_mid.El[:, 0].astype(np.int64),
                              g_mid.El[:, 1].astype(np.int64), n)
         E_new = np.stack([new_keys // n, new_keys % n], axis=1)
@@ -708,7 +761,29 @@ class IncrementalTruss:
         tri_static = new_of_mid[tri_mid] if tri_mid.size else \
             np.zeros((0, 3), np.int64)
         inc_static = _Incidence(tri_static, m_new)
-        side: list[np.ndarray] = []
+        if insert_mode == "batched":
+            side_rows = self._insert_batched(
+                g_new, inc_static, ins_new, T_cur, S_cur, present, limit,
+                totals)
+        else:
+            side_rows = self._insert_sequential(
+                g_new, inc_static, ins_new, T_cur, S_cur, present, limit,
+                totals)
+        if side_rows is None:
+            return None
+        tri_new = np.concatenate([tri_static, side_rows]) \
+            if side_rows.size else tri_static
+        return g_new, T_cur, S_cur.astype(np.int32), tri_new
+
+    def _insert_sequential(self, g_new, inc_static, ins_new, T_cur, S_cur,
+                           present, limit, totals):
+        """One pinned-boundary re-peel per inserted edge (the parity oracle).
+
+        Mutates ``T_cur``/``S_cur``/``present`` in the new edge space;
+        returns the accumulated new triangle rows, or ``None`` to request
+        full fallback.
+        """
+        m_new = g_new.m
         side_rows = np.zeros((0, 3), np.int64)
 
         for e_i in ins_new:
@@ -726,7 +801,6 @@ class IncrementalTruss:
                 rows = np.sort(np.stack(
                     [np.full(p2.shape[0], e_i, np.int64), p2, p3], axis=1),
                     axis=1)
-                side.append(rows)
                 side_rows = np.concatenate([side_rows, rows])
 
             # affected region: one insertion moves any trussness by at most
@@ -749,18 +823,80 @@ class IncrementalTruss:
                                  np.array([e_i]), allowed)
                 cand[reach[T_cur[reach] == k]] = True
                 if int(cand.sum()) > limit:
-                    return False
+                    return None
             cand[e_i] = True
             A = np.nonzero(cand)[0]
             if A.size > limit or totals["affected"] + A.size > limit:
-                return False   # cumulative local work past paying: recompute
+                return None    # cumulative local work past paying: recompute
             tau = self._region_peel(g_new, inc_static, side_rows, A, S_cur,
                                     T_cur, totals, live_mask=present)
             T_cur[A] = tau
 
-        tri_new = np.concatenate([tri_static] + side) if side else tri_static
-        self._commit(g_new, T_cur, S_cur.astype(np.int32), tri_new)
-        return True
+        return side_rows
+
+    def _insert_batched(self, g_new, inc_static, ins_new, T_cur, S_cur,
+                        present, limit, totals):
+        """All insertions as one repair: one merged candidate region (§13).
+
+        Every inserted edge goes present at once, the batch's new triangles
+        land as one deduplicated support delta, and the per-edge
+        level-filtered BFS regions are merged by seeding every inserted
+        edge into the *same* traversal — one region, one pinned exterior
+        boundary, one compacted re-peel dispatch.  The level filter uses
+        the batch bound ``UB = min(S + 2, T + b)`` (a batch of ``b``
+        insertions raises any trussness by at most ``b``), scanning levels
+        up to the largest inserted-edge h-cap.  Mutates
+        ``T_cur``/``S_cur``/``present``; returns the new triangle rows, or
+        ``None`` to request full fallback.
+        """
+        m_new = g_new.m
+        present[ins_new] = True
+
+        # triangles born with the batch: every triangle of the new graph
+        # through an inserted edge (all partners are present now), each
+        # exactly once — triangles_through reports one row per inserted
+        # member, so sort + unique dedupes multi-inserted-edge triangles
+        a, p2, p3 = triangles_through(g_new, ins_new)
+        keep = present[p2] & present[p3]
+        a, p2, p3 = a[keep], p2[keep], p3[keep]
+        if a.size:
+            side_rows = np.unique(
+                np.sort(np.stack([a, p2, p3], axis=1), axis=1), axis=0)
+            np.add.at(S_cur, side_rows[:, 0], 1)
+            np.add.at(S_cur, side_rows[:, 1], 1)
+            np.add.at(S_cur, side_rows[:, 2], 1)
+        else:
+            side_rows = np.zeros((0, 3), np.int64)
+
+        # batch bound: b insertions move any trussness up by at most b, so
+        # UB = min(S+2, T+b) dominates every new value; an edge at level k
+        # can rise only through a new-graph (k+1)-truss that contains an
+        # inserted edge, so {UB >= k+1}-reachability from the batch merges
+        # the per-edge candidate regions, and the levels to scan are capped
+        # by the largest inserted-edge h-cap under UB.
+        b = int(ins_new.shape[0])
+        UB = np.where(T_cur >= 0, np.minimum(S_cur + 2, T_cur + b), S_cur + 2)
+        UB[~present] = 0
+        k_cap = max((int(self._h_cap(int(e_i), UB, inc_static, side_rows))
+                     for e_i in ins_new), default=2) - 1
+        cand = np.zeros(m_new, bool)
+        for k in np.unique(T_cur[present & (T_cur >= 2)]):
+            if k > k_cap:
+                break
+            allowed = UB >= k + 1
+            totals["passes"] += 1
+            reach = _tri_bfs(inc_static, side_rows, ins_new, allowed)
+            cand[reach[T_cur[reach] == k]] = True
+            if int(cand.sum()) > limit:
+                return None
+        cand[ins_new] = True
+        A = np.nonzero(cand)[0]
+        if A.size > limit or totals["affected"] + A.size > limit:
+            return None        # merged region past paying: recompute
+        tau = self._region_peel(g_new, inc_static, side_rows, A, S_cur,
+                                T_cur, totals, live_mask=present)
+        T_cur[A] = tau
+        return side_rows
 
     @staticmethod
     def _h_cap(e_i: int, UB: np.ndarray, inc: _Incidence,

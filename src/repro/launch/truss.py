@@ -10,7 +10,8 @@ timings; with ``--verify`` the final state is checked against a
 from-scratch PKT:
 
   PYTHONPATH=src python -m repro.launch.truss --graph rmat-small \
-      --update-stream 16 --churn 0.01 [--verify]
+      --update-stream 16 --churn 0.01 \
+      [--insert-mode batched|sequential] [--verify]
 
 Community serving (DESIGN.md §11): open the graph as a handle, build the
 triangle-connected k-truss community index, and answer queries at level k —
@@ -112,12 +113,14 @@ def run_update_stream(args) -> None:
     n = int(E.max()) + 1
     eng = TrussEngine(mode=args.mode, support_mode=args.support_mode,
                       table_mode=args.table_mode, hier_mode=args.hier_mode,
+                      insert_mode=args.insert_mode,
                       chunk=args.chunk or (1 << 12))
     t0 = time.perf_counter()
     h = eng.open(E, local_frac=args.local_frac)
     t_open = time.perf_counter() - t0
     print(f"graph={args.graph} n={n} m={h.m} open {t_open:.3f}s "
-          f"mode={args.mode} sup={args.support_mode}")
+          f"mode={args.mode} sup={args.support_mode} "
+          f"insert={args.insert_mode}")
     if args.query_communities:
         # build the index up front so the stream exercises its survival
         # (local repairs remap untouched levels, dirty the rest)
@@ -183,6 +186,7 @@ def run_serve(args) -> None:
         max_inflight=max(64, 4 * args.serve),
         mode=args.mode, support_mode=args.support_mode,
         table_mode=args.table_mode, hier_mode=args.hier_mode,
+        insert_mode=args.insert_mode,
         chunk=args.chunk or (1 << 12))
     t0 = time.perf_counter()
     h = sched.open_async(E, local_frac=args.local_frac).result()
@@ -324,6 +328,12 @@ def main(argv=None):
     ap.add_argument("--update-stream", type=int, default=0, metavar="K",
                     help="replay K incremental churn batches through "
                          "TrussEngine.update instead of one decomposition")
+    from repro.core.truss_inc import INSERT_MODES
+    ap.add_argument("--insert-mode", default="batched",
+                    choices=list(INSERT_MODES),
+                    help="insertion repair strategy for handle updates: one "
+                         "merged-region re-peel per batch (default) or the "
+                         "one-at-a-time parity oracle (DESIGN.md §13)")
     ap.add_argument("--churn", type=float, default=0.01,
                     help="fraction of edges swapped per update batch")
     ap.add_argument("--local-frac", type=float, default=0.25,

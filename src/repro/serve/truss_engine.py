@@ -61,7 +61,7 @@ from repro.core import support as support_mod
 from repro.core.hierarchy import HIER_MODES
 from repro.core.pkt import (PEEL_MODES, PeelTables, _SENTINEL_S, _peel_loop,
                             align_to_input, chunk_ranges)
-from repro.core.truss_inc import IncrementalTruss, UpdateStats
+from repro.core.truss_inc import INSERT_MODES, IncrementalTruss, UpdateStats
 from repro.kernels import wedge_common
 from repro.kernels.wedge_common import next_pow2 as _next_pow2
 from repro.kernels.wedge_common import pad1 as _pad1
@@ -257,6 +257,11 @@ class TrussHandle:
         """Vertex-space size (max id + 1 at open; stable across updates)."""
         return self._inc.n
 
+    @property
+    def insert_mode(self) -> str:
+        """Insertion repair strategy this handle's updates take (§13)."""
+        return self._inc.insert_mode
+
     def query(self, edges) -> np.ndarray:
         """Trussness for specific edges, aligned to the given rows."""
         return self._inc.query(edges)
@@ -331,6 +336,9 @@ class TrussEngine:
             and builds both tables inside the batched jit (§10); "numpy" is
             the host parity oracle.
         hier_mode: community-index builder for handles (§11).
+        insert_mode: handle insertion repair strategy ("batched" /
+            "sequential", §13) — one merged-region re-peel per update batch
+            vs one re-peel per inserted edge; bitwise-identical results.
         chunk: peel chunk size (rounded up to pow2).
         reorder: degeneracy-reorder each submission before decomposition.
         max_pending: auto-flush threshold — ``submit`` triggers a full
@@ -346,7 +354,7 @@ class TrussEngine:
 
     def __init__(self, *, mode: str = "chunked", support_mode: str = "jnp",
                  table_mode: str = "device", hier_mode: str = "device",
-                 chunk: int = 1 << 12,
+                 insert_mode: str = "batched", chunk: int = 1 << 12,
                  reorder: bool = True, max_pending: int = 32,
                  max_edges: int = 1 << 22, interpret: bool | None = None):
         if mode not in PEEL_MODES:
@@ -361,6 +369,9 @@ class TrussEngine:
         if hier_mode not in HIER_MODES:
             raise ValueError(f"hier_mode must be one of {HIER_MODES}, "
                              f"got {hier_mode!r}")
+        if insert_mode not in INSERT_MODES:
+            raise ValueError(f"insert_mode must be one of {INSERT_MODES}, "
+                             f"got {insert_mode!r}")
         if chunk < 1:
             raise ValueError("chunk must be positive")
         if max_edges < 1:
@@ -369,6 +380,7 @@ class TrussEngine:
         self.support_mode = support_mode
         self.table_mode = table_mode
         self.hier_mode = hier_mode
+        self.insert_mode = insert_mode
         self.max_edges = max_edges
         self.chunk = _next_pow2(chunk)
         self.reorder = reorder
@@ -475,16 +487,21 @@ class TrussEngine:
         return [self.result(t) for t in tickets]
 
     # ----------------------------------------------- incremental handles --
-    def open(self, edges, *, local_frac: float = 0.25) -> TrussHandle:
+    def open(self, edges, *, local_frac: float = 0.25,
+             insert_mode: str | None = None) -> TrussHandle:
         """Decompose ``edges`` into a *persistent* handle for ``update``.
 
         Unlike ``submit``'s single-read tickets, a handle retains the CSR
         graph, wedge-table-derived state, support, and trussness across
         arbitrarily many ``update`` batches until ``close`` releases it.
+        ``insert_mode`` overrides the engine's insertion repair strategy
+        for this handle (``None``: engine default, §13).
         """
         inc = IncrementalTruss(
             edges, mode=self.mode, support_mode=self.support_mode,
             table_mode=self.table_mode, hier_mode=self.hier_mode,
+            insert_mode=(self.insert_mode if insert_mode is None
+                         else insert_mode),
             chunk=self.chunk, local_frac=local_frac,
             interpret=self.interpret)
         h = TrussHandle(self._next_handle, inc)
@@ -494,7 +511,8 @@ class TrussEngine:
         return h
 
     def update(self, ticket_or_handle, *, add_edges=None,
-               remove_edges=None) -> UpdateStats:
+               remove_edges=None,
+               insert_mode: str | None = None) -> UpdateStats:
         """Apply one insert/delete batch to a handle (or promote a ticket).
 
         Accepts a :class:`TrussHandle`, or an *int ticket* whose submission
@@ -506,10 +524,12 @@ class TrussEngine:
 
         Small batches are absorbed by local repair (affected-region re-peel,
         see ``core/truss_inc.py``); large ones fall back to a full
-        recompute.  ``stats.mode`` reports which path ran.
+        recompute.  ``stats.mode`` reports which path ran.  ``insert_mode``
+        overrides the handle's insertion strategy for this call (§13).
         """
         h = self._resolve_handle(ticket_or_handle)
-        st = h._inc.update(add_edges=add_edges, remove_edges=remove_edges)
+        st = h._inc.update(add_edges=add_edges, remove_edges=remove_edges,
+                           insert_mode=insert_mode)
         self.stats["updates"] += 1
         if st.mode == "full":
             self.stats["updates_full"] += 1
@@ -518,7 +538,8 @@ class TrussEngine:
         self.stats["update_seconds"] += st.seconds
         return dataclasses.replace(st, handle=h)
 
-    def update_many(self, ticket_or_handle, batches) -> UpdateStats:
+    def update_many(self, ticket_or_handle, batches, *,
+                    insert_mode: str | None = None) -> UpdateStats:
         """Apply several queued update batches to one handle as one repair.
 
         The scheduler's coalescing entry point (DESIGN.md §12): ``batches``
@@ -533,6 +554,8 @@ class TrussEngine:
                 as in :meth:`update`).
             batches: iterable of ``(add_edges, remove_edges)`` pairs;
                 either element may be ``None``.
+            insert_mode: per-call override of the handle's insertion
+                strategy (``None``: handle default, §13).
 
         Returns:
             One :class:`UpdateStats` for the composed repair, with
@@ -545,7 +568,7 @@ class TrussEngine:
             KeyError: a ticket that is not promotable.
         """
         h = self._resolve_handle(ticket_or_handle)
-        st = h._inc.update_many(batches)
+        st = h._inc.update_many(batches, insert_mode=insert_mode)
         self.stats["updates"] += 1
         if st.mode == "full":
             self.stats["updates_full"] += 1

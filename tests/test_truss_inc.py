@@ -9,9 +9,9 @@ from repro.graphs.csr import edges_from_arrays
 from repro.graphs.gen import ring_of_cliques_edges
 from repro.core.pkt import truss_pkt
 from repro.core.support import compute_support
-from repro.core.truss_inc import (IncrementalTruss, _Incidence, _host_peel,
-                                  triangle_list, triangles_through,
-                                  wedge_subtable)
+from repro.core.truss_inc import (INSERT_MODES, IncrementalTruss, _Incidence,
+                                  _host_peel, triangle_list,
+                                  triangles_through, wedge_subtable)
 
 SETTINGS = dict(max_examples=12, deadline=None,
                 suppress_health_check=[HealthCheck.too_slow])
@@ -276,6 +276,271 @@ def test_triangles_through_subset_anchors():
         want = {tuple(sorted(int(y) for y in row if y != x))
                 for row in tri if (row == x).any()}
         assert got == want, x
+
+
+# ------------------------------------------------ batched insertions (§13) --
+
+#: Region-size regimes × executors × table modes the batched insertion path
+#: must agree across, bitwise: host-mirror regions, masked-device regions,
+#: forced mid-peel compaction, all three peel executors, both wedge-table
+#: builders, and the forced full-recompute fallback.
+BATCH_AXES = {
+    "host-region": dict(local_frac=1.0),
+    "device-region": dict(local_frac=1.0, host_peel_max=0),
+    "compacting": dict(local_frac=1.0, host_peel_max=0,
+                       compact_frac=0.9, compact_min=1),
+    "dense": dict(local_frac=1.0, host_peel_max=0, mode="dense"),
+    "pallas": dict(local_frac=1.0, host_peel_max=0, mode="pallas"),
+    "numpy-table": dict(local_frac=1.0, host_peel_max=0, table_mode="numpy"),
+    "forced-fallback": dict(local_frac=0.0),
+}
+
+
+def _tri_set(inc):
+    tri = inc.triangles
+    return np.unique(tri, axis=0) if tri.size else tri
+
+
+def _paired_script(seq, bat, n, batches, seed):
+    """Drive identical scripts through the sequential oracle and the batched
+    instance, asserting bitwise agreement (trussness, support, triangle
+    set) plus from-scratch parity after every batch."""
+    rng = np.random.default_rng(seed + 1)
+    for n_add, n_rm in batches:
+        cur = seq.edges
+        m = cur.shape[0]
+        rm = cur[rng.choice(m, size=min(n_rm, m), replace=False)] \
+            if m else np.zeros((0, 2), np.int64)
+        add = np.stack([rng.integers(0, n + 2, n_add),
+                        rng.integers(0, n + 2, n_add)], axis=1)
+        add = add[add[:, 0] != add[:, 1]]
+        s1 = seq.update(add_edges=add, remove_edges=rm)
+        s2 = bat.update(add_edges=add, remove_edges=rm)
+        if s1.inserted and s1.mode != "noop":
+            assert s1.insert_mode == "sequential"
+            assert s2.insert_mode == "batched"
+        assert np.array_equal(bat.edges, seq.edges)
+        assert np.array_equal(bat.trussness, seq.trussness), (n_add, n_rm)
+        assert np.array_equal(bat.support, seq.support), (n_add, n_rm)
+        assert np.array_equal(_tri_set(bat), _tri_set(seq)), (n_add, n_rm)
+        _assert_state_exact(bat, (n_add, n_rm, s2.mode))
+
+
+@given(script=update_scripts(), axis=st.sampled_from(sorted(BATCH_AXES)))
+@settings(max_examples=21, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+def test_property_batched_matches_sequential_and_scratch(script, axis):
+    """The §13 parity harness: batched ≡ sequential ≡ from-scratch pkt,
+    bitwise, across the executor × table × region-regime matrix (the axis
+    is drawn per example; every axis also runs deterministically in
+    ``test_batched_axes_fixed_script``)."""
+    n, E, batches, seed = script
+    if E.shape[0] == 0:
+        return
+    kw = BATCH_AXES[axis]
+    seq = IncrementalTruss(E, insert_mode="sequential", **kw)
+    bat = IncrementalTruss(E, insert_mode="batched", **kw)
+    _paired_script(seq, bat, n, batches, seed)
+
+
+@pytest.mark.parametrize("axis", sorted(BATCH_AXES))
+def test_batched_axes_fixed_script(axis):
+    """Deterministic coverage of every matrix axis with a fixed script —
+    guaranteed to run (and force region merges: multi-insert batches into
+    a clique ring) whichever property backend is active."""
+    kw = BATCH_AXES[axis]
+    E = ring_of_cliques_edges(4, 5)
+    seq = IncrementalTruss(E, insert_mode="sequential", **kw)
+    bat = IncrementalTruss(E, insert_mode="batched", **kw)
+    _paired_script(seq, bat, 20, [(4, 2), (3, 3), (5, 0)], seed=17)
+
+
+@given(update_scripts())
+@settings(max_examples=6, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+def test_property_update_many_batched_parity(script):
+    """Interleaved insert/delete batches composed through ``update_many``
+    under ``insert_mode="batched"`` end bitwise-equal to applying them one
+    at a time sequentially, and to from-scratch pkt."""
+    n, E, batches, seed = script
+    if E.shape[0] == 0:
+        return
+    rng = np.random.default_rng(seed + 1)
+    seq = IncrementalTruss(E, insert_mode="sequential", local_frac=1.0)
+    bat = IncrementalTruss(E, insert_mode="batched", local_frac=1.0)
+    blist = []
+    for n_add, n_rm in batches:
+        cur = seq.edges          # draw against the sequentially-applied state
+        m = cur.shape[0]
+        rm = cur[rng.choice(m, size=min(n_rm, m), replace=False)] \
+            if m else np.zeros((0, 2), np.int64)
+        add = np.stack([rng.integers(0, n + 2, n_add),
+                        rng.integers(0, n + 2, n_add)], axis=1)
+        add = add[add[:, 0] != add[:, 1]]
+        seq.update(add_edges=add, remove_edges=rm)
+        blist.append((add, rm))
+    st_ = bat.update_many(blist)
+    assert st_.coalesced == len(blist)
+    assert np.array_equal(bat.edges, seq.edges)
+    assert np.array_equal(bat.trussness, seq.trussness)
+    _assert_state_exact(bat)
+
+
+def test_insert_mode_validation_and_override():
+    E = np.array([[0, 1], [0, 2], [1, 2]], np.int64)
+    with pytest.raises(ValueError, match="insert_mode"):
+        IncrementalTruss(E, insert_mode="bogus")
+    inc = IncrementalTruss(E)
+    assert inc.insert_mode == "batched"      # the default path
+    assert set(INSERT_MODES) == {"sequential", "batched"}
+    with pytest.raises(ValueError, match="insert_mode"):
+        inc.update(add_edges=np.array([[0, 3]]), insert_mode="bogus")
+    st_ = inc.update(add_edges=np.array([[0, 3], [1, 3], [2, 3]]),
+                     insert_mode="sequential")
+    assert st_.insert_mode == "sequential"
+    st_ = inc.update(remove_edges=np.array([[0, 3]]))
+    assert st_.insert_mode is None           # no insertions in the batch
+    _assert_state_exact(inc)
+
+
+def test_batched_single_region_dispatch(monkeypatch):
+    """A multi-insert batch with overlapping candidate regions re-peels
+    exactly once — the per-edge regions merge into one dispatch (§13) —
+    while the sequential oracle re-peels once per inserted edge."""
+    calls = {"n": 0}
+    orig = IncrementalTruss._region_peel
+
+    def counting(self, *a, **k):
+        calls["n"] += 1
+        return orig(self, *a, **k)
+
+    monkeypatch.setattr(IncrementalTruss, "_region_peel", counting)
+    # three K5s, each missing one edge; the batch completes all three
+    rows, missing = [], []
+    for c in range(3):
+        vs = range(5 * c, 5 * c + 5)
+        allp = [(i, j) for i in vs for j in vs if i < j]
+        missing.append(allp.pop(c))
+        rows += allp
+    E = np.array(rows, np.int64)
+    add = np.array(missing, np.int64)
+
+    bat = IncrementalTruss(E, insert_mode="batched", local_frac=1.0)
+    calls["n"] = 0
+    st_ = bat.update(add_edges=add)
+    assert st_.inserted == 3 and st_.insert_mode == "batched"
+    assert st_.mode == "local" and calls["n"] == 1
+    seq = IncrementalTruss(E, insert_mode="sequential", local_frac=1.0)
+    calls["n"] = 0
+    st_ = seq.update(add_edges=add)
+    assert st_.mode == "local" and calls["n"] == 3
+    assert np.array_equal(bat.trussness, seq.trussness)
+    assert (bat.trussness == 5).all()        # every K5 completed
+    _assert_state_exact(bat)
+
+
+def test_batched_overlapping_cascades():
+    """Two inserted edges completing two overlapping near-cliques: the
+    shared middle edges sit in both candidate regions and the merged
+    re-peel must settle the joint cascade exactly."""
+    allp = [(i, j) for i in range(5) for j in range(i + 1, 5)]
+    E = np.array([e for e in allp if e not in [(0, 1), (3, 4)]], np.int64)
+    for imode in INSERT_MODES:
+        inc = IncrementalTruss(E, insert_mode=imode, local_frac=1.0)
+        inc.update(add_edges=np.array([[0, 1], [3, 4]], np.int64))
+        assert (inc.trussness == 5).all(), imode
+        _assert_state_exact(inc, imode)
+
+
+def test_batched_insert_and_delete_one_batch():
+    """Inserts and deletes in one batch under batched mode: the deletion
+    descent runs first, then one merged-region insertion repair, ending
+    bitwise-equal to scratch."""
+    E = ring_of_cliques_edges(4, 5)
+    seq = IncrementalTruss(E, insert_mode="sequential", local_frac=1.0)
+    bat = IncrementalTruss(E, insert_mode="batched", local_frac=1.0)
+    add = np.array([[0, 7], [1, 11], [2, 16]], np.int64)
+    rem = E[:3]
+    s1 = seq.update(add_edges=add, remove_edges=rem)
+    s2 = bat.update(add_edges=add, remove_edges=rem)
+    assert s1.mode == s2.mode == "local"
+    assert s2.insert_mode == "batched" and s2.deleted == 3
+    assert np.array_equal(bat.trussness, seq.trussness)
+    assert np.array_equal(bat.support, seq.support)
+    _assert_state_exact(bat)
+
+
+def test_batched_spans_compaction_boundary():
+    """A batch whose merged region runs the compacted device subset peel
+    with compaction forced on every sub-level (compact_min=1) — the region
+    re-peel crosses compaction boundaries mid-batch."""
+    E = _er_edges(26, 0.35, 21)
+    kw = dict(local_frac=1.0, host_peel_max=0, compact_frac=0.99,
+              compact_min=1)
+    add = np.array([[0, 25], [1, 24], [2, 23], [3, 22]], np.int64)
+    seq = IncrementalTruss(E, insert_mode="sequential", **kw)
+    bat = IncrementalTruss(E, insert_mode="batched", **kw)
+    seq.update(add_edges=add)
+    s2 = bat.update(add_edges=add)
+    # the merged region must repair locally through the compacting subset
+    # peel (the oracle may legitimately fall back on cumulative work —
+    # its result is exact either way)
+    assert s2.mode == "local" and s2.insert_mode == "batched"
+    assert np.array_equal(bat.trussness, seq.trussness)
+    _assert_state_exact(bat)
+
+
+def test_batched_touches_kmax_edges():
+    """A batch inserted inside the maximum-k clique — touching k_max edges
+    and raising k_max itself — repairs exactly in one merged region."""
+    allp = [(i, j) for i in range(6) for j in range(i + 1, 6)]
+    E = np.array(allp + [(0, 6), (0, 7), (6, 7)], np.int64)
+    bat = IncrementalTruss(E, insert_mode="batched", local_frac=1.0)
+    assert int(bat.trussness.max()) == 6
+    st_ = bat.update(add_edges=np.array([[6, k] for k in range(1, 6)],
+                                        np.int64))
+    assert st_.mode == "local" and st_.insert_mode == "batched"
+    assert int(bat.trussness.max()) == 7     # vertex 6 completed K7
+    _assert_state_exact(bat)
+
+
+class _Boom(RuntimeError):
+    pass
+
+
+@pytest.mark.parametrize("imode,fail_at", [("batched", 1), ("sequential", 2)])
+def test_fault_injection_no_half_applied_batch(monkeypatch, imode, fail_at):
+    """A region peel raising mid-batch leaves the handle bitwise untouched —
+    including the deletion phase of the same update (no half-applied
+    batch) — and the handle stays serviceable afterwards (§13)."""
+    E = ring_of_cliques_edges(4, 5)
+    inc = IncrementalTruss(E, insert_mode=imode, local_frac=1.0)
+    snap = (inc.edges, inc.trussness, inc.support, _tri_set(inc),
+            dict(inc.stats))
+    orig = IncrementalTruss._region_peel
+    calls = {"n": 0}
+
+    def flaky(self, *a, **k):
+        calls["n"] += 1
+        if calls["n"] == fail_at:
+            raise _Boom("injected mid-batch")
+        return orig(self, *a, **k)
+
+    monkeypatch.setattr(IncrementalTruss, "_region_peel", flaky)
+    add = np.array([[0, 7], [1, 11], [2, 16]], np.int64)
+    rem = E[:2]
+    with pytest.raises(_Boom):
+        inc.update(add_edges=add, remove_edges=rem)
+    assert calls["n"] == fail_at             # it really failed mid-batch
+    assert np.array_equal(inc.edges, snap[0])
+    assert np.array_equal(inc.trussness, snap[1])
+    assert np.array_equal(inc.support, snap[2])
+    assert np.array_equal(_tri_set(inc), snap[3])
+    assert inc.stats["updates"] == snap[4]["updates"]
+    monkeypatch.setattr(IncrementalTruss, "_region_peel", orig)
+    st_ = inc.update(add_edges=add, remove_edges=rem)
+    assert st_.mode == "local"               # same batch now lands cleanly
+    _assert_state_exact(inc)
 
 
 # ------------------------------------------------------- batch composition --
