@@ -1,0 +1,169 @@
+# Retracing-budget gate: python -m benchmarks.retrace_bench [--smoke]
+"""Counts jit compile-cache growth at the hot dispatch sites while a
+canonical workload runs, and fails (exit 1) when any site exceeds its
+budget from ``[tool.trusslint.retrace]`` in pyproject.toml.
+
+The pow2 size-class bucketing contract (DESIGN.md §10/§14) promises a
+*bounded* number of XLA compiles per site: one per distinct size class,
+never one per graph.  A regression that leaks a dynamic value into a
+traced shape (trusslint J002's runtime twin) shows up here as cache
+growth on the warm wave — so the warm wave must add exactly zero
+compiles on the batch-flush sites.
+
+Sites (name -> jitted callable):
+  engine_flush      serve.truss_engine._batched_truss_dev   (device tables)
+  engine_flush_host serve.truss_engine._batched_truss       (host tables)
+  peel_loop         core.pkt._peel_segment_jit   during full decompositions
+  support_build     core.support._support_device_jit
+  region_peel       core.pkt._peel_segment_jit   during handle updates
+
+Writes BENCH_retrace.json for workflow artifacts / README linkage.
+"""
+
+import argparse
+import importlib
+import json
+import pathlib
+import sys
+import time
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+
+
+def _scramble(E, seed):
+    """Relabel vertices with a seeded permutation: same size class,
+    different content — the engine must *not* recompile for it."""
+    import numpy as np
+
+    rng = np.random.default_rng(seed)
+    perm = rng.permutation(int(E.max()) + 1)
+    return perm[E]
+
+
+def _wave(eng, classes, seed):
+    tickets = [eng.submit(_scramble(E, 7 * seed + i))
+               for i, E in enumerate(classes)
+               for _ in range(2)]
+    eng.flush()
+    for t in tickets:
+        eng.result(t)
+
+
+def run(out_path: str = "BENCH_retrace.json") -> int:
+    import numpy as np
+
+    from repro.analysis import RetraceGuard
+    from repro.analysis.config import load_config
+    # repro.core re-exports a `pkt` *function*, which shadows the
+    # submodule on `import repro.core.pkt as ...`; go through importlib
+    pkt_mod = importlib.import_module("repro.core.pkt")
+    support_mod = importlib.import_module("repro.core.support")
+    truss_inc = importlib.import_module("repro.core.truss_inc")
+    from repro.graphs.csr import build_csr, edges_from_arrays
+    from repro.graphs.gen import ring_of_cliques_edges
+    from repro.serve import truss_engine as te
+
+    budgets = dict(load_config(ROOT).retrace_budgets)
+    report = {"ok": True, "sites": {}, "warm_waves": {}, "budgets": budgets}
+    t0 = time.perf_counter()
+
+    # deterministic generators: the edge count is a function of the
+    # parameters alone, so every scramble of a class lands in the same
+    # pow2 bucket (same SizeClass, same stacked batch shape)
+    class_a = ring_of_cliques_edges(4, 6)
+    class_b = ring_of_cliques_edges(8, 8)
+    classes = [class_a, class_b]
+
+    def gate(guard):
+        for name, entry in guard.report().items():
+            report["sites"][name] = entry
+            report["ok"] = report["ok"] and entry["ok"]
+
+    def engine_phase(site, fn, seed0, **eng_kw):
+        # cold wave: one executable per size class, gated by the budget;
+        # warm wave (same classes, new labels, fresh engine) must hit
+        # the jit cache every time — its compile delta is gated at zero
+        guard = RetraceGuard(budgets=budgets)
+        guard.track(site, fn)
+        with guard:
+            _wave(te.TrussEngine(**eng_kw), classes, seed=seed0)
+        cold_report = guard.report()
+        with guard:
+            _wave(te.TrussEngine(**eng_kw), classes, seed=seed0 + 1)
+        warm_n = guard.compiles(site)
+        for name, entry in cold_report.items():
+            report["sites"][name] = entry
+            report["ok"] = report["ok"] and entry["ok"]
+        gate_warm_ok = warm_n == 0
+        report["warm_waves"][site] = {"compiles": warm_n,
+                                      "ok": gate_warm_ok}
+        report["ok"] = report["ok"] and gate_warm_ok
+
+    # -- engine flush: device tables, then the host-built parity path
+    engine_phase("engine_flush", te._batched_truss_dev, seed0=0)
+    engine_phase("engine_flush_host", te._batched_truss, seed0=2,
+                 table_mode="numpy")
+
+    # -- direct pkt(): segmented peel + device support-table build.
+    # Two classes cold, then the same graphs again — the repeat pass is
+    # covered by the same window; its compiles must already be cached,
+    # so the total equals the cold-pass compile count
+    graphs = []
+    for E in classes:
+        g_edges = edges_from_arrays(E[:, 0], E[:, 1])
+        graphs.append(build_csr(g_edges, int(g_edges.max()) + 1))
+    guardp = RetraceGuard(budgets=budgets)
+    guardp.track("peel_loop", pkt_mod._peel_segment_jit)
+    guardp.track("support_build", support_mod._support_device_jit)
+    with guardp:
+        for g in graphs:
+            pkt_mod.pkt(g, table_mode="device")
+        for g in graphs:
+            pkt_mod.pkt(g, table_mode="device")
+    gate(guardp)
+
+    # -- incremental update stream: each batch repairs a live region
+    # through peel_live_subset -> _peel_segment_jit.  host_peel_max=0
+    # forces every region onto the masked device re-peel (the engine's
+    # default routes smoke-sized regions to the host path); local_frac=1
+    # keeps repairs local so the region path is what actually runs.
+    # Region sizes vary per batch but the pow2 compaction keeps the
+    # compile count bounded
+    inc = truss_inc.IncrementalTruss(class_b, host_peel_max=0,
+                                     local_frac=1.0)
+    n_b = int(class_b.max()) + 1
+    rng = np.random.default_rng(42)
+    guardu = RetraceGuard(budgets=budgets)
+    guardu.track("region_peel", pkt_mod._peel_segment_jit)
+    with guardu:
+        for _ in range(4):
+            uv = rng.integers(0, n_b, size=(6, 2))
+            uv = uv[uv[:, 0] != uv[:, 1]]
+            inc.update(add_edges=uv)
+    gate(guardu)
+
+    report["seconds"] = round(time.perf_counter() - t0, 3)
+    with open(out_path, "w") as f:
+        json.dump(report, f, indent=2, sort_keys=True)
+        f.write("\n")
+    status = "ok" if report["ok"] else "RETRACE BUDGET EXCEEDED"
+    for name, entry in sorted(report["sites"].items()):
+        print(f"retrace,{name},{entry['compiles']},budget={entry['budget']}")
+    for name, entry in sorted(report["warm_waves"].items()):
+        print(f"retrace,{name}.warm,{entry['compiles']},budget=0")
+    print(f"retrace,total_seconds,{report['seconds']},{status}")
+    return 0 if report["ok"] else 1
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI alias: the workload is already smoke-sized")
+    ap.add_argument("--out", default="BENCH_retrace.json")
+    args = ap.parse_args(argv)
+    del args.smoke
+    return run(args.out)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,16 @@
+"""trusslint: repo-native static analysis for the truss system.
+
+``python -m repro.analysis src/ --strict`` runs the full rule set
+(DESIGN.md §14): JAX discipline (J001-J004), Pallas kernel contracts
+(P001-P002), lock discipline (L001-L003), and module liveness
+(U001/U002).  :class:`RetraceGuard` is the runtime companion used by
+``benchmarks/retrace_bench.py`` to budget jit compile-cache growth.
+The package is stdlib-only so the CI job runs without installing jax.
+"""
+
+from repro.analysis.config import LintConfig, load_config
+from repro.analysis.engine import RULE_DOCS, Finding, run_paths
+from repro.analysis.retrace import RetraceGuard
+
+__all__ = ["Finding", "LintConfig", "RetraceGuard", "RULE_DOCS",
+           "load_config", "run_paths"]

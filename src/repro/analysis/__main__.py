@@ -1,0 +1,72 @@
+"""CLI for trusslint: ``python -m repro.analysis [paths...] [--strict]``.
+
+Exit status is 0 when no unwaived findings remain, 1 otherwise (with
+``--strict`` this is the CI ``static-analysis`` gate).  ``--json``
+emits machine-readable findings; ``--rules`` lists the rule catalogue.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+
+from repro.analysis.config import load_config
+from repro.analysis.engine import RULE_DOCS, run_paths
+
+
+def find_repo_root(start: pathlib.Path) -> pathlib.Path:
+    """Nearest ancestor containing pyproject.toml (else ``start``)."""
+    for cand in [start] + list(start.parents):
+        if (cand / "pyproject.toml").is_file():
+            return cand
+    return start
+
+
+def main(argv=None) -> int:
+    """Run the analyzer; return the process exit code."""
+    parser = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="trusslint: repo-native JAX/Pallas + concurrency"
+                    " static analysis (DESIGN.md §14)")
+    parser.add_argument("paths", nargs="*", default=None,
+                        help="files or directories to analyze"
+                             " (default: src/)")
+    parser.add_argument("--strict", action="store_true",
+                        help="fail on any unwaived finding (the CI gate)")
+    parser.add_argument("--json", action="store_true",
+                        help="emit findings as JSON")
+    parser.add_argument("--show-waived", action="store_true",
+                        help="also print findings silenced by waivers")
+    parser.add_argument("--rules", action="store_true",
+                        help="list the rule catalogue and exit")
+    args = parser.parse_args(argv)
+
+    if args.rules:
+        for rule, doc in sorted(RULE_DOCS.items()):
+            print(f"{rule}  {doc}")
+        return 0
+
+    repo_root = find_repo_root(pathlib.Path.cwd())
+    cfg = load_config(repo_root)
+    paths = args.paths or [cfg.src_root]
+    findings = run_paths(paths, cfg, repo_root)
+    active = [f for f in findings if not f.waived]
+    waived = [f for f in findings if f.waived]
+
+    if args.json:
+        print(json.dumps([f.__dict__ for f in findings], indent=2))
+    else:
+        for finding in active:
+            print(finding.render())
+        if args.show_waived:
+            for finding in waived:
+                print(f"{finding.render()}  [waived]")
+        print(f"trusslint: {len(active)} finding(s),"
+              f" {len(waived)} waived")
+    return 1 if active else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

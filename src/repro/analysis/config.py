@@ -1,0 +1,197 @@
+"""Configuration for the trusslint static-analysis pass (DESIGN.md §14).
+
+The defaults below encode the repo's contracts; the ``[tool.trusslint]``
+table in ``pyproject.toml`` overrides them so every rule stays
+config-driven rather than hard-coded in rule logic.  Python 3.11+ parses
+the table with :mod:`tomllib`; older interpreters (the pinned container
+runs 3.10, which predates tomllib and ships neither ``tomli`` nor
+``toml``) fall back to :func:`parse_toml_subset`, a small built-in
+parser covering exactly the TOML subset the table uses — dotted section
+headers, double-quoted strings, integers, booleans, and (possibly
+nested, possibly multi-line) arrays.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import pathlib
+
+try:  # Python >= 3.11
+    import tomllib as _toml
+except ModuleNotFoundError:  # pragma: no cover - depends on interpreter
+    _toml = None
+
+
+def _strip_comment(line: str) -> str:
+    """Drop a trailing ``#`` comment, respecting double-quoted strings."""
+    out, in_str = [], False
+    for ch in line:
+        if ch == '"':
+            in_str = not in_str
+        elif ch == "#" and not in_str:
+            break
+        out.append(ch)
+    return "".join(out)
+
+
+def _depth_delta(text: str) -> int:
+    """Net bracket depth of ``text``, ignoring brackets inside strings."""
+    depth, in_str = 0, False
+    for ch in text:
+        if ch == '"':
+            in_str = not in_str
+        elif not in_str:
+            depth += {"[": 1, "]": -1}.get(ch, 0)
+    return depth
+
+
+def _split_items(body: str) -> list[str]:
+    """Split an array body on top-level commas (bracket/string aware)."""
+    items, buf, depth, in_str = [], [], 0, False
+    for ch in body:
+        if ch == '"':
+            in_str = not in_str
+        elif not in_str:
+            depth += {"[": 1, "]": -1}.get(ch, 0)
+            if ch == "," and depth == 0:
+                items.append("".join(buf))
+                buf = []
+                continue
+        buf.append(ch)
+    items.append("".join(buf))
+    return [s for s in (i.strip() for i in items) if s]
+
+
+def _parse_value(text: str):
+    """Parse one TOML-subset value (string, int, bool, or array)."""
+    text = text.strip()
+    if text.startswith("["):
+        return [_parse_value(i) for i in _split_items(text[1:-1])]
+    if text.startswith('"'):
+        return text[1:-1]
+    if text in ("true", "false"):
+        return text == "true"
+    return int(text)
+
+
+def parse_toml_subset(text: str) -> dict:
+    """Parse the TOML subset used by ``[tool.trusslint]`` (3.10 fallback)."""
+    data: dict = {}
+    section = data
+    pending_key, buf = None, ""
+    for raw in text.splitlines():
+        line = _strip_comment(raw).strip()
+        if pending_key is not None:
+            buf += " " + line
+            if _depth_delta(buf) == 0:
+                section[pending_key] = _parse_value(buf)
+                pending_key, buf = None, ""
+            continue
+        if not line:
+            continue
+        if line.startswith("["):
+            section = data
+            for part in line.strip("[]").split("."):
+                section = section.setdefault(part.strip().strip('"'), {})
+            continue
+        if "=" in line:
+            key, value = line.split("=", 1)
+            key, value = key.strip().strip('"'), value.strip()
+            if value.startswith("[") and _depth_delta(value) != 0:
+                pending_key, buf = key, value
+            else:
+                section[key] = _parse_value(value)
+    return data
+
+
+@dataclasses.dataclass
+class LintConfig:
+    """Resolved trusslint configuration (defaults ⊕ pyproject table)."""
+
+    # -- file selection -------------------------------------------------
+    exclude: tuple = ()
+    src_root: str = "src"
+
+    # -- JAX discipline (J-rules) ---------------------------------------
+    jit_wrappers: tuple = ("jit", "pjit")
+    trace_callers: tuple = ("while_loop", "fori_loop", "scan", "cond",
+                            "switch")
+    host_sync_methods: tuple = ("item", "tolist", "block_until_ready")
+    host_sync_funcs: tuple = ("np.asarray", "np.array", "numpy.asarray",
+                              "numpy.array", "np.frombuffer",
+                              "jax.device_get")
+    host_coercions: tuple = ("int", "bool", "float")
+    pow2_wrappers: tuple = ("next_pow2", "pow2_chunk", "auto_chunk",
+                            "chunk_layout")
+    jit_static: dict = dataclasses.field(default_factory=dict)
+    pack_space_names: tuple = ("n",)
+    pack_homes: tuple = ("edge_keys",)
+    chunk_home: str = "wedge_common"
+    blockspec_helpers: tuple = ("chunk_spec", "replicated_spec")
+
+    # -- lock discipline (L-rules) --------------------------------------
+    lock_attrs: tuple = ("_lock", "_work")
+    lock_aliases: tuple = (("_lock", "_work"),)
+    blocking_always: tuple = ("join", "sleep", "block_until_ready",
+                              "flush", "result", "acquire")
+    blocking_engine: tuple = ("submit", "update", "update_many", "open",
+                              "close", "discard", "query", "communities",
+                              "community", "hierarchy", "trussness")
+    engine_receiver_hints: tuple = ("engine", "handle", "inc")
+    mutator_methods: tuple = ("append", "appendleft", "add", "clear",
+                              "pop", "popleft", "extend", "remove",
+                              "discard", "update", "setdefault", "insert")
+
+    # -- module liveness (U-rules) --------------------------------------
+    roots: tuple = ()
+    quarantine: tuple = ()
+
+    # -- runtime retracing budgets (consumed by the bench gate) ---------
+    retrace_budgets: dict = dataclasses.field(default_factory=dict)
+
+
+def _as_tuple(value):
+    """Normalise a TOML array into the tuple shape the config stores."""
+    if isinstance(value, list):
+        return tuple(_as_tuple(v) for v in value)
+    return value
+
+
+def _apply(cfg: LintConfig, table: dict, keys: tuple) -> None:
+    """Copy ``keys`` present in ``table`` onto ``cfg`` (arrays → tuples)."""
+    for key in keys:
+        if key in table:
+            value = table[key]
+            if isinstance(value, dict):
+                value = {k: _as_tuple(v) for k, v in value.items()}
+            else:
+                value = _as_tuple(value)
+            setattr(cfg, key, value)
+
+
+def load_config(repo_root: pathlib.Path) -> LintConfig:
+    """Build the effective config from ``<repo_root>/pyproject.toml``."""
+    cfg = LintConfig()
+    pyproject = pathlib.Path(repo_root) / "pyproject.toml"
+    if not pyproject.is_file():
+        return cfg
+    text = pyproject.read_text()
+    if _toml is not None:
+        data = _toml.loads(text)
+    else:
+        data = parse_toml_subset(text)
+    table = data.get("tool", {}).get("trusslint", {})
+    _apply(cfg, table, ("exclude", "src_root"))
+    _apply(cfg, table.get("jax", {}),
+           ("jit_wrappers", "trace_callers", "host_sync_methods",
+            "host_sync_funcs", "host_coercions", "pow2_wrappers",
+            "jit_static", "pack_space_names", "pack_homes", "chunk_home",
+            "blockspec_helpers"))
+    _apply(cfg, table.get("locks", {}),
+           ("lock_attrs", "lock_aliases", "blocking_always",
+            "blocking_engine", "engine_receiver_hints", "mutator_methods"))
+    _apply(cfg, table.get("modules", {}), ("roots", "quarantine"))
+    retrace = table.get("retrace", {})
+    if retrace:
+        cfg.retrace_budgets = dict(retrace)
+    return cfg

@@ -1,0 +1,190 @@
+"""trusslint driver: file collection, waivers, and the rule runner.
+
+The analyzer is pure stdlib (``ast`` + ``tomllib``/fallback) so the CI
+``static-analysis`` job needs no third-party installs and never imports
+jax.  Each rule family lives in its own module (``jax_rules``,
+``lock_rules``, ``modgraph``); this module owns the shared machinery:
+
+* :class:`Finding` — one diagnostic, keyed by rule id.
+* :class:`FileContext` — parsed source plus the per-line waiver and
+  ``holds[...]`` annotation maps.
+* :func:`run_paths` — collect files, run every rule, apply waivers.
+
+Waiver syntax (DESIGN.md §14): a ``# trusslint: ignore[RULE]`` comment
+on the offending line (or on a comment-only line directly above it)
+suppresses that rule there; ``ignore[*]`` suppresses every rule.  A
+``# trusslint: holds[_lock]`` comment on a ``def`` line asserts the
+function is only ever called with that lock held, so the lock analyzer
+treats the body as guarded.
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+import fnmatch
+import pathlib
+import re
+
+WAIVER_RE = re.compile(r"#\s*trusslint:\s*ignore\[([A-Za-z0-9_*,\s]+)\]")
+HOLDS_RE = re.compile(r"#\s*trusslint:\s*holds\[([A-Za-z0-9_,\s]+)\]")
+
+#: rule id → one-line contract, kept in sync with DESIGN.md §14.
+RULE_DOCS = {
+    "J001": "no host synchronization inside traced (jit / lax control"
+            " flow) code",
+    "J002": "static jit arguments derived from shapes must pass through"
+            " a pow2 bucketing wrapper",
+    "J003": "edge-key packing arithmetic must go through"
+            " graphs.csr.edge_keys (int64 widening + bound check)",
+    "J004": "buffers donated to a jit call must not be read afterwards",
+    "P001": "modules using kernels.wedge_common must build BlockSpecs"
+            " via its chunk_spec/replicated_spec helpers",
+    "P002": "chunk clamping (min/max on a chunk value) belongs in"
+            " kernels.wedge_common.pow2_chunk only",
+    "L001": "attributes assigned under a lock are guarded: no off-lock"
+            " access",
+    "L002": "no blocking call (device dispatch, join, result) while"
+            " holding a lock",
+    "L003": "lock acquisition order must be acyclic and non-reentrant",
+    "U001": "every module is reachable from a configured live root or"
+            " explicitly quarantined",
+    "U002": "live code must not import quarantined scaffolding",
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One diagnostic: a rule id anchored to a file and line."""
+
+    rule: str
+    path: str
+    line: int
+    message: str
+    waived: bool = False
+
+    def render(self) -> str:
+        """Format as ``path:line: RULE message`` for terminal output."""
+        return f"{self.path}:{self.line}: {self.rule} {self.message}"
+
+
+class FileContext:
+    """A parsed source file plus its waiver / holds annotation maps."""
+
+    def __init__(self, path: pathlib.Path, rel: str):
+        self.path = path
+        self.rel = rel
+        self.source = path.read_text()
+        self.tree = ast.parse(self.source, filename=str(path))
+        self.lines = self.source.splitlines()
+        self.waivers: dict[int, set] = {}
+        self.holds: dict[int, set] = {}
+        self._scan_comments()
+
+    def _scan_comments(self) -> None:
+        """Build per-line waiver and holds maps from magic comments."""
+        for idx, line in enumerate(self.lines, start=1):
+            match = WAIVER_RE.search(line)
+            if match:
+                rules = {r.strip() for r in match.group(1).split(",")}
+                self.waivers.setdefault(idx, set()).update(rules)
+                if line.lstrip().startswith("#"):
+                    # comment-only line: the waiver covers the next line
+                    self.waivers.setdefault(idx + 1, set()).update(rules)
+            match = HOLDS_RE.search(line)
+            if match:
+                locks = {k.strip() for k in match.group(1).split(",")}
+                self.holds.setdefault(idx, set()).update(locks)
+
+    def waived(self, rule: str, line: int) -> bool:
+        """True if ``rule`` is waived on ``line`` by an ignore comment."""
+        rules = self.waivers.get(line, ())
+        return rule in rules or "*" in rules
+
+    def holds_for_def(self, node: ast.AST) -> set:
+        """Locks asserted held for a ``def`` via a holds annotation.
+
+        The annotation may sit on the ``def`` line, the line above it,
+        or any signature continuation line up to the first body
+        statement.
+        """
+        body_start = node.body[0].lineno if getattr(node, "body", None) \
+            else node.lineno
+        held: set = set()
+        for line in range(node.lineno - 1, body_start + 1):
+            held |= self.holds.get(line, set())
+        return held
+
+
+def module_name(rel: str, src_root: str) -> str | None:
+    """Dotted module name for a repo-relative path, or None if outside."""
+    parts = pathlib.PurePosixPath(rel).parts
+    if parts[: len(pathlib.PurePosixPath(src_root).parts)] != \
+            pathlib.PurePosixPath(src_root).parts:
+        return None
+    parts = parts[len(pathlib.PurePosixPath(src_root).parts):]
+    if not parts or not parts[-1].endswith(".py"):
+        return None
+    parts = parts[:-1] + (parts[-1][:-3],)
+    if parts[-1] == "__init__":
+        parts = parts[:-1]
+    return ".".join(parts) if parts else None
+
+
+def _quarantined(mod: str | None, cfg) -> bool:
+    """True if ``mod`` falls under a configured quarantine prefix."""
+    if mod is None:
+        return False
+    return any(mod == q or mod.startswith(q + ".") for q in cfg.quarantine)
+
+
+def collect_files(paths, cfg, repo_root: pathlib.Path) -> list:
+    """Expand CLI paths into the analyzable file list.
+
+    Excluded globs and quarantined modules are dropped here, so the AST
+    rule families only ever see live code; the module-liveness rules
+    (``modgraph``) walk the full ``src_root`` tree themselves.
+    """
+    repo_root = pathlib.Path(repo_root)
+    files: list = []
+    for target in paths:
+        target = pathlib.Path(target)
+        if not target.is_absolute():
+            target = repo_root / target
+        candidates = [target] if target.is_file() \
+            else sorted(target.rglob("*.py"))
+        for cand in candidates:
+            try:
+                rel = cand.resolve().relative_to(repo_root.resolve())
+            except ValueError:
+                rel = cand
+            rel = rel.as_posix()
+            if any(fnmatch.fnmatch(rel, pat) for pat in cfg.exclude):
+                continue
+            if _quarantined(module_name(rel, cfg.src_root), cfg):
+                continue
+            files.append((cand, rel))
+    return files
+
+
+def run_paths(paths, cfg, repo_root) -> list:
+    """Run every rule family over ``paths``; return ordered findings."""
+    from repro.analysis import jax_rules, lock_rules, modgraph
+
+    repo_root = pathlib.Path(repo_root)
+    findings: list = []
+    locks = lock_rules.LockChecker(cfg)
+    scanned_src = False
+    for path, rel in collect_files(paths, cfg, repo_root):
+        ctx = FileContext(path, rel)
+        raw = jax_rules.check_file(ctx, cfg) + locks.check_file(ctx)
+        findings.extend(
+            dataclasses.replace(f, waived=ctx.waived(f.rule, f.line))
+            for f in raw)
+        if module_name(rel, cfg.src_root) is not None:
+            scanned_src = True
+    findings.extend(locks.finalize())
+    if scanned_src and cfg.roots:
+        findings.extend(modgraph.check(repo_root, cfg))
+    findings.sort(key=lambda f: (f.path, f.line, f.rule))
+    return findings

@@ -1,0 +1,400 @@
+"""JAX/Pallas discipline rules (J001-J004, P001-P002).
+
+These rules encode the contracts the executors rely on (DESIGN.md §14):
+traced code never synchronizes with the host (J001), static jit
+arguments derived from array shapes go through the pow2 bucketing
+wrappers so the compile cache stays bounded (J002 — the
+``SizeClass``/``n_pad`` contract from ``serve/truss_engine.py``),
+edge-key packing always routes through ``graphs.csr.edge_keys`` for the
+int64 widening and the ``MAX_PACK_N`` bound check (J003), donated
+buffers are dead after the call that donates them (J004), and modules
+built on ``kernels/wedge_common.py`` use its BlockSpec helpers and its
+single chunk-clamp home rather than re-deriving either locally
+(P001/P002).
+"""
+
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.engine import Finding
+
+_FUNC_NODES = (ast.FunctionDef, ast.AsyncFunctionDef)
+_SCOPE_NODES = _FUNC_NODES + (ast.Lambda,)
+
+
+def _dotted(node) -> str | None:
+    """Dotted name of a Name/Attribute chain (``pl.BlockSpec``), else None."""
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+    elif parts:
+        parts.append("?")
+    else:
+        return None
+    return ".".join(reversed(parts))
+
+
+def _terminal(node) -> str | None:
+    """Last component of a Name/Attribute chain, else None."""
+    if isinstance(node, ast.Attribute):
+        return node.attr
+    if isinstance(node, ast.Name):
+        return node.id
+    return None
+
+
+class JitInfo:
+    """Statically known facts about one jit-wrapped function."""
+
+    def __init__(self, name, params, statics, donated):
+        self.name = name
+        self.params = params      # positional parameter names, in order
+        self.statics = statics    # set of static parameter names
+        self.donated = donated    # set of donated positional indices
+
+
+def _const_strs(node) -> list:
+    """String constants inside a Constant/tuple/list literal."""
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        return [node.value]
+    if isinstance(node, (ast.Tuple, ast.List)):
+        return [c.value for c in node.elts
+                if isinstance(c, ast.Constant) and isinstance(c.value, str)]
+    return []
+
+
+def _const_ints(node) -> list:
+    """Integer constants inside a Constant/tuple/list literal."""
+    if isinstance(node, ast.Constant) and isinstance(node.value, int):
+        return [node.value]
+    if isinstance(node, (ast.Tuple, ast.List)):
+        return [c.value for c in node.elts
+                if isinstance(c, ast.Constant) and isinstance(c.value, int)]
+    return []
+
+
+def _jit_call_opts(call: ast.Call, cfg):
+    """(static names/nums, donate nums) from a jit(...) call's keywords."""
+    statics, static_nums, donated = set(), [], set()
+    for kw in call.keywords:
+        if kw.arg == "static_argnames":
+            statics.update(_const_strs(kw.value))
+        elif kw.arg == "static_argnums":
+            static_nums.extend(_const_ints(kw.value))
+        elif kw.arg == "donate_argnums":
+            donated.update(_const_ints(kw.value))
+    return statics, static_nums, donated
+
+
+def _decode_jit_decorator(dec, cfg):
+    """Decode a decorator if it is a jit wrapper; else None."""
+    if _terminal(dec) in cfg.jit_wrappers:
+        return set(), [], set()
+    if isinstance(dec, ast.Call):
+        head = _terminal(dec.func)
+        if head in cfg.jit_wrappers:
+            return _jit_call_opts(dec, cfg)
+        if head == "partial" and dec.args \
+                and _terminal(dec.args[0]) in cfg.jit_wrappers:
+            return _jit_call_opts(dec, cfg)
+    return None
+
+
+def _jit_registry(tree, cfg) -> dict:
+    """Map name → JitInfo for every jit function visible in the module.
+
+    Covers decorated ``def``s and ``name = jax.jit(fn, ...)`` aliases
+    (parameter order resolved through ``fn`` when it is a module-level
+    def, so positional static arguments are checked too).
+    """
+    defs = {n.name: n for n in ast.walk(tree) if isinstance(n, _FUNC_NODES)}
+    reg: dict = {}
+
+    def _params(node):
+        args = node.args
+        return [a.arg for a in args.posonlyargs + args.args]
+
+    for node in defs.values():
+        for dec in node.decorator_list:
+            opts = _decode_jit_decorator(dec, cfg)
+            if opts is None:
+                continue
+            statics, nums, donated = opts
+            params = _params(node)
+            statics |= {params[i] for i in nums if i < len(params)}
+            reg[node.name] = JitInfo(node.name, params, statics, donated)
+    for node in ast.walk(tree):
+        if not (isinstance(node, ast.Assign) and len(node.targets) == 1
+                and isinstance(node.targets[0], ast.Name)
+                and isinstance(node.value, ast.Call)):
+            continue
+        call = node.value
+        if _terminal(call.func) not in cfg.jit_wrappers:
+            continue
+        statics, nums, donated = _jit_call_opts(call, cfg)
+        params = []
+        if call.args and _terminal(call.args[0]) in defs:
+            params = _params(defs[_terminal(call.args[0])])
+        statics |= {params[i] for i in nums if i < len(params)}
+        reg[node.targets[0].id] = JitInfo(
+            node.targets[0].id, params, statics, donated)
+    return reg
+
+
+def _traced_roots(tree, cfg) -> list:
+    """Function/lambda nodes whose bodies run under a JAX trace.
+
+    A function is traced if it is jit-decorated, or if its name (or a
+    lambda) is passed to a ``lax`` control-flow combinator.  Anything
+    lexically nested inside a traced function executes at trace time
+    too, so only the outermost traced nodes are returned.
+    """
+    defs = {n.name: n for n in ast.walk(tree) if isinstance(n, _FUNC_NODES)}
+    traced = {n for n in defs.values()
+              if any(_decode_jit_decorator(d, cfg) is not None
+                     for d in n.decorator_list)}
+    for node in ast.walk(tree):
+        if not (isinstance(node, ast.Call)
+                and _terminal(node.func) in cfg.trace_callers):
+            continue
+        operands = list(node.args) + [kw.value for kw in node.keywords]
+        for arg in operands:
+            if isinstance(arg, ast.Name) and arg.id in defs:
+                traced.add(defs[arg.id])
+            elif isinstance(arg, ast.Lambda):
+                traced.add(arg)
+    roots, seen = [], set()
+    for node in sorted(traced, key=lambda n: n.lineno):
+        if id(node) not in seen:
+            roots.append(node)
+            seen.update(id(sub) for sub in ast.walk(node))
+    return roots
+
+
+def _static_coercion_ok(arg) -> bool:
+    """True if an int()/bool()/float() argument is clearly trace-static."""
+    if isinstance(arg, ast.Constant):
+        return True
+    if isinstance(arg, ast.Call) and _terminal(arg.func) in ("len", "ord"):
+        return True
+    if isinstance(arg, ast.Name) and arg.id.isupper():
+        return True  # module-level ALL_CAPS constants
+    # shapes are static under trace: int(x.shape[0]) never syncs
+    return any(isinstance(sub, ast.Attribute) and sub.attr == "shape"
+               for sub in ast.walk(arg))
+
+
+def _check_host_sync(root, ctx, cfg, findings) -> None:
+    """J001 over one traced root: flag host-synchronizing calls."""
+    for sub in ast.walk(root):
+        if not isinstance(sub, ast.Call):
+            continue
+        if isinstance(sub.func, ast.Attribute) \
+                and sub.func.attr in cfg.host_sync_methods:
+            findings.append(Finding(
+                "J001", ctx.rel, sub.lineno,
+                f"host sync `.{sub.func.attr}()` inside traced code"))
+        elif _dotted(sub.func) in cfg.host_sync_funcs:
+            findings.append(Finding(
+                "J001", ctx.rel, sub.lineno,
+                f"host materialization `{_dotted(sub.func)}(...)` inside"
+                " traced code"))
+        elif isinstance(sub.func, ast.Name) \
+                and sub.func.id in cfg.host_coercions \
+                and sub.args and not _static_coercion_ok(sub.args[0]):
+            findings.append(Finding(
+                "J001", ctx.rel, sub.lineno,
+                f"`{sub.func.id}()` coercion of a possibly-traced value"
+                " inside traced code"))
+
+
+def _dynamic_shape(node, cfg) -> bool:
+    """True if an expression derives from a shape without pow2 bucketing."""
+    if isinstance(node, ast.Call) \
+            and _terminal(node.func) in cfg.pow2_wrappers:
+        return False  # sanctioned bucketing wrapper: anything inside is ok
+    if isinstance(node, ast.Attribute) and node.attr in ("shape", "size"):
+        return True
+    if isinstance(node, ast.Call) and isinstance(node.func, ast.Name) \
+            and node.func.id == "len":
+        return True
+    return any(_dynamic_shape(child, cfg)
+               for child in ast.iter_child_nodes(node))
+
+
+def _check_jit_statics(tree, ctx, cfg, reg, findings) -> None:
+    """J002: dynamic shapes flowing into static jit arguments."""
+    cross = {name: set(statics) for name, statics in cfg.jit_static.items()}
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        head = _terminal(node.func)
+        info = reg.get(head)
+        statics = info.statics if info is not None else cross.get(head)
+        if not statics:
+            continue
+        params = info.params if info is not None else []
+        exprs = [(kw.arg, kw.value) for kw in node.keywords
+                 if kw.arg in statics]
+        exprs += [(params[i], a) for i, a in enumerate(node.args)
+                  if i < len(params) and params[i] in statics]
+        for name, expr in exprs:
+            if _dynamic_shape(expr, cfg):
+                findings.append(Finding(
+                    "J002", ctx.rel, expr.lineno,
+                    f"static jit argument `{name}={ast.unparse(expr)}` of"
+                    f" `{head}` is shape-derived without a pow2 bucketing"
+                    " wrapper (retracing hazard)"))
+
+
+def _check_key_packing(tree, ctx, cfg, findings) -> None:
+    """J003: raw ``lo * n + hi`` packing outside the blessed helper."""
+
+    def visit(node, fname):
+        if isinstance(node, _FUNC_NODES):
+            fname = node.name
+        if isinstance(node, ast.BinOp) and isinstance(node.op, ast.Add) \
+                and isinstance(node.left, ast.BinOp) \
+                and isinstance(node.left.op, ast.Mult) \
+                and fname not in cfg.pack_homes:
+            factors = (_terminal(node.left.left),
+                       _terminal(node.left.right))
+            if any(f in cfg.pack_space_names for f in factors):
+                findings.append(Finding(
+                    "J003", ctx.rel, node.lineno,
+                    "raw edge-key packing arithmetic; use"
+                    " graphs.csr.edge_keys (int64 widening + MAX_PACK_N"
+                    " bound check)"))
+        for child in ast.iter_child_nodes(node):
+            visit(child, fname)
+
+    visit(tree, None)
+
+
+def _check_use_after_donation(tree, ctx, cfg, reg, findings) -> None:
+    """J004: reads of a name after it was donated to a jit call."""
+    donors = {name: info for name, info in reg.items() if info.donated}
+    if not donors:
+        return
+    for func in ast.walk(tree):
+        if not isinstance(func, _FUNC_NODES):
+            continue
+        calls = []  # (lineno, donated variable name)
+        for node in ast.walk(func):
+            if not isinstance(node, ast.Call):
+                continue
+            info = donors.get(_terminal(node.func))
+            if info is None:
+                continue
+            for pos in info.donated:
+                if pos < len(node.args) \
+                        and isinstance(node.args[pos], ast.Name):
+                    calls.append((node.lineno, node.args[pos].id))
+        if not calls:
+            continue
+        loads = [(n.lineno, n.id) for n in ast.walk(func)
+                 if isinstance(n, ast.Name)
+                 and isinstance(n.ctx, ast.Load)]
+        stores = [(n.lineno, n.id) for n in ast.walk(func)
+                  if isinstance(n, ast.Name)
+                  and isinstance(n.ctx, ast.Store)]
+        for call_line, var in calls:
+            for load_line, name in loads:
+                if name != var or load_line <= call_line:
+                    continue
+                rebound = any(s_name == var
+                              and call_line <= s_line <= load_line
+                              for s_line, s_name in stores)
+                if not rebound:
+                    findings.append(Finding(
+                        "J004", ctx.rel, load_line,
+                        f"`{var}` was donated to a jit call on line"
+                        f" {call_line} and must not be read afterwards"))
+                    break
+
+
+def _imports_module(tree, suffix: str) -> bool:
+    """True if the module imports a module whose name ends in ``suffix``."""
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            if any(a.name.endswith(suffix) for a in node.names):
+                return True
+        elif isinstance(node, ast.ImportFrom):
+            if node.module and node.module.endswith(suffix):
+                return True
+            if any(a.name == suffix for a in node.names):
+                return True
+    return False
+
+
+def _clamp_call(node, cfg):
+    """First raw min()/max() call in an expression, skipping pow2 wrappers."""
+    if isinstance(node, ast.Call):
+        if _terminal(node.func) in cfg.pow2_wrappers:
+            return None  # the sanctioned clamp home: anything inside is ok
+        if isinstance(node.func, ast.Name) and node.func.id in ("min",
+                                                               "max"):
+            return node
+    for child in ast.iter_child_nodes(node):
+        found = _clamp_call(child, cfg)
+        if found is not None:
+            return found
+    return None
+
+
+def _check_pallas_contracts(tree, ctx, cfg, findings) -> None:
+    """P001/P002: wedge_common BlockSpec helpers and the chunk-clamp home."""
+    in_home = ctx.rel.endswith(f"{cfg.chunk_home}.py")
+    uses_wc = _imports_module(tree, cfg.chunk_home)
+
+    def flag_clamp(target_name, value):
+        clamp = _clamp_call(value, cfg)
+        if clamp is not None:
+            findings.append(Finding(
+                "P002", ctx.rel, clamp.lineno,
+                f"`{target_name}` is clamped with a local"
+                f" {clamp.func.id}(); route through"
+                " wedge_common.pow2_chunk so every executor agrees on"
+                " the chunk layout"))
+
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        if uses_wc and not in_home \
+                and _terminal(node.func) == "BlockSpec":
+            findings.append(Finding(
+                "P001", ctx.rel, node.lineno,
+                "raw pl.BlockSpec in a wedge_common-based kernel; use"
+                " wedge_common.chunk_spec/replicated_spec so the spec"
+                " matches the declared chunk layout"))
+    if in_home:
+        return
+    # chunk-valued bindings end in "chunk" (`chunk`, `sup_chunk`);
+    # chunk *counts* (`n_chunks`) are not clamp targets
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Assign):
+            for tgt in node.targets:
+                name = _terminal(tgt)
+                if name is not None and name.endswith("chunk"):
+                    flag_clamp(name, node.value)
+        elif isinstance(node, ast.Call):
+            for kw in node.keywords:
+                if kw.arg is not None and kw.arg.endswith("chunk"):
+                    flag_clamp(kw.arg, kw.value)
+
+
+def check_file(ctx, cfg) -> list:
+    """Run every JAX/Pallas rule over one parsed file."""
+    findings: list = []
+    reg = _jit_registry(ctx.tree, cfg)
+    for root in _traced_roots(ctx.tree, cfg):
+        _check_host_sync(root, ctx, cfg, findings)
+    _check_jit_statics(ctx.tree, ctx, cfg, reg, findings)
+    _check_key_packing(ctx.tree, ctx, cfg, findings)
+    _check_use_after_donation(ctx.tree, ctx, cfg, reg, findings)
+    _check_pallas_contracts(ctx.tree, ctx, cfg, findings)
+    return findings

@@ -1,0 +1,218 @@
+"""Lock-discipline rules (L001-L003) for the serving layer.
+
+The scheduler's concurrency contract (DESIGN.md §12) is: every piece of
+shared state is owned by ``self._lock`` (``self._work`` is a Condition
+wrapping the same lock, so the two are aliases), and device dispatch
+happens strictly outside the lock so a slow flush never blocks
+admission.  The analyzer recovers that contract from the code itself:
+
+* **L001** — an attribute assigned or mutated under ``with self._lock``
+  anywhere in the class is *guarded*; any access outside a lock context
+  (and outside ``__init__``, which runs happens-before thread start) is
+  a race.  Functions documented as lock-internal carry a
+  ``# trusslint: holds[_lock]`` annotation.
+* **L002** — blocking calls (engine dispatch, ``join``, ``result``,
+  ``sleep``...) must not run while a lock is held.
+* **L003** — lock acquisition order must be acyclic across the whole
+  analyzed set, and no lock may be re-acquired while already held
+  (``threading.Lock`` is not reentrant).
+"""
+
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.engine import Finding
+
+_FUNC_NODES = (ast.FunctionDef, ast.AsyncFunctionDef)
+
+
+def _self_attr(node) -> str | None:
+    """Attribute name if ``node`` is ``self.<attr>``, else None."""
+    if isinstance(node, ast.Attribute) and isinstance(node.value, ast.Name) \
+            and node.value.id == "self":
+        return node.attr
+    return None
+
+
+class LockChecker:
+    """Stateful checker: per-file L001/L002 plus cross-file L003."""
+
+    def __init__(self, cfg):
+        self.cfg = cfg
+        self._canon = {}
+        for group in cfg.lock_aliases:
+            for name in group:
+                self._canon[name] = group[0]
+        # (held, acquired) -> (rel, line) of the first acquisition site
+        self.edges: dict = {}
+
+    def canon(self, attr: str) -> str:
+        """Canonical lock name (aliases collapse onto one lock)."""
+        return self._canon.get(attr, attr)
+
+    def _lock_of(self, expr) -> str | None:
+        """Canonical lock acquired by a ``with`` item, or None."""
+        attr = _self_attr(expr)
+        if attr in self.cfg.lock_attrs:
+            return self.canon(attr)
+        return None
+
+    # -- pass 1: guarded-attribute inference ----------------------------
+
+    def _guarded_attrs(self, cls) -> set:
+        """Attributes assigned or mutated under a lock in ``cls``."""
+        guarded: set = set()
+
+        def visit(node, held):
+            if isinstance(node, (ast.With, ast.AsyncWith)):
+                locks = [self._lock_of(i.context_expr) for i in node.items]
+                held = held + [k for k in locks if k]
+            if held:
+                self._record_mutations(node, guarded)
+            for child in ast.iter_child_nodes(node):
+                visit(child, held)
+
+        for method in cls.body:
+            if isinstance(method, _FUNC_NODES) \
+                    and method.name != "__init__":
+                visit(method, [])
+        return guarded
+
+    def _record_mutations(self, node, guarded) -> None:
+        """Add attributes that ``node`` mutates to ``guarded``."""
+        targets = []
+        if isinstance(node, ast.Assign):
+            targets = node.targets
+        elif isinstance(node, (ast.AugAssign, ast.AnnAssign)):
+            targets = [node.target]
+        elif isinstance(node, ast.Delete):
+            targets = node.targets
+        for tgt in targets:
+            if isinstance(tgt, (ast.Tuple, ast.List)):
+                targets.extend(tgt.elts)
+                continue
+            if isinstance(tgt, ast.Subscript):
+                tgt = tgt.value
+            attr = _self_attr(tgt)
+            if attr is not None:
+                guarded.add(attr)
+        if isinstance(node, ast.Call) \
+                and isinstance(node.func, ast.Attribute) \
+                and node.func.attr in self.cfg.mutator_methods:
+            recv = node.func.value
+            if isinstance(recv, ast.Subscript):
+                recv = recv.value
+            attr = _self_attr(recv)
+            if attr is not None:
+                guarded.add(attr)
+
+    # -- pass 2: violations ---------------------------------------------
+
+    def _blocking(self, call) -> str | None:
+        """Reason string if ``call`` blocks (dispatch/join/...), else None."""
+        if not isinstance(call.func, ast.Attribute):
+            return None
+        name = call.func.attr
+        if name in self.cfg.blocking_always:
+            return f"`.{name}()` blocks"
+        recv = []
+        node = call.func.value
+        while isinstance(node, ast.Attribute):
+            recv.append(node.attr)
+            node = node.value
+        if isinstance(node, ast.Name):
+            recv.append(node.id)
+        recv_text = ".".join(recv).lower()
+        if name in self.cfg.blocking_engine \
+                and any(h in recv_text
+                        for h in self.cfg.engine_receiver_hints):
+            return f"engine dispatch `.{name}()` blocks on the device"
+        return None
+
+    def check_file(self, ctx) -> list:
+        """L001/L002 findings for one file; records L003 edges."""
+        findings: list = []
+        for cls in ast.walk(ctx.tree):
+            if not isinstance(cls, ast.ClassDef):
+                continue
+            has_locks = any(
+                _self_attr(n) in self.cfg.lock_attrs
+                for n in ast.walk(cls) if isinstance(n, ast.Attribute))
+            if not has_locks:
+                continue
+            guarded = self._guarded_attrs(cls)
+            for method in cls.body:
+                if not isinstance(method, _FUNC_NODES) \
+                        or method.name == "__init__":
+                    continue
+                annotated = {self.canon(k)
+                             for k in ctx.holds_for_def(method)}
+                self._check_method(method, ctx, guarded,
+                                   list(annotated), findings)
+        return findings
+
+    def _check_method(self, method, ctx, guarded, held0, findings) -> None:
+        """Walk one method tracking the held-lock stack."""
+
+        def visit(node, held):
+            if isinstance(node, (ast.With, ast.AsyncWith)):
+                for item in node.items:
+                    lock = self._lock_of(item.context_expr)
+                    if lock is None:
+                        continue
+                    if lock in held:
+                        findings.append(Finding(
+                            "L003", ctx.rel, node.lineno,
+                            f"`{lock}` re-acquired while already held"
+                            " (threading.Lock is not reentrant)"))
+                    elif held:
+                        self.edges.setdefault(
+                            (held[-1], lock), (ctx.rel, node.lineno))
+                    held = held + [lock]
+            if isinstance(node, ast.Attribute) \
+                    and isinstance(node.ctx, (ast.Load, ast.Store,
+                                              ast.Del)):
+                attr = _self_attr(node)
+                if attr in guarded and not held:
+                    findings.append(Finding(
+                        "L001", ctx.rel, node.lineno,
+                        f"`self.{attr}` is guarded by a lock but accessed"
+                        f" here without holding one"))
+            if isinstance(node, ast.Call) and held:
+                reason = self._blocking(node)
+                if reason is not None:
+                    findings.append(Finding(
+                        "L002", ctx.rel, node.lineno,
+                        f"{reason} while a lock is held"))
+            for child in ast.iter_child_nodes(node):
+                visit(child, held)
+
+        for stmt in method.body:
+            visit(stmt, list(held0))
+
+    # -- cross-file: lock-order cycles ----------------------------------
+
+    def finalize(self) -> list:
+        """L003 findings for acquisition-order cycles across all files."""
+        graph: dict = {}
+        for (a, b) in self.edges:
+            graph.setdefault(a, set()).add(b)
+        findings = []
+        for (a, b), (rel, line) in sorted(self.edges.items()):
+            # cycle iff b can reach a
+            seen, stack = set(), [b]
+            while stack:
+                node = stack.pop()
+                if node == a:
+                    findings.append(Finding(
+                        "L003", rel, line,
+                        f"lock-order cycle: `{b}` acquired while holding"
+                        f" `{a}`, but `{a}` is also acquired under"
+                        f" `{b}` elsewhere"))
+                    break
+                if node in seen:
+                    continue
+                seen.add(node)
+                stack.extend(graph.get(node, ()))
+        return findings

@@ -1,0 +1,127 @@
+"""Module-liveness rules (U001/U002): the dead-code quarantine.
+
+The repo carries pretrain-era scaffolding (``models/``, ``optim/``,
+``configs/``...) that the truss system never imports.  Rather than
+delete history, the config quarantines those modules: they are excluded
+from the AST rule families and from ruff, and these two rules keep the
+partition honest by walking the real import graph under ``src_root``:
+
+* **U001** — every module must be reachable from a configured live root
+  or explicitly quarantined; anything else is unintegrated dead code
+  that would silently rot unanalyzed.
+* **U002** — no live module may import a quarantined one, so
+  scaffolding cannot leak back into tier-1 import paths.
+"""
+
+from __future__ import annotations
+
+import ast
+import pathlib
+
+from repro.analysis.engine import Finding
+
+
+def inventory(src_dir: pathlib.Path) -> dict:
+    """Map dotted module name → source path for everything in the tree."""
+    inv: dict = {}
+    for path in sorted(src_dir.rglob("*.py")):
+        parts = path.relative_to(src_dir).with_suffix("").parts
+        if parts[-1] == "__init__":
+            parts = parts[:-1]
+        if parts:
+            inv[".".join(parts)] = path
+    return inv
+
+
+def _add_with_ancestors(mod: str, inv: dict, deps: set) -> None:
+    """Add ``mod`` (or its longest existing prefix) plus its packages."""
+    parts = mod.split(".")
+    while parts and ".".join(parts) not in inv:
+        parts = parts[:-1]
+    while parts:
+        deps.add(".".join(parts))
+        parts = parts[:-1]
+
+
+def module_deps(tree, modname: str, is_pkg: bool, inv: dict) -> set:
+    """Modules (within the inventory) that ``modname`` imports."""
+    deps: set = set()
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for alias in node.names:
+                _add_with_ancestors(alias.name, inv, deps)
+        elif isinstance(node, ast.ImportFrom):
+            if node.level:
+                pkg = modname.split(".")
+                if not is_pkg:
+                    pkg = pkg[:-1]
+                pkg = pkg[: len(pkg) - (node.level - 1)]
+                base = ".".join(pkg + (node.module or "").split("."))
+                base = base.rstrip(".")
+            else:
+                base = node.module or ""
+            if not base:
+                continue
+            _add_with_ancestors(base, inv, deps)
+            for alias in node.names:
+                if f"{base}.{alias.name}" in inv:
+                    _add_with_ancestors(f"{base}.{alias.name}", inv, deps)
+    deps.discard(modname)
+    return deps
+
+
+def _quarantined(mod: str, cfg) -> str | None:
+    """The quarantine prefix covering ``mod``, or None if it is live."""
+    for q in cfg.quarantine:
+        if mod == q or mod.startswith(q + "."):
+            return q
+    return None
+
+
+def check(repo_root: pathlib.Path, cfg) -> list:
+    """Run the liveness analysis; return U001/U002 findings."""
+    src_dir = pathlib.Path(repo_root) / cfg.src_root
+    inv = inventory(src_dir)
+    if not inv:
+        return []
+    deps: dict = {}
+    for mod, path in inv.items():
+        tree = ast.parse(path.read_text(), filename=str(path))
+        deps[mod] = module_deps(tree, mod, path.name == "__init__.py", inv)
+
+    findings: list = []
+    rel = {mod: path.relative_to(repo_root).as_posix()
+           for mod, path in inv.items()}
+    reachable: set = set()
+    frontier = [r for r in cfg.roots if r in inv]
+    # one breach per (module, quarantine prefix), reporting the most
+    # specific imported name — `from pkg import sub` resolves to both
+    # pkg and pkg.sub, and the finding should name pkg.sub
+    breaches: dict = {}
+    while frontier:
+        mod = frontier.pop()
+        if mod in reachable:
+            continue
+        reachable.add(mod)
+        for dep in sorted(deps.get(mod, ())):
+            prefix = _quarantined(dep, cfg)
+            if prefix is not None:
+                if _quarantined(mod, cfg) is None:
+                    key = (mod, prefix)
+                    if len(dep) > len(breaches.get(key, "")):
+                        breaches[key] = dep
+                continue  # do not traverse into quarantined subgraphs
+            frontier.append(dep)
+    for (mod, _prefix), dep in sorted(breaches.items()):
+        findings.append(Finding(
+            "U002", rel[mod], 1,
+            f"live module imports quarantined scaffolding `{dep}`"))
+    for mod in sorted(inv):
+        if mod in reachable or _quarantined(mod, cfg):
+            continue
+        findings.append(Finding(
+            "U001", rel[mod], 1,
+            "module is unreachable from every configured live root;"
+            " integrate it, add it to [tool.trusslint.modules].roots, or"
+            " quarantine it"))
+    return findings

@@ -1,0 +1,93 @@
+"""Runtime retracing guard: jit compile-cache budgets per call site.
+
+Static rule J002 catches shape-derived static arguments; this module
+catches what static analysis cannot — the *observed* number of XLA
+compilations a workload actually triggers.  ``RetraceGuard`` snapshots
+each registered jit callable's compile-cache size (jax exposes it as
+``fn._cache_size()``) around a workload and compares the growth against
+a per-site budget from ``[tool.trusslint.retrace]``.  The bench gate
+(``benchmarks/retrace_bench.py``) runs the engine-flush and
+handle-update smoke workloads under a guard, writes
+``BENCH_retrace.json``, and exits nonzero when a hot path (engine
+flush, ``_peel_loop`` segments, ``_region_peel``) compiles more than
+its budget allows — i.e. when someone breaks the pow2 ``SizeClass``
+bucketing contract in a way that only shows up as silent recompiles.
+
+This module never imports jax: it only calls the private-but-stable
+``_cache_size`` hook when present, and reports sites as unmeasured
+(passing) on jax builds without it.
+"""
+
+from __future__ import annotations
+
+
+def cache_size(fn) -> int | None:
+    """Current compile-cache entry count of a jit callable, if exposed."""
+    probe = getattr(fn, "_cache_size", None)
+    if probe is None:
+        return None
+    try:
+        return int(probe())
+    except Exception:
+        return None
+
+
+class RetraceGuard:
+    """Context manager budgeting compile-cache growth per call site.
+
+    >>> guard = RetraceGuard(budgets={"engine_flush": 4})
+    >>> guard.track("engine_flush", _batched_truss_dev)
+    >>> with guard:
+    ...     run_workload()
+    >>> guard.ok()
+    True
+    """
+
+    def __init__(self, budgets: dict | None = None):
+        self.budgets = dict(budgets or {})
+        self._fns: dict = {}
+        self._start: dict = {}
+        self._stop: dict = {}
+
+    def track(self, name: str, fn, budget: int | None = None) -> None:
+        """Register ``fn`` (jit-wrapped) under call-site name ``name``."""
+        self._fns[name] = fn
+        if budget is not None:
+            self.budgets[name] = budget
+
+    def __enter__(self):
+        self._start = {n: cache_size(f) for n, f in self._fns.items()}
+        self._stop = {}
+        return self
+
+    def __exit__(self, *exc):
+        self._stop = {n: cache_size(f) for n, f in self._fns.items()}
+        return False
+
+    def compiles(self, name: str) -> int | None:
+        """Observed compile count for ``name`` (None if unmeasurable)."""
+        start, stop = self._start.get(name), self._stop.get(name)
+        if start is None or stop is None:
+            return None
+        return stop - start
+
+    def report(self) -> dict:
+        """Per-site dict: compiles, budget, and the pass/fail verdict."""
+        out = {}
+        for name in self._fns:
+            compiles = self.compiles(name)
+            budget = self.budgets.get(name)
+            ok = True
+            if compiles is not None and budget is not None:
+                ok = compiles <= budget
+            out[name] = {"compiles": compiles, "budget": budget,
+                         "measured": compiles is not None, "ok": ok}
+        return out
+
+    def ok(self) -> bool:
+        """True when every measured site is within its budget."""
+        return all(site["ok"] for site in self.report().values())
+
+    def violations(self) -> list:
+        """Names of sites that exceeded their compile budget."""
+        return sorted(n for n, s in self.report().items() if not s["ok"])

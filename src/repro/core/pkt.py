@@ -47,7 +47,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.graphs.csr import CSRGraph
+from repro.graphs.csr import CSRGraph, edge_keys
 from repro.core import support as support_mod
 from repro.kernels import wedge_common
 
@@ -720,9 +720,9 @@ def align_to_input(trussness: np.ndarray, g: CSRGraph,
     return the *insertion point* — a neighboring edge's trussness — or an
     out-of-range index when the key sorts past the end of the table).
     """
-    key_g = g.El[:, 0].astype(np.int64) * n + g.El[:, 1]
+    key_g = edge_keys(g.El[:, 0], g.El[:, 1], n)
     if keys is None:
-        keys = edges[:, 0].astype(np.int64) * n + edges[:, 1]
+        keys = edge_keys(edges[:, 0], edges[:, 1], n)
     keys = np.asarray(keys, dtype=np.int64)
     if key_g.shape[0] == 0:
         if keys.shape[0] == 0:

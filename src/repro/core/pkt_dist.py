@@ -225,7 +225,7 @@ def pkt_dist(g: CSRGraph, mesh: jax.sharding.Mesh | None = None,
     if support_mode == "pallas":
         # each shard lowers the kernel over its slice: the slice must be a
         # whole number of chunks, so round the per-shard length up to one
-        sup_chunk = min(chunk, 1 << 13)
+        sup_chunk = wedge_common.pow2_chunk(1 << 13, chunk)
         per_shard = -(-per_shard // sup_chunk) * sup_chunk
     ssize = per_shard * n_shards
     if table_mode == "device":

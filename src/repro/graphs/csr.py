@@ -69,10 +69,27 @@ def check_edge_array(edges) -> np.ndarray:
 
 
 def edge_keys(lo: np.ndarray, hi: np.ndarray, n: int) -> np.ndarray:
-    """Pack canonical (lo < hi) endpoint pairs into unique int64 keys."""
+    """Pack canonical (lo < hi) endpoint pairs into unique int64 keys.
+
+    The single blessed home for the ``lo * n + hi`` packing (trusslint
+    J003): operands are widened to int64 *before* the multiply and both
+    the pack space and the ids are bounds-checked, so a key can never
+    wrap silently — ``n <= MAX_PACK_N`` implies ``n*n - 1 < 2**63``.
+    """
+    n = int(n)
     if n > MAX_PACK_N:
         raise ValueError(
             f"n={n} overflows int64 lo*n+hi key packing (max {MAX_PACK_N})")
+    lo = np.asarray(lo)
+    hi = np.asarray(hi)
+    if lo.size:
+        vmin = min(int(lo.min()), int(hi.min()))
+        vmax = max(int(lo.max()), int(hi.max()))
+        if vmin < 0 or vmax >= n:
+            raise ValueError(
+                f"vertex ids must lie in [0, n={n}) for lo*n+hi key "
+                f"packing; got range [{vmin}, {vmax}] — keys would "
+                f"collide or wrap")
     return lo.astype(np.int64) * n + hi
 
 
@@ -189,8 +206,7 @@ def edges_from_arrays(src: np.ndarray, dst: np.ndarray, n: Optional[int] = None)
     hi = np.maximum(src, dst)
     if n is None:
         n = int(max(lo.max(initial=-1), hi.max(initial=-1)) + 1) if lo.size else 0
-    key = lo * n + hi
-    key = np.unique(key)
+    key = np.unique(edge_keys(lo, hi, n))
     return np.stack([key // n, key % n], axis=1)
 
 

@@ -91,7 +91,7 @@ def peel_decrement_targets(active, l, e1, cand, lo, hi, N, Eid,
         kernel,
         grid=(n_chunks,),
         in_specs=[
-            pl.BlockSpec((1,), lambda i: (i,)),   # active (per chunk)
+            wedge_common.chunk_spec(1),           # active (per chunk)
             full(1),                              # l (replicated scalar)
             chunk_spec, chunk_spec, chunk_spec, chunk_spec,
             full(two_m), full(two_m),             # N, Eid

@@ -81,7 +81,7 @@ def support_hit_targets(e1, cand, lo, hi, N, Eid, *, chunk: int,
         kernel,
         grid=(n_chunks,),
         in_specs=[cspec, cspec, cspec, cspec, full(two_m), full(two_m)],
-        out_specs=[cspec, cspec, cspec, pl.BlockSpec((1,), lambda i: (i,))],
+        out_specs=[cspec, cspec, cspec, wedge_common.chunk_spec(1)],
         out_shape=[jax.ShapeDtypeStruct((nw,), jnp.int32)] * 3
         + [jax.ShapeDtypeStruct((n_chunks,), jnp.int32)],
         interpret=interpret,

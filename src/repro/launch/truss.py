@@ -42,6 +42,7 @@ import numpy as np
 
 from repro.graphs.datasets import named_graph
 from repro.graphs.csr import build_csr, relabel, degeneracy_order
+from repro.kernels.wedge_common import pow2_chunk
 from repro.core import (pkt, truss_wc, truss_ros, truss_trilist, truss_numpy,
                         pkt_dist)
 
@@ -380,7 +381,8 @@ def main(argv=None):
         extra = (f"levels={res.levels} sublevels={res.sublevels} "
                  f"compactions={res.compactions}")
     elif args.engine == "dist":
-        truss = pkt_dist(g, chunk=min(args.chunk or (1 << 12), 1 << 12),
+        truss = pkt_dist(g, chunk=pow2_chunk(1 << 12,
+                                             args.chunk or (1 << 12)),
                          support_mode=args.support_mode,
                          table_mode=args.table_mode)
         extra = ""

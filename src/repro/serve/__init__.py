@@ -1,9 +1,12 @@
-"""Serving layer: batched truss engine, async scheduler, LM scaffolding."""
+"""Serving layer: batched truss engine and the async scheduler.
 
-from repro.serve.engine import make_prefill_step, make_decode_step
+The pretrain-era LM serving scaffolding (``repro.serve.engine``) is
+quarantined out of the live import path (trusslint U002, DESIGN.md
+§14); import it directly if you need it.
+"""
+
 from repro.serve.scheduler import Overloaded, TrussScheduler
 from repro.serve.truss_engine import TrussEngine, TrussHandle, truss_batched
 
-__all__ = ["make_prefill_step", "make_decode_step",
-           "Overloaded", "TrussScheduler",
+__all__ = ["Overloaded", "TrussScheduler",
            "TrussEngine", "TrussHandle", "truss_batched"]

@@ -393,7 +393,7 @@ class TrussScheduler:
                         and not self._hqueues):
                     return
 
-    def _seconds_to_deadline(self):
+    def _seconds_to_deadline(self):  # trusslint: holds[_lock]
         """Time until the next bucket must dispatch; None when no bucket waits.
 
         The deadline of a bucket is ``oldest.t_enq + max_delay``; a bucket
@@ -428,16 +428,22 @@ class TrussScheduler:
             req.future.set_result(value)
 
     def _cancel_all(self, batch) -> None:
-        """close(drain=False): cancel everything queued, nothing dispatches."""
+        """close(drain=False): cancel everything queued, nothing dispatches.
+
+        The dispatch structures are guarded state (`stats()` can race this
+        teardown from another thread), so they are snapshotted-and-swapped
+        under the lock; the engine discards then run outside it.
+        """
         pending = list(batch)
-        for entries in self._buckets.values():
+        with self._lock:
+            buckets, self._buckets = self._buckets, {}
+            hqueues, self._hqueues = self._hqueues, {}
+        for entries in buckets.values():
             for ticket, r in entries:
                 self.engine.discard(ticket)
                 pending.append(r)
-        for q in self._hqueues.values():
+        for q in hqueues.values():
             pending.extend(q)
-        self._buckets.clear()
-        self._hqueues.clear()
         for req in pending:
             with self._lock:
                 self._depth -= 1

@@ -606,10 +606,10 @@ class TrussEngine:
         m_pad = max(_MIN_M_PAD, _next_pow2(g.m))
         sup_pad = _next_pow2(max(1, stab.size))
         peel_pad = _next_pow2(max(1, ptab.size))
-        chunk = min(self.chunk, peel_pad)
+        chunk = wedge_common.pow2_chunk(peel_pad, self.chunk)
         n_chunks = peel_pad // chunk
         iters = int(np.ceil(np.log2(2 * m_pad + 1))) + 1
-        sup_chunk = min(self.chunk, sup_pad)
+        sup_chunk = wedge_common.pow2_chunk(sup_pad, self.chunk)
         n_pad = _next_pow2(g.n + 1) if self.table_mode == "device" else 0
         return SizeClass(m_pad, sup_pad, peel_pad, chunk, n_chunks, iters,
                          sup_chunk, sup_pad // sup_chunk, n_pad)

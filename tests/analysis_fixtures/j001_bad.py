@@ -1,0 +1,22 @@
+"""Fixture: host synchronization inside traced code (J001 fires)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+
+@jax.jit
+def bad_item(x):
+    return x.sum().item()  # host sync under jit
+
+
+def bad_while(S):
+    def cond(s):
+        return jnp.any(s > 0)
+
+    def body(s):
+        host = np.asarray(s)  # host materialization in a loop body
+        return s - int(host.max())  # traced-value coercion
+
+    return lax.while_loop(cond, body, S)

@@ -1,0 +1,27 @@
+"""Fixture: traced code without host sync (J001 quiet)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+
+@jax.jit
+def good_jit(x):
+    k = int(x.shape[0])  # shapes are static under trace
+    return x * k
+
+
+def good_while(S):
+    def cond(s):
+        return jnp.any(s > 0)
+
+    def body(s):
+        return s - jnp.minimum(s, 1)
+
+    return lax.while_loop(cond, body, S)
+
+
+def host_helper(x):
+    # not traced: host syncs are fine outside jit / lax bodies
+    return int(np.asarray(x).sum())

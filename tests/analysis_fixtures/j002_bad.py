@@ -1,0 +1,21 @@
+"""Fixture: dynamic shape into a static jit argument (J002 fires)."""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+@functools.partial(jax.jit, static_argnames=("size",))
+def build_table(x, size):
+    return jnp.zeros((size,), jnp.int32) + x[0]
+
+
+@functools.partial(jax.jit, static_argnums=(1,))
+def scaled(x, factor):
+    return x * factor
+
+
+def driver(x):
+    t = build_table(x, size=x.shape[0] * 2)  # keyword static, raw shape
+    return t + scaled(x, len(x))  # positional static, raw len

@@ -1,0 +1,23 @@
+"""Fixture: statics derived through pow2 bucketing (J002 quiet)."""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.wedge_common import next_pow2
+
+
+@functools.partial(jax.jit, static_argnames=("size",))
+def build_table(x, size):
+    return jnp.zeros((size,), jnp.int32) + x[0]
+
+
+@functools.partial(jax.jit, static_argnums=(1,))
+def scaled(x, factor):
+    return x * factor
+
+
+def driver(x, m):
+    t = build_table(x, size=next_pow2(x.shape[0] * 2))  # bucketed
+    return t + scaled(x, m)  # plain value, not shape-derived

@@ -1,0 +1,11 @@
+"""Fixture: raw edge-key packing arithmetic (J003 fires)."""
+
+import numpy as np
+
+
+def pack(lo, hi, n):
+    return lo.astype(np.int64) * n + hi  # bypasses edge_keys
+
+
+def pack_commuted(lo, hi, n):
+    return n * lo + hi  # same hazard, commuted multiply

@@ -1,0 +1,15 @@
+"""Fixture: donated buffer read after the donating call (J004 fires)."""
+
+import functools
+
+import jax
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def step(state, delta):
+    return state + delta
+
+
+def driver(state, delta):
+    out = step(state, delta)
+    return out + state  # state's buffer was donated to step()

@@ -1,0 +1,15 @@
+"""Fixture: donated name rebound by the call (J004 quiet)."""
+
+import functools
+
+import jax
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def step(state, delta):
+    return state + delta
+
+
+def driver(state, delta):
+    state = step(state, delta)  # rebinding kills the old buffer name
+    return state + delta

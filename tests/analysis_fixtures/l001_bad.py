@@ -1,0 +1,16 @@
+"""Fixture: guarded attribute accessed off-lock (L001 fires)."""
+
+import threading
+
+
+class Worker:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._queue = []
+
+    def put(self, item):
+        with self._lock:
+            self._queue.append(item)  # assignment under lock → guarded
+
+    def size(self):
+        return len(self._queue)  # off-lock read of guarded state

@@ -1,0 +1,21 @@
+"""Fixture: guarded state only touched under the lock (L001 quiet)."""
+
+import threading
+
+
+class Worker:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._queue = []
+
+    def put(self, item):
+        with self._lock:
+            self._queue.append(item)
+
+    def size(self):
+        with self._lock:
+            return len(self._queue)
+
+    def _drain(self):  # trusslint: holds[_lock]
+        items, self._queue = self._queue, []
+        return items

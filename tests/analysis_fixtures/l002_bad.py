@@ -1,0 +1,16 @@
+"""Fixture: blocking dispatch while holding the lock (L002 fires)."""
+
+import threading
+
+
+class Scheduler:
+    def __init__(self, engine):
+        self._lock = threading.Lock()
+        self.engine = engine
+        self._pending = []
+
+    def tick(self):
+        with self._lock:
+            batch, self._pending = self._pending, []
+            self.engine.flush()  # device dispatch under the lock
+        return batch

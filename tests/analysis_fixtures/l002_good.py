@@ -1,0 +1,16 @@
+"""Fixture: dispatch strictly outside the lock (L002 quiet)."""
+
+import threading
+
+
+class Scheduler:
+    def __init__(self, engine):
+        self._lock = threading.Lock()
+        self.engine = engine
+        self._pending = []
+
+    def tick(self):
+        with self._lock:
+            batch, self._pending = self._pending, []
+        self.engine.flush()  # lock released before dispatch
+        return batch

@@ -1,0 +1,24 @@
+"""Fixture: lock-order cycle and re-entrant acquisition (L003 fires)."""
+
+import threading
+
+
+class Pair:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._iolock = threading.Lock()
+
+    def forward(self):
+        with self._lock:
+            with self._iolock:  # _lock → _iolock
+                pass
+
+    def backward(self):
+        with self._iolock:
+            with self._lock:  # _iolock → _lock: cycle
+                pass
+
+    def reentrant(self):
+        with self._lock:
+            with self._lock:  # threading.Lock is not reentrant
+                pass

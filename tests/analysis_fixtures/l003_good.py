@@ -1,0 +1,19 @@
+"""Fixture: consistent lock acquisition order (L003 quiet)."""
+
+import threading
+
+
+class Pair:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._iolock = threading.Lock()
+
+    def forward(self):
+        with self._lock:
+            with self._iolock:
+                pass
+
+    def also_forward(self):
+        with self._lock:
+            with self._iolock:
+                pass

@@ -1,0 +1,10 @@
+"""Fixture: raw BlockSpec beside wedge_common (P001 fires)."""
+
+from jax.experimental import pallas as pl
+
+from repro.kernels import wedge_common
+
+
+def specs(chunk):
+    full = wedge_common.replicated_spec
+    return [pl.BlockSpec((chunk,), lambda i: (i,)), full(4)]

@@ -1,0 +1,9 @@
+"""Fixture: BlockSpecs via the wedge_common helpers (P001 quiet)."""
+
+from repro.kernels import wedge_common
+
+
+def specs(chunk):
+    return [wedge_common.chunk_spec(chunk),
+            wedge_common.chunk_spec(1),
+            wedge_common.replicated_spec(4)]

@@ -1,0 +1,10 @@
+"""Fixture: call-site-local chunk clamp (P002 fires)."""
+
+
+def pick(chunk, size_pad):
+    sup_chunk = min(chunk, 1 << 13)  # local clamp, bypasses pow2_chunk
+    return sup_chunk
+
+
+def launch(fn, chunk):
+    return fn(chunk=max(chunk, 16))  # clamped at the keyword

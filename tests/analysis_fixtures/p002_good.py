@@ -1,0 +1,13 @@
+"""Fixture: chunk clamping through pow2_chunk (P002 quiet)."""
+
+from repro.kernels.wedge_common import pow2_chunk
+
+
+def pick(chunk, size_pad):
+    sup_chunk = pow2_chunk(size_pad, chunk)
+    n_chunks = max(1, size_pad // sup_chunk)  # counts may use max()
+    return sup_chunk, n_chunks
+
+
+def launch(fn, chunk, size_pad):
+    return fn(chunk=pow2_chunk(size_pad, chunk))

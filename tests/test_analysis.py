@@ -1,0 +1,189 @@
+"""trusslint test suite: fixture corpus, waivers, config, self-check.
+
+Every rule has a seeded-violation fixture that must fire and a fixed
+form that must stay quiet (`tests/analysis_fixtures/`); the self-check
+asserts the analyzer runs clean on ``src/repro`` itself with the repo
+config — the same invocation as the CI ``static-analysis`` job.
+"""
+
+import pathlib
+
+import pytest
+
+from repro.analysis import LintConfig, RetraceGuard, run_paths
+from repro.analysis.config import load_config, parse_toml_subset
+from repro.analysis import modgraph
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+FIXTURES = pathlib.Path(__file__).parent / "analysis_fixtures"
+
+
+def run_fixture(name, cfg=None):
+    findings = run_paths([FIXTURES / name], cfg or LintConfig(), ROOT)
+    return [f for f in findings if not f.waived]
+
+
+RULE_CASES = ["j001", "j002", "j003", "j004", "p001", "p002",
+              "l001", "l002"]
+
+
+@pytest.mark.parametrize("stem", RULE_CASES)
+def test_rule_fires_on_seeded_violation(stem):
+    rule = stem.upper()
+    found = run_fixture(f"{stem}_bad.py")
+    assert any(f.rule == rule for f in found), \
+        f"{rule} did not fire on {stem}_bad.py: {found}"
+
+
+@pytest.mark.parametrize("stem", RULE_CASES)
+def test_rule_quiet_on_fixed_form(stem):
+    found = run_fixture(f"{stem}_good.py")
+    assert found == [], f"{stem}_good.py should be clean: {found}"
+
+
+def test_j002_fires_on_both_keyword_and_positional_statics():
+    found = run_fixture("j002_bad.py")
+    assert len([f for f in found if f.rule == "J002"]) == 2
+
+
+def _l003_cfg():
+    # two distinct locks, no aliasing (the repo config aliases
+    # _lock/_work because the Condition wraps the same mutex)
+    return LintConfig(lock_attrs=("_lock", "_iolock"), lock_aliases=())
+
+
+def test_l003_fires_on_cycle_and_reentrancy():
+    found = [f for f in run_fixture("l003_bad.py", _l003_cfg())
+             if f.rule == "L003"]
+    msgs = " | ".join(f.message for f in found)
+    assert "cycle" in msgs and "re-acquired" in msgs
+
+
+def test_l003_quiet_on_consistent_order():
+    assert run_fixture("l003_good.py", _l003_cfg()) == []
+
+
+def test_waiver_comments_silence_findings():
+    all_findings = run_paths([FIXTURES / "waiver.py"], LintConfig(), ROOT)
+    assert all(f.waived for f in all_findings)
+    assert len(all_findings) == 2  # the violations are still detected
+
+
+# ---------------------------------------------------------------- U-rules --
+
+
+def _write(path, text):
+    path.parent.mkdir(parents=True, exist_ok=True)
+    path.write_text(text)
+
+
+def test_module_liveness_rules(tmp_path):
+    src = tmp_path / "src" / "repro"
+    _write(src / "live" / "__init__.py", "from repro.live import used\n")
+    _write(src / "live" / "used.py",
+           "from repro.scaffolding import old\n")
+    _write(src / "live" / "orphan.py", "X = 1\n")
+    _write(src / "scaffolding" / "__init__.py", "")
+    _write(src / "scaffolding" / "old.py", "Y = 2\n")
+    cfg = LintConfig(roots=("repro.live",),
+                     quarantine=("repro.scaffolding",))
+    findings = modgraph.check(tmp_path, cfg)
+    by_rule = {f.rule: f for f in findings}
+    assert set(by_rule) == {"U001", "U002"}
+    assert by_rule["U001"].path.endswith("orphan.py")
+    assert by_rule["U002"].path.endswith("used.py")
+    assert "repro.scaffolding.old" in by_rule["U002"].message
+
+
+def test_module_liveness_clean_partition(tmp_path):
+    src = tmp_path / "src" / "repro"
+    _write(src / "app.py", "from repro import lib\n")
+    _write(src / "lib.py", "Z = 3\n")
+    cfg = LintConfig(roots=("repro.app",), quarantine=())
+    assert modgraph.check(tmp_path, cfg) == []
+
+
+# ----------------------------------------------------------------- config --
+
+
+def test_toml_subset_parser_handles_the_table_shapes():
+    text = """
+# comment with a ] bracket
+[tool.trusslint]
+src_root = "src"  # trailing comment
+[tool.trusslint.locks]
+lock_attrs = ["_lock",
+              "_work"]
+lock_aliases = [["_lock", "_work"]]
+[tool.trusslint.retrace]
+engine_flush = 5
+strictness = true
+"""
+    data = parse_toml_subset(text)
+    table = data["tool"]["trusslint"]
+    assert table["src_root"] == "src"
+    assert table["locks"]["lock_attrs"] == ["_lock", "_work"]
+    assert table["locks"]["lock_aliases"] == [["_lock", "_work"]]
+    assert table["retrace"] == {"engine_flush": 5, "strictness": True}
+
+
+def test_repo_config_loads_and_matches_tomllib_when_available():
+    cfg = load_config(ROOT)
+    assert "_lock" in cfg.lock_attrs
+    assert cfg.roots and cfg.quarantine and cfg.retrace_budgets
+    try:
+        import tomllib
+    except ModuleNotFoundError:
+        tomllib = None
+    text = (ROOT / "pyproject.toml").read_text()
+    mine = parse_toml_subset(text)["tool"]["trusslint"]
+    if tomllib is not None:
+        assert mine == tomllib.loads(text)["tool"]["trusslint"]
+    assert mine["modules"]["quarantine"]
+
+
+# ------------------------------------------------------------- self-check --
+
+
+def test_trusslint_runs_clean_on_the_repo():
+    cfg = load_config(ROOT)
+    active = [f for f in run_paths(["src"], cfg, ROOT) if not f.waived]
+    assert active == [], "\n".join(f.render() for f in active)
+
+
+# ---------------------------------------------------------- retrace guard --
+
+
+class _FakeJit:
+    """Stands in for a jit callable: exposes only _cache_size()."""
+
+    def __init__(self):
+        self.entries = 0
+
+    def _cache_size(self):
+        return self.entries
+
+
+def test_retrace_guard_budgets():
+    fn = _FakeJit()
+    guard = RetraceGuard(budgets={"site": 2})
+    guard.track("site", fn)
+    with guard:
+        fn.entries += 3
+    assert guard.compiles("site") == 3
+    assert not guard.ok()
+    assert guard.violations() == ["site"]
+    with guard:  # re-entry re-snapshots
+        fn.entries += 1
+    assert guard.compiles("site") == 1
+    assert guard.ok()
+
+
+def test_retrace_guard_unmeasurable_site_passes():
+    guard = RetraceGuard(budgets={"x": 0})
+    guard.track("x", object())  # no _cache_size hook on this jax
+    with guard:
+        pass
+    report = guard.report()
+    assert report["x"]["measured"] is False and report["x"]["ok"]
+    assert guard.ok()

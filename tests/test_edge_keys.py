@@ -1,0 +1,70 @@
+"""edge_keys int64-overflow hardening (ISSUE 8 satellite, trusslint J003).
+
+All tests are synthetic: they exercise the packing arithmetic at the
+n ≈ 2^31 boundary with a handful of edges, never allocating a graph.
+"""
+
+import numpy as np
+import pytest
+
+from repro.graphs.csr import MAX_PACK_N, edge_keys, edges_from_arrays
+
+
+def test_packing_is_exact_at_n_2_31_with_int32_inputs():
+    # int32 inputs at n = 2^31: the multiply must widen *before* it
+    # runs, otherwise lo * n wraps at 2^31 and keys collide
+    n = 1 << 31
+    lo = np.array([0, 1, (1 << 31) - 2], dtype=np.int32)
+    hi = np.array([1, 2, (1 << 31) - 1], dtype=np.int32)
+    keys = edge_keys(lo, hi, n)
+    assert keys.dtype == np.int64
+    expected = [int(a) * n + int(b) for a, b in zip(lo, hi)]
+    assert keys.tolist() == expected
+    # round trip: unpacking recovers the endpoints exactly
+    assert (keys // n).tolist() == lo.tolist()
+    assert (keys % n).tolist() == hi.tolist()
+
+
+def test_packing_is_exact_at_the_max_pack_boundary():
+    n = MAX_PACK_N  # the largest legal pack space: n*n - 1 < 2**63
+    lo = np.array([n - 2], dtype=np.int64)
+    hi = np.array([n - 1], dtype=np.int64)
+    key = int(edge_keys(lo, hi, n)[0])
+    assert key == (n - 2) * n + (n - 1)  # python-int oracle, no wrap
+    assert key > 0
+    assert (n - 1) * n + (n - 1) <= np.iinfo(np.int64).max
+
+
+def test_pack_space_beyond_the_bound_raises():
+    lo = np.array([0], dtype=np.int64)
+    hi = np.array([1], dtype=np.int64)
+    with pytest.raises(ValueError, match="overflows int64"):
+        edge_keys(lo, hi, MAX_PACK_N + 1)
+
+
+def test_ids_outside_the_pack_space_raise():
+    n = 100
+    with pytest.raises(ValueError, match="vertex ids must lie in"):
+        edge_keys(np.array([0]), np.array([100]), n)  # hi == n
+    with pytest.raises(ValueError, match="vertex ids must lie in"):
+        edge_keys(np.array([-1]), np.array([5]), n)
+
+
+def test_empty_input_passes_any_bound():
+    empty = np.zeros(0, dtype=np.int64)
+    assert edge_keys(empty, empty, MAX_PACK_N).shape == (0,)
+
+
+def test_edges_from_arrays_rejects_overflowing_id_space():
+    # one edge whose endpoint pushes n past MAX_PACK_N: the packing
+    # used to wrap silently here (raw lo * n + hi); it must raise now
+    src = np.array([0], dtype=np.int64)
+    dst = np.array([MAX_PACK_N], dtype=np.int64)
+    with pytest.raises(ValueError, match="overflows int64"):
+        edges_from_arrays(src, dst)
+
+
+def test_edges_from_arrays_still_canonicalizes_small_inputs():
+    E = edges_from_arrays(np.array([2, 1, 2, 3]), np.array([1, 2, 1, 3]))
+    # dedup + u < v canonical form + self-loop (3,3) dropped
+    assert E.tolist() == [[1, 2]]
