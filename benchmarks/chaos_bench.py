@@ -1,0 +1,345 @@
+"""Chaos benchmark: availability/goodput/latency under injected faults.
+
+DESIGN.md §15's measurement: mixed query/update/communities/open traffic
+replays through the async :class:`~repro.serve.scheduler.TrussScheduler`
+while a seeded :class:`~repro.testing.chaos.FaultPlan` injects transient
+raise-faults at every dispatch site (engine flush, region re-peel,
+support build, hierarchy flood) at a swept rate — plus state corruption
+at the region site at a quarter of that rate, exercising the
+quarantine-and-rebuild heal path.  Per fault rate the bench reports
+availability, goodput, retry/heal/ladder counters, and p50/p99 latency.
+
+Every row is **correctness-gated**: the same schedule replays through a
+fault-free synchronous ``TrussEngine`` applying exactly the updates that
+committed async (failed updates never commit — batch-scoped commit — so
+the masked replay reconstructs the same state), and every *completed*
+async result must be bitwise-equal.  Under chaos a request may fail with
+a typed error; it must never succeed with a wrong answer.  The CI gates:
+
+* zero incorrect completed results at every fault rate, and
+* at injected rates <= 10 %, availability >= 99 % for requests that were
+  not themselves killed by an injected fault (collateral failures —
+  quarantine fallout, shed — count against this; typed
+  ``InjectedFault`` exhaustion does not).
+
+Output: ``BENCH_chaos.json`` rows per fault-rate point.
+
+  PYTHONPATH=src python -m benchmarks.chaos_bench [--smoke] [--out F]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+
+import numpy as np
+
+from benchmarks.serve_bench import build_fleet
+
+#: gate thresholds (ISSUE 9 acceptance criteria)
+GATE_RATE = 0.10
+GATE_AVAILABILITY = 0.99
+COMMUNITY_K = 3
+
+
+def make_workload(graphs, extras, n_requests: int, seed: int,
+                  mix=(0.60, 0.15, 0.10, 0.075, 0.075)):
+    """Deterministic query/update/submit/communities/open schedule.
+
+    Same shape as ``serve_bench.make_workload`` plus submit and
+    communities fractions, so every dispatch site — flush (submits),
+    region (updates), support (opens), hierarchy (communities) — sees
+    chaos traffic.  Presence tracking keeps removals valid in the
+    fault-free replay; when an async update fails its removal simply
+    never commits, and the masked sync replay skips it identically.
+    """
+    from repro.graphs.gen import erdos_renyi_edges
+
+    rng = np.random.default_rng(seed)
+    present = [set() for _ in graphs]
+    ops, n_open = [], 0
+    for _ in range(n_requests):
+        r = rng.random()
+        hid = int(rng.integers(0, len(graphs)))
+        if r < mix[0]:
+            rows_ = graphs[hid][
+                rng.integers(0, graphs[hid].shape[0], size=8)]
+            ops.append(("query", hid, rows_))
+        elif r < sum(mix[:2]):
+            picks = rng.choice(len(extras[hid]),
+                               size=min(4, len(extras[hid])), replace=False)
+            add = [extras[hid][j] for j in picks
+                   if extras[hid][j] not in present[hid]]
+            rem = [extras[hid][j] for j in picks
+                   if extras[hid][j] in present[hid]]
+            present[hid] |= set(add)
+            present[hid] -= set(rem)
+            ops.append(("update", hid,
+                        np.array(add or np.zeros((0, 2)), np.int64),
+                        np.array(rem or np.zeros((0, 2)), np.int64)))
+        elif r < sum(mix[:3]):
+            ops.append(("submit", erdos_renyi_edges(
+                64, 8.0, seed=seed + 9000 + n_open)))
+            n_open += 1
+        elif r < sum(mix[:4]):
+            ops.append(("communities", hid, COMMUNITY_K))
+        else:
+            ops.append(("open", erdos_renyi_edges(
+                64, 8.0, seed=seed + 5000 + n_open)))
+            n_open += 1
+    return ops
+
+
+def build_plan(rate: float, seed: int):
+    """Raise-faults at ``rate`` on every site + region corruption at rate/4."""
+    from repro.testing.chaos import DISPATCH_SITES, FaultPlan
+
+    plan = FaultPlan.uniform(rate, sites=DISPATCH_SITES, seed=seed)
+    if rate > 0:
+        plan.add("region", mode="corrupt", rate=rate / 4.0)
+    return plan
+
+
+def replay_chaos(sched, graphs, ops, plan):
+    """Drive ``ops`` through the scheduler under ``plan``; classify outcomes.
+
+    The handle fleet opens before the plan activates (a fleet that failed
+    to open measures nothing).  Each request outcome is one of ``ok``
+    (result delivered), ``injected`` (typed ``InjectedFault`` after
+    retries exhausted — the fault killed this request), or ``failed``
+    (any other typed error: collateral).
+    """
+    from repro.testing.chaos import InjectedFault
+
+    handles = [sched.open_async(g, local_frac=1.0).result(timeout=600)
+               for g in graphs]
+    lat, futs = [], []
+    t_start = time.perf_counter()
+    with plan:
+        for i, op in enumerate(ops):
+            kind = op[0]
+            t_enq = time.perf_counter()
+            if kind == "query":
+                f = sched.query_async(handles[op[1]], op[2])
+            elif kind == "update":
+                f = sched.update_async(handles[op[1]], add_edges=op[2],
+                                       remove_edges=op[3])
+            elif kind == "submit":
+                f = sched.submit_async(op[1])
+            elif kind == "communities":
+                f = sched.communities_async(handles[op[1]], op[2])
+            else:
+                f = sched.open_async(op[1], local_frac=1.0)
+            f.add_done_callback(
+                lambda f, i=i, k=kind, t=t_enq:
+                lat.append((i, k, time.perf_counter() - t)))
+            futs.append((i, kind, f))
+        outcomes = {}
+        for i, _, f in futs:
+            try:
+                outcomes[i] = ("ok", f.result(timeout=600))
+            except InjectedFault as ex:
+                outcomes[i] = ("injected", ex)
+            except Exception as ex:  # noqa: BLE001 — typed errors classified
+                outcomes[i] = ("failed", ex)
+    duration = time.perf_counter() - t_start
+    return handles, outcomes, lat, duration
+
+
+def replay_sync_masked(engine, graphs, ops, outcomes):
+    """Fault-free oracle applying exactly the ops that completed async.
+
+    Failed async updates never committed (the repair is batch-scoped), so
+    skipping them reconstructs the identical per-handle edge history the
+    async run ended with; queries then observe the same prefix of
+    committed updates FIFO order promises.
+    """
+    handles = [engine.open(g, local_frac=1.0) for g in graphs]
+    results = {}
+    for i, op in enumerate(ops):
+        if outcomes[i][0] != "ok":
+            continue
+        kind = op[0]
+        if kind == "query":
+            results[i] = handles[op[1]].query(op[2])
+        elif kind == "update":
+            results[i] = engine.update(handles[op[1]], add_edges=op[2],
+                                       remove_edges=op[3])
+        elif kind == "submit":
+            results[i] = engine.result(engine.submit(op[1]))
+        elif kind == "communities":
+            results[i] = handles[op[1]].communities(op[2])
+        else:
+            results[i] = engine.open(op[1], local_frac=1.0)
+    return handles, results
+
+
+def check_parity(ops, a_handles, outcomes, s_handles, s_results) -> bool:
+    """Every completed async result bitwise-equal to the fault-free oracle."""
+    ok = True
+    for i, op in enumerate(ops):
+        if outcomes[i][0] != "ok":
+            continue
+        a = outcomes[i][1]
+        if op[0] in ("query", "submit"):
+            ok = ok and np.array_equal(a, s_results[i])
+        elif op[0] == "communities":
+            ok = ok and len(a) == len(s_results[i]) and all(
+                np.array_equal(x, y) for x, y in zip(a, s_results[i]))
+        elif op[0] == "open":
+            ok = ok and np.array_equal(a.trussness, s_results[i].trussness)
+    for ha, hs in zip(a_handles, s_handles):
+        ok = ok and np.array_equal(ha.edges, hs.edges)
+        ok = ok and np.array_equal(ha.trussness, hs.trussness)
+    return bool(ok)
+
+
+def _percentiles(lat, kind=None):
+    ms = [1e3 * s for _, k, s in lat if kind is None or k == kind]
+    if not ms:
+        return None
+    return {"n": len(ms),
+            "p50_ms": float(np.percentile(ms, 50)),
+            "p99_ms": float(np.percentile(ms, 99)),
+            "mean_ms": float(np.mean(ms)),
+            "max_ms": float(np.max(ms))}
+
+
+def run(rates=(0.0, 0.05, 0.10, 0.20), n_requests: int = 240,
+        n_handles: int = 3, n_extras: int = 24, seed: int = 0,
+        out_path: str = "BENCH_chaos.json") -> int:
+    """One row per injected fault rate; correctness- and availability-gated."""
+    from repro.serve.resilience import RetryPolicy
+    from repro.serve.scheduler import TrussScheduler
+    from repro.serve.truss_engine import TrussEngine
+
+    graphs, extras = build_fleet(n_handles, n_extras, seed)
+    report = {"bench": "chaos-serving",
+              "mix": {"query": 0.60, "update": 0.15, "submit": 0.10,
+                      "communities": 0.075, "open": 0.075},
+              "n_handles": n_handles, "m_per_graph": int(graphs[0].shape[0]),
+              "gate": {"max_rate": GATE_RATE,
+                       "availability": GATE_AVAILABILITY},
+              "rows": [], "ok": True}
+
+    # warmup: pay open/update/query/communities compiles outside the sweep
+    warm = TrussEngine()
+    wh = warm.open(graphs[0], local_frac=1.0)
+    warm.update(wh, add_edges=np.array([extras[0][0]], np.int64))
+    wh.query(graphs[0][:4])
+    wh.communities(COMMUNITY_K)
+
+    for rate in rates:
+        ops = make_workload(graphs, extras, n_requests, seed)
+        sched = TrussScheduler(
+            max_batch=16, max_delay_ms=2.0,
+            max_queue=1 << 20, max_inflight=1 << 20,
+            retry=RetryPolicy(max_retries=2, base_delay_s=0.001,
+                              max_delay_s=0.004))
+        plan = build_plan(rate, seed + 99)
+        a_handles, outcomes, lat, duration = replay_chaos(
+            sched, graphs, ops, plan)
+        sched_stats = sched.stats()
+        sched.close()
+
+        s_engine = TrussEngine()
+        s_handles, s_results = replay_sync_masked(
+            s_engine, graphs, ops, outcomes)
+        parity = check_parity(ops, a_handles, outcomes,
+                              s_handles, s_results)
+
+        n_ok = sum(1 for v in outcomes.values() if v[0] == "ok")
+        n_injected = sum(1 for v in outcomes.values() if v[0] == "injected")
+        n_failed = sum(1 for v in outcomes.values() if v[0] == "failed")
+        non_injected = max(1, n_requests - n_injected)
+        availability = n_ok / n_requests
+        availability_non_injected = n_ok / non_injected
+
+        row = {
+            "fault_rate": rate,
+            "n_requests": n_requests,
+            "completed": n_ok,
+            "failed_injected": n_injected,
+            "failed_collateral": n_failed,
+            "availability": availability,
+            "availability_non_injected": availability_non_injected,
+            "goodput_qps": n_ok / duration,
+            "duration_seconds": duration,
+            "fault_point_calls": plan.stats()["calls"],
+            "injected": plan.stats()["injected"],
+            "retries": sched_stats["counters"]["retries"],
+            "heals": sched_stats["counters"]["heals"],
+            "heal_failures": sched_stats["counters"]["heal_failures"],
+            "resilience": sched_stats["resilience"],
+            "latency": {k: _percentiles(lat, None if k == "all" else k)
+                        for k in ("all", "query", "update", "submit",
+                                  "communities", "open")},
+            "parity": parity,
+        }
+        gated = rate <= GATE_RATE
+        row["gate_ok"] = bool(parity and (
+            not gated
+            or availability_non_injected >= GATE_AVAILABILITY))
+        report["ok"] = report["ok"] and row["gate_ok"]
+        report["rows"].append(row)
+
+    with open(out_path, "w") as f:
+        json.dump(report, f, indent=2, sort_keys=True)
+    print(json.dumps(report, indent=2, sort_keys=True))
+    if not report["ok"]:
+        print("CHAOS BENCH FAILED: parity or availability gate",
+              file=sys.stderr)
+        return 1
+    return 0
+
+
+def rows(quick: bool = True) -> list[str]:
+    """benchmarks/run.py adapter: CSV rows from a quick in-memory run."""
+    import io
+    from contextlib import redirect_stdout
+
+    from benchmarks.common import row
+
+    buf = io.StringIO()
+    path = "BENCH_chaos.json"
+    with redirect_stdout(buf):
+        code = run(rates=(0.10,) if quick else (0.0, 0.10),
+                   n_requests=120 if quick else 240, n_handles=2,
+                   out_path=path)
+    with open(path) as f:
+        rep = json.load(f)
+    out = []
+    for r in rep["rows"]:
+        q = r["latency"]["all"] or {}
+        out.append(row(
+            f"chaos/rate-{r['fault_rate']:.2f}",
+            q.get("mean_ms", 0.0) / 1e3,
+            f"avail={r['availability']:.3f}"
+            f";goodput={r['goodput_qps']:.0f}qps"
+            f";retries={r['retries']};heals={r['heals']}"
+            f";parity={int(r['parity'])};exit={code}"))
+    return out
+
+
+def main() -> None:
+    """CLI entry: ``--smoke`` is the CI gate at the 10 % fault rate."""
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="one 10%% fault-rate point, quick gate (CI)")
+    ap.add_argument("--out", default="BENCH_chaos.json")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--rates", type=float, nargs="*", default=None,
+                    help="override the fault-rate sweep")
+    args = ap.parse_args()
+    if args.smoke:
+        raise SystemExit(run(rates=tuple(args.rates or (0.10,)),
+                             n_requests=120, n_handles=2, seed=args.seed,
+                             out_path=args.out))
+    raise SystemExit(run(rates=tuple(args.rates or (0.0, 0.05, 0.10, 0.20)),
+                         seed=args.seed, out_path=args.out))
+
+
+if __name__ == "__main__":
+    main()

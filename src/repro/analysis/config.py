@@ -142,6 +142,10 @@ class LintConfig:
                               "pop", "popleft", "extend", "remove",
                               "discard", "update", "setdefault", "insert")
 
+    # -- fault routing (R-rules) ----------------------------------------
+    fault_paths: tuple = ("src/repro/serve/*", "src/repro/core/truss_inc.py")
+    fault_sinks: tuple = ("_finish", "set_exception")
+
     # -- module liveness (U-rules) --------------------------------------
     roots: tuple = ()
     quarantine: tuple = ()
@@ -190,6 +194,7 @@ def load_config(repo_root: pathlib.Path) -> LintConfig:
     _apply(cfg, table.get("locks", {}),
            ("lock_attrs", "lock_aliases", "blocking_always",
             "blocking_engine", "engine_receiver_hints", "mutator_methods"))
+    _apply(cfg, table.get("faults", {}), ("fault_paths", "fault_sinks"))
     _apply(cfg, table.get("modules", {}), ("roots", "quarantine"))
     retrace = table.get("retrace", {})
     if retrace:

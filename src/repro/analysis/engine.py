@@ -47,6 +47,8 @@ RULE_DOCS = {
     "L002": "no blocking call (device dispatch, join, result) while"
             " holding a lock",
     "L003": "lock acquisition order must be acyclic and non-reentrant",
+    "R001": "broad except handlers on the serving path must re-raise or"
+            " route the error into a typed sink (_finish/set_exception)",
     "U001": "every module is reachable from a configured live root or"
             " explicitly quarantined",
     "U002": "live code must not import quarantined scaffolding",
@@ -169,7 +171,7 @@ def collect_files(paths, cfg, repo_root: pathlib.Path) -> list:
 
 def run_paths(paths, cfg, repo_root) -> list:
     """Run every rule family over ``paths``; return ordered findings."""
-    from repro.analysis import jax_rules, lock_rules, modgraph
+    from repro.analysis import fault_rules, jax_rules, lock_rules, modgraph
 
     repo_root = pathlib.Path(repo_root)
     findings: list = []
@@ -177,7 +179,8 @@ def run_paths(paths, cfg, repo_root) -> list:
     scanned_src = False
     for path, rel in collect_files(paths, cfg, repo_root):
         ctx = FileContext(path, rel)
-        raw = jax_rules.check_file(ctx, cfg) + locks.check_file(ctx)
+        raw = jax_rules.check_file(ctx, cfg) + locks.check_file(ctx) \
+            + fault_rules.check_file(ctx, cfg)
         findings.extend(
             dataclasses.replace(f, waived=ctx.waived(f.rule, f.line))
             for f in raw)

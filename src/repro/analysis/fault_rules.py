@@ -1,0 +1,81 @@
+"""R-rules: fault-routing discipline for the serving path (DESIGN.md §15).
+
+The resilience contract is that *every* failure on the serving path is
+typed and routed — to a request future (``_finish(req, exc=e)`` /
+``future.set_exception(e)``) or re-raised for the retry/heal machinery to
+classify.  A bare ``except Exception:`` that swallows the error instead
+silently converts a fault into a wrong or missing answer, which is
+exactly what the chaos harness exists to rule out.
+
+R001 therefore flags broad exception handlers (``except Exception`` /
+``except BaseException``, bare ``except:``) in the configured fault-path
+files (``[tool.trusslint.faults] paths`` — by default the serving layer
+and the incremental core) unless the handler body visibly routes the
+error: it re-raises (any ``raise``) or calls one of the configured sink
+callables (``[tool.trusslint.faults] sinks`` — ``_finish`` and
+``set_exception`` by default).  Handlers for narrow exception types are
+out of scope: catching a specific error is a decision, catching
+everything is a leak.
+"""
+
+from __future__ import annotations
+
+import ast
+import fnmatch
+
+from repro.analysis.engine import Finding
+
+_BROAD = ("Exception", "BaseException")
+
+
+def _is_broad(handler: ast.ExceptHandler) -> bool:
+    """True for ``except:``, ``except Exception``, ``except BaseException``.
+
+    Tuple handlers count as broad when any member is a broad name, since
+    the tuple catches at least that much.
+    """
+    t = handler.type
+    if t is None:
+        return True
+    members = t.elts if isinstance(t, ast.Tuple) else [t]
+    for m in members:
+        name = m.id if isinstance(m, ast.Name) else \
+            m.attr if isinstance(m, ast.Attribute) else None
+        if name in _BROAD:
+            return True
+    return False
+
+
+def _routes(handler: ast.ExceptHandler, sinks) -> bool:
+    """True if the handler body re-raises or calls a fault sink."""
+    for node in ast.walk(handler):
+        if isinstance(node, ast.Raise):
+            return True
+        if isinstance(node, ast.Call):
+            f = node.func
+            name = f.id if isinstance(f, ast.Name) else \
+                f.attr if isinstance(f, ast.Attribute) else None
+            if name in sinks:
+                return True
+    return False
+
+
+def check_file(ctx, cfg) -> list:
+    """Run R001 over one parsed file; returns raw findings."""
+    if not any(fnmatch.fnmatch(ctx.rel, pat) for pat in cfg.fault_paths):
+        return []
+    findings = []
+    for node in ast.walk(ctx.tree):
+        if not isinstance(node, ast.ExceptHandler):
+            continue
+        if not _is_broad(node) or _routes(node, cfg.fault_sinks):
+            continue
+        caught = "bare except" if node.type is None else \
+            f"except {ast.unparse(node.type)}"
+        findings.append(Finding(
+            rule="R001", path=ctx.rel, line=node.lineno,
+            message=f"{caught} swallows the error on the serving path: "
+                    f"re-raise it or route it into a typed sink "
+                    f"({', '.join(cfg.fault_sinks)}) so no fault "
+                    f"disappears silently"))
+    return findings

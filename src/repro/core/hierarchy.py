@@ -46,6 +46,8 @@ import functools
 
 import numpy as np
 
+from repro.testing.chaos import fault_point
+
 #: where per-level labels are computed: jitted label propagation on device
 #: (the serving path) or the independent host union-find (the parity oracle)
 HIER_MODES = ("device", "host")
@@ -314,6 +316,7 @@ class TrussHierarchy:
     def _build_device(self, k: int) -> np.ndarray:
         import jax.numpy as jnp
 
+        fault_point("hierarchy", rung="device")
         labelprop, _ = _labelprop_fns()
         tri_dev, lvl_dev, mp = self._device_tables()
         L = labelprop(tri_dev, lvl_dev, jnp.int32(k),
@@ -324,6 +327,7 @@ class TrussHierarchy:
     def _build_device_batch(self, ks: list[int]) -> None:
         import jax.numpy as jnp
 
+        fault_point("hierarchy", rung="device")
         _, labelprop_all = _labelprop_fns()
         tri_dev, lvl_dev, mp = self._device_tables()
         L0s = np.stack([self._init_labels(k, mp) for k in ks])
@@ -351,6 +355,7 @@ class TrussHierarchy:
         the frontier answers from a fresh single-level union-find instead
         (``build_all`` walks levels coarse-to-fine, paying the shared cost
         exactly once)."""
+        fault_point("hierarchy", rung="host")
         self.stats["host_levels"] += 1
         if self._uf is not None and k > self._uf["k_at"]:
             return host_level_labels(self.m, self.T, self.tri,

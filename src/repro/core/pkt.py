@@ -50,6 +50,7 @@ import jax.numpy as jnp
 from repro.graphs.csr import CSRGraph, edge_keys
 from repro.core import support as support_mod
 from repro.kernels import wedge_common
+from repro.testing.chaos import fault_point
 
 _SENTINEL_S = jnp.int32(1 << 30)
 
@@ -644,6 +645,7 @@ def pkt(g: CSRGraph, *, chunk: int | None = None, mode: str = "chunked",
         interpret = wedge_common.interpret_default()
 
     # ---- support phase -----------------------------------------------------
+    fault_point("support", rung=f"{support_mode}/{table_mode}")
     if table_mode == "device" and support_table is None:
         S0_dev = support_mod._support_device(
             g, mode=support_mode, chunk=chunk, interpret=interpret,

@@ -65,12 +65,25 @@ from repro.core.hierarchy import HIER_MODES, TrussHierarchy
 from repro.core.pkt import (_COMPACT_FRAC, _COMPACT_MIN, PEEL_MODES,
                             align_to_input, peel_live_subset, pkt)
 from repro.kernels import wedge_common
+from repro.testing.chaos import fault_point
 
 #: Insertion repair strategies (DESIGN.md §13): ``"batched"`` repairs the
 #: whole insertion batch against one merged candidate region; ``"sequential"``
 #: applies edges one at a time (the ±1 locality bound) and serves as the
 #: bitwise parity oracle for the batched path.
 INSERT_MODES = ("sequential", "batched")
+
+
+class IntegrityError(RuntimeError):
+    """Maintained incremental state failed a consistency check.
+
+    Raised by the pinned-boundary replay invariant in ``_region_peel``
+    (before any corrupt trussness could be committed) and by
+    :meth:`IncrementalTruss.check_invariants` (after commit, on a sampled
+    edge set).  The serving layer treats it as a self-healing trigger:
+    quarantine the handle and rebuild from the retained CSR
+    (:meth:`IncrementalTruss.rebuild`) rather than retry (DESIGN.md §15).
+    """
 
 
 @dataclasses.dataclass(frozen=True)
@@ -940,6 +953,9 @@ class IncrementalTruss:
         totals["boundary"] += int(boundary.size)
 
         L = np.union1d(A, boundary)
+        chaos = fault_point(
+            "region",
+            rung="host" if L.shape[0] <= self.host_peel_max else self.mode)
         if L.shape[0] <= self.host_peel_max:
             # compact host path: local ids preserve the global id order, so
             # the tie-break picks the same winners
@@ -965,11 +981,18 @@ class IncrementalTruss:
                 interpret=self.interpret, table_mode=self.table_mode,
                 compact_frac=self.compact_frac, compact_min=self.compact_min)
             tau_L = S_fin.astype(np.int64) + 2
+        if chaos == "corrupt" and boundary.size:
+            # injected corruption (testing/chaos.py): bump one pinned slot so
+            # the replay invariant below is guaranteed to trip — exercising
+            # the detect → quarantine → rebuild path without ever letting a
+            # wrong value reach committed state
+            tau_L = tau_L.copy()
+            tau_L[np.searchsorted(L, boundary[0])] += 1
         # replay invariant: pinned edges must die exactly at their schedule.
         # A real raise (not a bare assert, which -O strips): a violation
         # means the re-peel would commit corrupt trussness into the handle.
         if not np.array_equal(tau_L[~in_A[L]], T_fix[boundary]):
-            raise RuntimeError(
+            raise IntegrityError(
                 "incremental re-peel integrity violation: a pinned boundary "
                 "edge left its death level — please report this graph")
         return tau_L[np.searchsorted(L, A)]
@@ -1047,6 +1070,78 @@ class IncrementalTruss:
         T = align_to_input(res.trussness, gr, None, self.n, keys=keys)
         S = align_to_input(res.support, gr, None, self.n, keys=keys)
         self._commit(g, T, S.astype(np.int32), triangle_list(g))
+
+    def check_invariants(self, *, sample: int = 64, seed: int = 0) -> int:
+        """Cheap consistency check over a sampled edge set (DESIGN.md §15).
+
+        Verifies, for a deterministic sample of ``sample`` edges (all edges
+        when ``sample >= m``):
+
+        1. the maintained support ``S[e]`` equals the edge's row count in
+           the maintained triangle list;
+        2. trussness bounds ``2 <= T[e] <= S[e] + 2``;
+        3. the truss h-operator fixpoint ``T[e] == h(T)[e]`` — a necessary
+           condition of a correct decomposition that any single-edge
+           corruption of ``T`` violates at the edge itself or a triangle
+           partner;
+        4. sampled triangle rows are strictly increasing and in-range.
+
+        Cost is one incidence-CSR build (O(|tri|)) plus O(sample) work —
+        orders of magnitude below a re-peel — so the scheduler runs it
+        after every repair.  It is *sampled*, not a proof: ``verify()``
+        remains the full oracle.
+
+        Returns:
+            The number of edges checked.
+
+        Raises:
+            IntegrityError: any check fails (the handle should be healed
+                via :meth:`rebuild`).
+        """
+        m = self.g.m
+        if m == 0:
+            return 0
+        if sample >= m:
+            idx = np.arange(m, dtype=np.int64)
+        else:
+            # deterministic, seed-keyed sample without a bias toward low ids
+            rng = np.random.default_rng(seed)
+            idx = np.unique(rng.choice(m, size=sample, replace=False))
+        inc = _Incidence(self.tri, m)
+        cnt = inc.off[idx + 1] - inc.off[idx]
+        if not np.array_equal(cnt, self.S[idx].astype(np.int64)):
+            raise IntegrityError(
+                "invariant violation: maintained support disagrees with the "
+                "triangle list on the sampled edges")
+        if (self.T[idx] < 2).any() or (self.T[idx] > self.S[idx] + 2).any():
+            raise IntegrityError(
+                "invariant violation: trussness outside [2, support + 2] on "
+                "the sampled edges")
+        if not np.array_equal(_h_values(inc, self.T, idx), self.T[idx]):
+            raise IntegrityError(
+                "invariant violation: trussness is not an h-operator "
+                "fixpoint on the sampled edges")
+        if self.tri.size:
+            rows = self.tri[inc.rows_of(idx)] if cnt.sum() else \
+                np.zeros((0, 3), np.int64)
+            if rows.size and not (
+                    (rows[:, 0] < rows[:, 1]).all()
+                    and (rows[:, 1] < rows[:, 2]).all()
+                    and rows.min() >= 0 and rows.max() < m):
+                raise IntegrityError(
+                    "invariant violation: malformed triangle rows incident "
+                    "to the sampled edges")
+        return int(idx.shape[0])
+
+    def rebuild(self) -> None:
+        """Self-healing hook: rediscover all state from the retained CSR.
+
+        Discards trussness, support, triangle list, and the community-index
+        cache, and recomputes them with a from-scratch ``pkt`` over the
+        current edge list — the recovery action for integrity violations
+        (DESIGN.md §15).  The edge set itself is preserved exactly.
+        """
+        self._full_rebuild(self.edges)
 
     def verify(self) -> bool:
         """Debug helper: does the maintained state match a from-scratch PKT?"""

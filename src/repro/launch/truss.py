@@ -31,6 +31,16 @@ engine replay of the same schedule:
 
   PYTHONPATH=src python -m repro.launch.truss --graph rmat-small \
       --serve 200 --qps 200 [--max-batch 16] [--max-delay-ms 2] [--verify]
+
+Chaos serving (DESIGN.md §15): same replay with deterministic faults
+injected at every dispatch site at ``--fault-rate`` and optional
+per-request ``--deadline-ms`` budgets; failures surface as typed errors,
+the availability and resilience counters (retries, ladder demotions,
+heals) are reported, and ``--verify`` masks failed requests before the
+synchronous parity replay:
+
+  PYTHONPATH=src python -m repro.launch.truss --graph rmat-small \
+      --serve 200 --qps 200 --fault-rate 0.1 [--deadline-ms 250] [--verify]
 """
 
 from __future__ import annotations
@@ -163,7 +173,14 @@ def run_serve(args) -> None:
     small fresh graphs.  Prints per-kind latency and the scheduler's stage
     breakdown; ``--verify`` replays the same schedule through a synchronous
     engine and checks every result bitwise.
+
+    With ``--fault-rate`` a seeded ``FaultPlan`` injects dispatch faults
+    during the replay (DESIGN.md §15): completed requests stay bitwise
+    parity-checked, failed ones are masked from the sync replay (their
+    updates never committed — commit is batch-scoped).
     """
+    import contextlib
+
     from repro.graphs.gen import erdos_renyi_edges
     from repro.serve.scheduler import TrussScheduler
 
@@ -185,6 +202,7 @@ def run_serve(args) -> None:
         max_batch=args.max_batch, max_delay_ms=args.max_delay_ms,
         max_queue=max(256, 4 * args.serve),
         max_inflight=max(64, 4 * args.serve),
+        deadline_ms=args.deadline_ms,
         mode=args.mode, support_mode=args.support_mode,
         table_mode=args.table_mode, hier_mode=args.hier_mode,
         insert_mode=args.insert_mode,
@@ -193,7 +211,12 @@ def run_serve(args) -> None:
     h = sched.open_async(E, local_frac=args.local_frac).result()
     print(f"graph={args.graph} n={n} m={h.m} open "
           f"{time.perf_counter() - t0:.3f}s qps={args.qps} "
-          f"mix=90/9/1 query/update/open")
+          f"mix=90/9/1 query/update/open fault_rate={args.fault_rate}")
+
+    plan = None
+    if args.fault_rate > 0.0:
+        from repro.testing.chaos import FaultPlan
+        plan = FaultPlan.uniform(args.fault_rate, seed=args.update_seed)
 
     # deterministic schedule (generation tracks pool presence so removals
     # always hit present edges)
@@ -217,23 +240,30 @@ def run_serve(args) -> None:
             n_open += 1
 
     lat, futs = [], []
-    t_start = time.perf_counter()
-    for i, op in enumerate(ops):
-        target = t_start + i / args.qps
-        if target > time.perf_counter():
-            time.sleep(target - time.perf_counter())
-        t_enq = time.perf_counter()
-        if op[0] == "query":
-            f = sched.query_async(h, op[1])
-        elif op[0] == "update":
-            f = sched.update_async(h, add_edges=op[1], remove_edges=op[2])
-        else:
-            f = sched.open_async(op[1])
-        f.add_done_callback(lambda f, k=op[0], t=t_enq:
-                            lat.append((k, time.perf_counter() - t)))
-        futs.append(f)
-    results = [f.result() for f in futs]
-    duration = time.perf_counter() - t_start
+    with plan if plan is not None else contextlib.nullcontext():
+        t_start = time.perf_counter()
+        for i, op in enumerate(ops):
+            target = t_start + i / args.qps
+            if target > time.perf_counter():
+                time.sleep(target - time.perf_counter())
+            t_enq = time.perf_counter()
+            if op[0] == "query":
+                f = sched.query_async(h, op[1])
+            elif op[0] == "update":
+                f = sched.update_async(h, add_edges=op[1],
+                                       remove_edges=op[2])
+            else:
+                f = sched.open_async(op[1])
+            f.add_done_callback(lambda f, k=op[0], t=t_enq:
+                                lat.append((k, time.perf_counter() - t)))
+            futs.append(f)
+        outcomes = []
+        for f in futs:
+            try:
+                outcomes.append(("ok", f.result()))
+            except Exception as e:  # noqa: BLE001 — typed, classified below
+                outcomes.append(("failed", e))
+        duration = time.perf_counter() - t_start
     st = sched.stats()
     sched.close()
 
@@ -255,6 +285,25 @@ def run_serve(args) -> None:
                   f"total={s['seconds'] * 1e3:.1f}ms "
                   f"max={s['max_seconds'] * 1e3:.1f}ms")
 
+    n_ok = sum(1 for s, _ in outcomes if s == "ok")
+    if plan is not None or args.deadline_ms:
+        from repro.serve import DeadlineExceeded
+        from repro.testing.chaos import InjectedFault
+        fails = [e for s, e in outcomes if s == "failed"]
+        n_inj = sum(isinstance(e, InjectedFault) for e in fails)
+        n_dead = sum(isinstance(e, DeadlineExceeded) for e in fails)
+        inj = dict(plan.stats()["injected"]) if plan is not None else {}
+        print(f"chaos: availability {n_ok}/{len(ops)} "
+              f"({n_ok / max(1, len(ops)):.3f}) injected={inj} "
+              f"failed: injected={n_inj} deadline={n_dead} "
+              f"other={len(fails) - n_inj - n_dead}")
+        print(f"  retries={st['counters']['retries']} "
+              f"heals={st['counters']['heals']} "
+              f"deadline_exceeded={st['counters']['deadline_exceeded']} "
+              f"rungs=" +
+              ", ".join(f"{site}:{r['rung']}"
+                        for site, r in st["resilience"].items()))
+
     if args.verify:
         from repro.serve.truss_engine import TrussEngine
 
@@ -264,7 +313,9 @@ def run_serve(args) -> None:
                           chunk=args.chunk or (1 << 12))
         hs = eng.open(E, local_frac=args.local_frac)
         ok = True
-        for op, got in zip(ops, results):
+        for op, (status, got) in zip(ops, outcomes):
+            if status != "ok":
+                continue            # failed ops never committed: masked
             if op[0] == "query":
                 ok = ok and np.array_equal(got, hs.query(op[1]))
             elif op[0] == "update":
@@ -273,7 +324,8 @@ def run_serve(args) -> None:
                 ok = ok and np.array_equal(got.trussness,
                                            eng.open(op[1]).trussness)
         ok = ok and np.array_equal(h.trussness, hs.trussness)
-        print("verify async vs sync engine:", "OK" if ok else "MISMATCH")
+        print("verify async vs sync engine (failed ops masked):",
+              "OK" if ok else "MISMATCH")
         if not ok:
             raise SystemExit(1)
 
@@ -352,6 +404,13 @@ def main(argv=None):
                     help="scheduler latency bound: a non-full bucket "
                          "dispatches once its oldest request waits this "
                          "long (--serve)")
+    ap.add_argument("--fault-rate", type=float, default=0.0,
+                    help="inject seeded dispatch faults at this rate during "
+                         "--serve (DESIGN.md §15); completed requests stay "
+                         "parity-checked under --verify")
+    ap.add_argument("--deadline-ms", type=float, default=None,
+                    help="per-request deadline for --serve; expired "
+                         "requests fail with a typed DeadlineExceeded")
     args = ap.parse_args(argv)
 
     if args.serve:

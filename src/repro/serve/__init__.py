@@ -5,8 +5,11 @@ quarantined out of the live import path (trusslint U002, DESIGN.md
 §14); import it directly if you need it.
 """
 
-from repro.serve.scheduler import Overloaded, TrussScheduler
+from repro.serve.resilience import (DeadlineExceeded, Ladder, RetryPolicy,
+                                    Wedged)
+from repro.serve.scheduler import Cancelled, Overloaded, TrussScheduler
 from repro.serve.truss_engine import TrussEngine, TrussHandle, truss_batched
 
-__all__ = ["Overloaded", "TrussScheduler",
-           "TrussEngine", "TrussHandle", "truss_batched"]
+__all__ = ["Cancelled", "DeadlineExceeded", "Ladder", "Overloaded",
+           "RetryPolicy", "TrussEngine", "TrussHandle", "TrussScheduler",
+           "Wedged", "truss_batched"]

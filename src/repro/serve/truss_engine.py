@@ -61,8 +61,10 @@ from repro.core import support as support_mod
 from repro.core.hierarchy import HIER_MODES
 from repro.core.pkt import (PEEL_MODES, PeelTables, _SENTINEL_S, _peel_loop,
                             align_to_input, chunk_ranges)
+from repro.core.ref import truss_numpy
 from repro.core.truss_inc import INSERT_MODES, IncrementalTruss, UpdateStats
 from repro.kernels import wedge_common
+from repro.testing.chaos import fault_point
 from repro.kernels.wedge_common import next_pow2 as _next_pow2
 from repro.kernels.wedge_common import pad1 as _pad1
 
@@ -281,16 +283,22 @@ class TrussHandle:
         """
         return self._inc.hierarchy(mode=mode)
 
-    def communities(self, k: int) -> list[np.ndarray]:
+    def communities(self, k: int, *,
+                    hier_mode: str | None = None) -> list[np.ndarray]:
         """Every k-truss community as a (c, 2) array of edge endpoints.
 
         Communities are the *triangle-connected* components of the edges
         with trussness >= k (Wang & Cheng), ordered by their representative
         (minimum) edge id; an edge in no surviving triangle forms a
         singleton.  k above the graph's max trussness yields ``[]``.
+        ``hier_mode`` overrides the index builder for this call (the
+        resilience layer's hierarchy-ladder hook, DESIGN.md §15): a
+        non-default mode builds a standalone index, bypassing — and never
+        evicting — the cached one, with bitwise-identical labels.
         """
         E = self._inc.edges
-        return [E[ids] for ids in self._inc.hierarchy().communities(k)]
+        ids_per = self._inc.hierarchy(mode=hier_mode).communities(k)
+        return [E[ids] for ids in ids_per]
 
     def community(self, edge_or_vertex, k: int):
         """The k-truss community around one edge — or all around one vertex.
@@ -677,13 +685,19 @@ class TrussEngine:
                 return p.key
         return None
 
-    def flush(self, only=None) -> None:
+    def flush(self, only=None, *, mode: str | None = None,
+              support_mode: str | None = None) -> None:
         """Decompose pending graphs, bucket by bucket.
 
         Args:
             only: optional iterable of :class:`SizeClass` keys — flush only
                 the pending submissions in those buckets (the scheduler's
                 per-bucket dispatch hook).  ``None`` flushes everything.
+            mode: per-call peel-executor override (``None``: the engine's
+                configured mode) — the resilience layer's degradation-
+                ladder hook (DESIGN.md §15); results are bitwise-identical
+                across modes.
+            support_mode: per-call support-executor override, same contract.
 
         Ordering contract: each bucket's results are materialized (and its
         submissions removed from the pending queue) only after its batched
@@ -696,6 +710,16 @@ class TrussEngine:
         and the promotion's from-scratch decomposition agree bitwise, see
         ``tests/test_truss_engine.py``).
         """
+        eff_mode = self.mode if mode is None else mode
+        eff_support = self.support_mode if support_mode is None \
+            else support_mode
+        if eff_mode not in PEEL_MODES:
+            raise ValueError(
+                f"mode must be one of {PEEL_MODES}, got {eff_mode!r}")
+        if eff_support not in support_mod.SUPPORT_MODES:
+            raise ValueError(
+                f"support_mode must be one of {support_mod.SUPPORT_MODES}, "
+                f"got {eff_support!r}")
         if not self._pending:
             return
         by_key: dict[SizeClass, list[_Pending]] = {}
@@ -709,20 +733,21 @@ class TrussEngine:
         for key, group in by_key.items():
             warm = key in self.stats["buckets"]
             t0 = time.perf_counter()
+            fault_point("flush", rung=eff_mode)
             ops = jax.tree.map(lambda *xs: jnp.stack(xs),
                                *[p.operand for p in group])
             if self.table_mode == "device":
                 S, S0, levels, subs = _batched_truss_dev(
                     ops, m=key.m_pad, chunk=key.chunk,
-                    n_chunks=key.n_chunks, iters=key.iters, mode=self.mode,
-                    support_mode=self.support_mode, sup_chunk=key.sup_chunk,
+                    n_chunks=key.n_chunks, iters=key.iters, mode=eff_mode,
+                    support_mode=eff_support, sup_chunk=key.sup_chunk,
                     sup_n_chunks=key.sup_n_chunks, sup_pad=key.sup_pad,
                     peel_pad=key.peel_pad, interpret=self.interpret)
             else:
                 S, S0, levels, subs = _batched_truss(
                     ops, m=key.m_pad, chunk=key.chunk, n_chunks=key.n_chunks,
-                    iters=key.iters, mode=self.mode,
-                    support_mode=self.support_mode, sup_chunk=key.sup_chunk,
+                    iters=key.iters, mode=eff_mode,
+                    support_mode=eff_support, sup_chunk=key.sup_chunk,
                     sup_n_chunks=key.sup_n_chunks, interpret=self.interpret)
             S = np.asarray(S)
             for i, p in enumerate(group):
@@ -744,6 +769,40 @@ class TrussEngine:
                 self.stats["warm_seconds"] += dt
                 self.stats["warm_graphs"] += len(group)
         self.stats["flushes"] += 1
+
+    def flush_host(self, only=None) -> None:
+        """Host-numpy fallback flush: the degradation ladder's last rung.
+
+        Resolves the selected pending submissions with the pure-numpy
+        reference decomposition (``core.ref.truss_numpy``) — no jax
+        dispatch at all, so it stays available when every device executor
+        is failing.  Results are bitwise-identical to :meth:`flush` (the
+        reference is the repo's parity oracle); the same exception-safety
+        contract applies (a failure leaves tickets pending and retryable).
+
+        Args:
+            only: optional iterable of :class:`SizeClass` keys, as in
+                :meth:`flush`.
+        """
+        if not self._pending:
+            return
+        keys = None if only is None else set(only)
+        group = [p for p in self._pending
+                 if keys is None or p.key in keys]
+        if not group:
+            return
+        t0 = time.perf_counter()
+        fault_point("flush", rung="host")
+        out = [align_to_input(truss_numpy(p.g.El), p.g, None, p.n,
+                              keys=p.in_keys) for p in group]
+        # commit only after every graph decomposed (exception safety)
+        for p, truss in zip(group, out):
+            self._results[p.ticket] = truss
+        done = {p.ticket for p in group}
+        self._pending = [p for p in self._pending if p.ticket not in done]
+        self.stats["flushes"] += 1
+        self.stats["graphs_done"] += len(group)
+        self.stats["graph_seconds"] += time.perf_counter() - t0
 
     @property
     def throughput(self) -> float:

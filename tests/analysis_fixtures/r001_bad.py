@@ -1,0 +1,19 @@
+"""Fixture: broad except handlers that swallow the error (R001 fires)."""
+
+
+class Scheduler:
+    def __init__(self):
+        self.errors = 0
+
+    def dispatch(self, req):
+        try:
+            req.run()
+        except Exception:
+            self.errors += 1        # swallowed: the future never resolves
+
+    def drain(self, reqs):
+        for req in reqs:
+            try:
+                req.run()
+            except (OSError, BaseException):
+                pass                # broad tuple, still swallowed

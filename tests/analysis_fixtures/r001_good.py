@@ -1,0 +1,34 @@
+"""Fixture: broad handlers that route or re-raise the error (R001 clean)."""
+
+
+class Scheduler:
+    def __init__(self):
+        self.errors = 0
+
+    def dispatch(self, req):
+        try:
+            req.run()
+        except Exception as e:
+            self._finish(req, exc=e)            # routed to the future
+
+    def readback(self, req):
+        try:
+            req.run()
+        except Exception as e:
+            req.future.set_exception(e)         # typed sink
+
+    def guard(self, req):
+        try:
+            req.run()
+        except Exception:
+            self.errors += 1
+            raise                               # re-raised for retry/heal
+
+    def narrow(self, req):
+        try:
+            req.run()
+        except ValueError:
+            self.errors += 1     # specific type: a decision, not a leak
+
+    def _finish(self, req, exc=None):
+        req.future.set_exception(exc)

@@ -63,6 +63,28 @@ def test_l003_quiet_on_consistent_order():
     assert run_fixture("l003_good.py", _l003_cfg()) == []
 
 
+def _r001_cfg():
+    # the repo default only scans the serving path; point the rule at the
+    # fixture dir so the corpus exercises it
+    return LintConfig(fault_paths=("*",))
+
+
+def test_r001_fires_on_swallowed_broad_handlers():
+    found = [f for f in run_fixture("r001_bad.py", _r001_cfg())
+             if f.rule == "R001"]
+    assert len(found) == 2          # plain Exception + broad tuple
+    assert all("swallows" in f.message for f in found)
+
+
+def test_r001_quiet_on_routed_handlers():
+    assert run_fixture("r001_good.py", _r001_cfg()) == []
+
+
+def test_r001_scoped_to_configured_fault_paths():
+    # default config: the fixture is outside the serving path, no finding
+    assert run_fixture("r001_bad.py") == []
+
+
 def test_waiver_comments_silence_findings():
     all_findings = run_paths([FIXTURES / "waiver.py"], LintConfig(), ROOT)
     assert all(f.waived for f in all_findings)

@@ -227,7 +227,9 @@ def test_closed_scheduler_rejects_and_close_is_idempotent():
 
 
 def test_close_without_drain_cancels_queued():
-    """close(drain=False) cancels waiting work and releases engine tickets."""
+    """close(drain=False) rejects waiting work with typed Cancelled."""
+    from repro.serve import Cancelled
+
     sched = TrussScheduler(max_batch=64, max_delay_ms=60_000.0)
     e = _er_edges(14, 0.4, 14)
     f1, f2 = sched.submit_async(e), sched.submit_async(e)
@@ -237,7 +239,13 @@ def test_close_without_drain_cancels_queued():
            and time.perf_counter() < deadline):
         time.sleep(0.005)
     sched.close(drain=False)
-    assert f1.cancelled() and f2.cancelled()
+    for f in (f1, f2):
+        assert f.done() and not f.cancelled()   # resolved, typed
+        with pytest.raises(Cancelled):
+            f.result(timeout=0)
+    # the error carries kind and queue position for caller-side retry logic
+    exc = f1.exception(timeout=0)
+    assert exc.kind == "submit" and isinstance(exc.position, int)
     st = sched.stats()
     assert st["counters"]["cancelled"] == 2
     assert st["depth"] == 0
