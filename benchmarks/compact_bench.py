@@ -94,6 +94,7 @@ def _bench_graph(name: str) -> dict:
 def run(graphs=("ba-small", "rmat-small", "er-small", "cliques-small",
                 "ba-medium"),
         out_path: str = "BENCH_compact.json") -> int:
+    """Run the compaction/device-table bench suite and write the snapshot."""
     report = {"bench": "compaction+device-tables", "graphs": [], "ok": True}
     for name in graphs:
         gr = _bench_graph(name)
@@ -110,6 +111,7 @@ def run(graphs=("ba-small", "rmat-small", "er-small", "cliques-small",
 
 
 def main() -> None:
+    """CLI entry: full suite, or --smoke for the CI gate."""
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="small graphs only (the CI gate)")

@@ -43,6 +43,7 @@ def _fleet(n_graphs: int, seed: int = 0) -> list[np.ndarray]:
 
 def run(n_graphs: int = 24, mode: str = "chunked", seed: int = 0,
         support_modes=("jnp", "pallas")) -> list[str]:
+    """CSV rows: serial-vs-batched engine throughput per support mode."""
     graphs = _fleet(n_graphs, seed)
 
     def serial():

@@ -35,6 +35,7 @@ SUPPORT_MODES = support_mod.SUPPORT_MODES
 
 
 def run(suite=None, modes=MODES, support_modes=SUPPORT_MODES) -> list[str]:
+    """CSV rows: per-phase seconds for every executor pair on the suite."""
     on_tpu = jax.default_backend() == "tpu"
     out = []
     for name in suite or GRAPH_SUITE:
@@ -54,7 +55,7 @@ def run(suite=None, modes=MODES, support_modes=SUPPORT_MODES) -> list[str]:
                 lambda: support_mod.compute_support(g, stab, mode=smode))
         S0 = support_mod.compute_support(g, stab)
 
-        tabs, chunk, n_chunks = prepare_peel(ptab, g.m, 1 << 14)
+        tabs, chunk, n_chunks = prepare_peel(ptab, g.m, None)   # tuned/auto chunk policy
         N, Eid = jnp.asarray(g.N), jnp.asarray(g.Eid)
         iters = support_mod._search_iters(g)
 

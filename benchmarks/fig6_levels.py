@@ -80,13 +80,14 @@ def _one_level(N, Eid, S_ext, processed, tabs, *, m, chunk, n_chunks, iters):
 
 
 def run(suite=("rmat-small", "cliques-small", "ba-small")) -> list[str]:
+    """CSV rows: per-level frontier widths + sub-level counts (Fig. 6)."""
     out = []
     for name in suite:
         g, stats = prep_graph(name, order="kco")
         stab = support_mod.build_support_table(g)
         ptab = support_mod.build_peel_table(g)
         S0 = support_mod.compute_support(g, stab)
-        tabs, chunk, n_chunks = prepare_peel(ptab, g.m, 1 << 14)
+        tabs, chunk, n_chunks = prepare_peel(ptab, g.m, None)   # tuned/auto chunk policy
         N, Eid = jnp.asarray(g.N), jnp.asarray(g.Eid)
         iters = support_mod._search_iters(g)
 

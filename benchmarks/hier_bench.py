@@ -1,10 +1,10 @@
 """Community-index build cost, query latency, and device/host label parity.
 
 The serving claim of the hierarchy index (DESIGN.md §11): build once per
-decomposition — the device path floods every level's labels in a single
-vmapped dispatch — then answer community queries many times without
-touching the decomposition pipeline again.  For each graph this bench
-times:
+decomposition — the device path sweeps levels finest-first, warm-starting
+each from the previous and skipping proven-converged levels (§16) — then
+answer community queries many times without touching the decomposition
+pipeline again.  For each graph this bench times:
 
   * ``index_build_*_seconds`` — ``TrussHierarchy.build_all()`` per mode
     (device label propagation warm vs the host union-find oracle),
@@ -40,17 +40,26 @@ def _bench_graph(name: str, queries: int) -> dict:
     h = eng.open(E)
 
     # device build: one timed cold build_all (includes the jit compile),
-    # one warm rebuild on a fresh index (compiled executable reused)
+    # then best-of-3 warm rebuilds on fresh indexes (compiled executable
+    # reused) — matching the best-of convention of the other benches.
     t0 = time.perf_counter()
     hier_dev = h.hierarchy(mode="device").build_all()
     t_dev_cold = time.perf_counter() - t0
-    t0 = time.perf_counter()
-    TrussHierarchy(h._inc.T, h._inc.tri, mode="device").build_all()
-    t_dev_warm = time.perf_counter() - t0
 
-    t0 = time.perf_counter()
-    hier_host = TrussHierarchy(h._inc.T, h._inc.tri, mode="host").build_all()
-    t_host = time.perf_counter() - t0
+    def _best_of(build, reps: int = 3) -> tuple[float, object]:
+        best, built = float("inf"), None
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            built = build()
+            best = min(best, time.perf_counter() - t0)
+        return best, built
+
+    t_dev_warm, _ = _best_of(
+        lambda: TrussHierarchy(h._inc.T, h._inc.tri, mode="device")
+        .build_all())
+    t_host, hier_host = _best_of(
+        lambda: TrussHierarchy(h._inc.T, h._inc.tri, mode="host")
+        .build_all())
 
     parity = all(
         np.array_equal(hier_dev.level_labels(k), hier_host.level_labels(k))
@@ -86,6 +95,7 @@ def _bench_graph(name: str, queries: int) -> dict:
 
 def run(graphs=("ba-small", "er-small", "rmat-small"), queries: int = 64,
         out_path: str = "BENCH_hier.json") -> int:
+    """Run the hierarchy bench suite and write BENCH_hier.json."""
     report = {"bench": "hierarchy-index", "graphs": [], "ok": True}
     for name in graphs:
         g = _bench_graph(name, queries)
@@ -118,6 +128,7 @@ def rows(quick: bool = True) -> list[str]:
 
 
 def main() -> None:
+    """CLI entry: full suite, or --smoke for the CI parity gate."""
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="small graph, few queries (the CI parity gate)")

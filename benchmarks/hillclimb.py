@@ -1,90 +1,162 @@
-"""Hillclimb harness: lower one (arch × shape) cell with config overrides and
-print the three roofline terms + per-kind collective breakdown.
+"""Chunk-policy autotuner: measure, then let ``auto_chunk`` consume the result.
 
-  PYTHONPATH=src python -m benchmarks.hillclimb --arch qwen3_8b \
-      --shape train_4k --mb 4 --set remat=block --set kv_chunk=2048
+``kernels.wedge_common.auto_chunk`` picks the wedge-table chunk size (one
+Pallas grid step / one chunk-skipping unit) whenever the caller passes
+``chunk=None``.  Its recorded-defaults formula (split the table into
+``AUTO_CHUNK_TARGET`` chunks, clamp to the VMEM band) is a heuristic; this
+bench closes the loop by *measuring*: for every benchmark graph it sweeps the
+pow2 chunk candidates over the real executors, scores each candidate by its
+normalized warm decomposition time summed across the executor pairs that
+consume the chunk (chunked/jnp — the serving default; ``--kernels`` adds
+pallas/pallas on TPU hosts, where its timings are real rather than
+interpret-mode emulation), and records the winner per pow2
+peel-table-size bucket.
 
-Used for the §Perf iterations; every run prints a one-line record that goes
-into EXPERIMENTS.md.
+The emitted table (``--emit``, default
+``src/repro/kernels/tuned_chunks.json``) is exactly what ``auto_chunk``
+loads at first use: ``{"format": 1, "buckets": {log2(table bucket): chunk}}``.
+Buckets the sweep never measured fall back to the formula, so a partial
+tuning run is always safe, and deleting the file reverts the whole policy to
+the recorded defaults.
+
+Usage::
+
+    PYTHONPATH=src:. python benchmarks/hillclimb.py            # sweep, print
+    PYTHONPATH=src:. python benchmarks/hillclimb.py --emit     # + write table
+    PYTHONPATH=src:. python benchmarks/hillclimb.py --smoke    # 1 graph, CI
 """
 
-import os
-os.environ.setdefault("XLA_FLAGS",
-                      "--xla_force_host_platform_device_count=512")
+from __future__ import annotations
 
 import argparse
-import dataclasses
+import json
 
-import jax
+from benchmarks.common import prep_graph, timeit
 
-from repro.launch.mesh import make_production_mesh
-from repro.configs import get_config
-from repro.launch.dryrun import cost_cell, lower_cell
-from benchmarks.roofline import PEAK_FLOPS, HBM_BW, ICI_BW, CHIPS, model_flops
+from repro.core import support as support_mod
+from repro.core.pkt import pkt
+from repro.kernels import wedge_common
 
+#: default graph suite: one per size regime the serving fleet actually sees
+GRAPHS = ("ba-small", "er-small", "rmat-small")
 
-def parse_override(s: str):
-    k, _, v = s.partition("=")
-    for cast in (int, float):
-        try:
-            return k, cast(v)
-        except ValueError:
-            pass
-    if v in ("True", "False"):
-        return k, v == "True"
-    if v == "None":
-        return k, None
-    return k, v
+#: executor pairs whose hot loop the chunk size shapes (peel_mode,
+#: support_mode); scores are normalized within each pair so no single
+#: executor's absolute speed dominates the vote.  The default sweeps the
+#: serving path only: on CPU the Pallas pair runs in *interpret mode*,
+#: whose timings reflect the emulator rather than any accelerator, so it
+#: is opt-in (``--kernels`` / ``kernel_pair=True``) for TPU hosts.
+PAIRS = (("chunked", "jnp"),)
+KERNEL_PAIR = ("pallas", "pallas")
 
 
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
-    ap.add_argument("--shape", required=True)
-    ap.add_argument("--mb", type=int, default=1)
-    ap.add_argument("--set", action="append", default=[],
-                    help="cfg overrides key=value")
-    ap.add_argument("--multipod", action="store_true")
-    ap.add_argument("--mesh-shape", default=None,
-                    help="override single-pod mesh, e.g. 64,4 (data,model)")
-    ap.add_argument("--mem", action="store_true",
-                    help="also run the prod (scanned) pass for memory")
-    ap.add_argument("--tag", default="")
+def chunk_candidates(table_size: int) -> list[int]:
+    """Pow2 candidates from the auto-chunk band that fit the table."""
+    pad = wedge_common.next_pow2(max(1, table_size))
+    hi = min(wedge_common.AUTO_CHUNK_MAX, pad)
+    c = wedge_common.AUTO_CHUNK_MIN
+    out = []
+    while c <= hi:
+        out.append(c)
+        c <<= 1
+    return out or [pad]
+
+
+def sweep_graph(name: str, *, reps: int = 3, pairs=PAIRS) -> dict:
+    """Time every (chunk candidate × executor pair) on one graph.
+
+    Returns ``{"name", "bucket", "table_size", "chunks": {chunk: score},
+    "best": chunk}`` where score is the sum over executor pairs of the
+    candidate's warm time divided by the pair's best candidate time (1.0 =
+    won that pair outright).
+    """
+    g, _ = prep_graph(name)
+    ptab = support_mod.build_peel_table(g)
+    pad = wedge_common.next_pow2(max(1, ptab.size))
+    cands = chunk_candidates(ptab.size)
+    times: dict[int, dict[int, float]] = {c: {} for c in cands}
+    for pi, (mode, smode) in enumerate(pairs):
+        for c in cands:
+            times[c][pi] = timeit(
+                lambda c=c, mode=mode, smode=smode: pkt(
+                    g, chunk=c, mode=mode, support_mode=smode),
+                reps=reps)
+    scores: dict[int, float] = {}
+    for pi in range(len(pairs)):
+        best = min(times[c][pi] for c in cands)
+        for c in cands:
+            scores[c] = scores.get(c, 0.0) + times[c][pi] / max(best, 1e-12)
+    best_chunk = min(cands, key=lambda c: scores[c])
+    return {"name": name, "bucket": pad.bit_length() - 1,
+            "table_size": int(ptab.size),
+            "chunks": {str(c): round(scores[c], 4) for c in cands},
+            "best": int(best_chunk)}
+
+
+def tune(graphs=GRAPHS, *, reps: int = 3, kernel_pair: bool = False) -> dict:
+    """Sweep the suite and vote per bucket (lowest summed score wins)."""
+    pairs = PAIRS + ((KERNEL_PAIR,) if kernel_pair else ())
+    sweeps = [sweep_graph(name, reps=reps, pairs=pairs) for name in graphs]
+    votes: dict[int, dict[int, float]] = {}
+    for sw in sweeps:
+        b = votes.setdefault(sw["bucket"], {})
+        for c_str, score in sw["chunks"].items():
+            c = int(c_str)
+            b[c] = b.get(c, 0.0) + score
+    buckets = {str(b): int(min(cands, key=lambda c: cands[c]))
+               for b, cands in votes.items()}
+    return {"format": 1, "source": "benchmarks/hillclimb.py",
+            "graphs": list(graphs), "buckets": buckets, "sweeps": sweeps}
+
+
+def run(graphs=GRAPHS, *, reps: int = 3, kernel_pair: bool = False,
+        emit_path: str | None = None) -> dict:
+    """Bench-harness adapter: tune, optionally emit, return the table doc."""
+    doc = tune(graphs, reps=reps, kernel_pair=kernel_pair)
+    if emit_path:
+        with open(emit_path, "w") as f:
+            json.dump({k: doc[k] for k in
+                       ("format", "source", "graphs", "buckets")}, f,
+                      indent=1, sort_keys=True)
+            f.write("\n")
+        wedge_common.reload_tuned_chunks()
+    return doc
+
+
+def rows(quick: bool = False) -> list[str]:
+    """CSV rows for benchmarks/run.py (no file emission)."""
+    doc = tune(GRAPHS[:1] if quick else GRAPHS, reps=2 if quick else 3)
+    out = []
+    for sw in doc["sweeps"]:
+        out.append(f"hillclimb/{sw['name']},bucket=2^{sw['bucket']},"
+                   f"best_chunk={sw['best']}")
+    return out
+
+
+def main() -> None:
+    """CLI: sweep chunk candidates, print scores, optionally emit the table."""
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--graphs", nargs="*", default=list(GRAPHS))
+    ap.add_argument("--reps", type=int, default=3)
+    ap.add_argument("--smoke", action="store_true",
+                    help="single graph, 2 reps (CI)")
+    ap.add_argument("--kernels", action="store_true",
+                    help="also sweep the pallas/pallas pair (TPU hosts; "
+                         "interpret-mode timings are emulator noise)")
+    ap.add_argument("--emit", nargs="?", const=str(
+        wedge_common.TUNED_CHUNKS_PATH), default=None, metavar="PATH",
+        help="write the tuned table (default: the path auto_chunk loads)")
     args = ap.parse_args()
-
-    if args.mesh_shape:
-        d, m = (int(x) for x in args.mesh_shape.split(","))
-        mesh = jax.make_mesh((d, m), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
-    else:
-        mesh = make_production_mesh(multi_pod=args.multipod)
-    cfg = get_config(args.arch)
-    overrides = dict(parse_override(s) for s in args.set)
-    if overrides:
-        cfg = dataclasses.replace(cfg, **overrides)
-
-    rec = cost_cell(cfg, args.shape, mesh, microbatches=args.mb)
-    compute_s = rec["flops"] / PEAK_FLOPS
-    memory_s = rec["bytes_accessed"] / HBM_BW
-    coll_s = rec["collectives"]["total_bytes"] / ICI_BW
-    bound = max(compute_s, memory_s, coll_s)
-    mf = model_flops(args.arch, args.shape)
-    frac = (mf / CHIPS / PEAK_FLOPS) / max(bound, 1e-12)
-    print(f"[{args.tag}] {args.arch}/{args.shape} mb={args.mb} "
-          f"{' '.join(args.set)}")
-    dominant = max((("compute", compute_s), ("memory", memory_s),
-                    ("collective", coll_s)), key=lambda t: t[1])[0]
-    print(f"  compute {compute_s:.3f}s  memory {memory_s:.3f}s  "
-          f"collective {coll_s:.3f}s  -> dominant {dominant}"
-          f"  roofline_frac {frac:.4f}")
-    for k, v in rec["collectives"].items():
-        if isinstance(v, dict) and v["bytes"]:
-            print(f"    {k:20s} {v['bytes'] / 1e9:9.2f} GB")
-    if args.mem:
-        p = lower_cell(cfg, args.shape, mesh, microbatches=args.mb)
-        print(f"  prod mem: temp {p['temp_bytes'] / 2**30:.2f} GiB + args "
-              f"{p['arg_bytes'] / 2**30:.2f} GiB "
-              f"(fits={p['temp_bytes'] + p['arg_bytes'] <= 15.5 * 2**30})")
+    graphs = args.graphs[:1] if args.smoke else args.graphs
+    reps = 2 if args.smoke else args.reps
+    doc = run(graphs, reps=reps, kernel_pair=args.kernels,
+              emit_path=args.emit)
+    for sw in doc["sweeps"]:
+        print(f"{sw['name']}: table={sw['table_size']} "
+              f"bucket=2^{sw['bucket']} best_chunk={sw['best']} "
+              f"scores={sw['chunks']}")
+    print(f"buckets: {doc['buckets']}"
+          + (f" -> {args.emit}" if args.emit else " (dry run; use --emit)"))
 
 
 if __name__ == "__main__":

@@ -184,6 +184,7 @@ def run(graphs=("ba-small", "er-small", "rmat-small"),
         fracs=(0.001, 0.01), batches: int = 3, seed: int = 0,
         window_graphs=("ba-small",), steps=(4, 16, 64),
         out_path: str = "BENCH_inc.json") -> int:
+    """Run the incremental-update bench suite and write BENCH_inc.json."""
     rng = np.random.default_rng(seed)
     report = {"bench": "incremental-maintenance", "graphs": [],
               "windows": [], "ok": True}
@@ -232,6 +233,7 @@ def rows(quick: bool = True) -> list[str]:
 
 
 def main() -> None:
+    """CLI entry: full suite, or --smoke for the CI gate."""
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="small graph, quick churn sweep (the CI gate)")

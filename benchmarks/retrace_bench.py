@@ -50,6 +50,7 @@ def _wave(eng, classes, seed):
 
 
 def run(out_path: str = "BENCH_retrace.json") -> int:
+    """Replay the workload, count compiles, gate against the budgets."""
     import numpy as np
 
     from repro.analysis import RetraceGuard
@@ -156,6 +157,7 @@ def run(out_path: str = "BENCH_retrace.json") -> int:
 
 
 def main(argv=None) -> int:
+    """CLI entry: write BENCH_retrace.json and exit nonzero over budget."""
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--smoke", action="store_true",
                     help="CI alias: the workload is already smoke-sized")

@@ -1,145 +1,157 @@
-"""Roofline analysis (assignment deliverable g).
+"""Truss roofline: measured phase throughput against a measured memory ceiling.
 
-Reads artifacts/dryrun/*.json and derives, per (arch × shape) on the
-single-pod mesh:
+The PKT hot loops are integer gather/scatter over wedge tables — no MXU
+FLOPs to speak of — so the meaningful roofline axis is *bytes moved per
+second* against the machine's achievable memory bandwidth.  Hardcoding a
+peak would lie on every host this runs on, so the ceiling is measured: a
+numpy copy triad over an out-of-cache buffer (``stream_bandwidth``).
 
-  compute    = HLO_FLOPs_per_device / peak_FLOP/s        (bf16 MXU)
-  memory     = HLO_bytes_per_device / HBM_bw
-  collective = collective_bytes_per_device / ICI_bw
+Per graph this bench derives an analytic traffic model from the decomposition
+the executor actually ran:
 
-FLOPs/bytes come from the *cost-mode* records (unrolled scans — exact;
-prod-mode numbers hide while-loop bodies), per-device post-SPMD. Collective
-bytes use the ring-model convention in launch/dryrun.parse_collectives.
+  support bytes = table_scan + probe_gathers            (one scan, AM4)
+  peel bytes    = sublevels × (table_scan + probe_gathers + state)
+  table_scan    = 4 arrays × 4 B per wedge entry
+  probe_gathers = (1 + iters) × 4 B per entry   (candidate + binary search)
+  state         = 5 × (m+1) × 4 B per sub-level  (S/processed/inCurr + dec
+                  accumulator read+write — the fused-kernel layout, §16)
 
-MODEL_FLOPS = 6·N·D (train) / 2·N_active·D (+attention/cache terms noted) —
-the useful-work yardstick; ratio MODEL_FLOPS / (HLO_FLOPs × chips) exposes
-remat and padding waste.
+and divides it by the warm phase wall time from ``pkt(...,
+phase_timings=True)``.  The peel model charges every sub-level a full table
+scan — exact for ``dense``/``pallas`` (grids are static), an upper bound for
+``chunked`` (chunk skipping moves less) — so ``frac`` is the fraction of the
+measured copy ceiling the executor sustains under that model.  Numbers well
+below 1.0 locate dispatch overhead / latency-bound sub-levels (deep, narrow
+frontiers), not bandwidth saturation.
+
+Usage::
+
+    PYTHONPATH=src:. python benchmarks/roofline.py            # markdown table
+    PYTHONPATH=src:. python benchmarks/roofline.py --smoke    # 1 graph, CI
 """
 
 from __future__ import annotations
 
-import json
-import os
+import argparse
+import time
 
-PEAK_FLOPS = 197e12          # bf16 / chip (v5e)
-HBM_BW = 819e9               # B/s / chip
-ICI_BW = 50e9                # B/s / link
-CHIPS = 256                  # single-pod roofline mesh
+import numpy as np
 
-ART = os.environ.get(
-    "REPRO_DRYRUN_DIR",
-    os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
-                 "artifacts", "dryrun"))
+from benchmarks.common import prep_graph
 
+from repro.core import support as support_mod
+from repro.core.pkt import pkt
 
-def _load(arch, shape, mesh, mode):
-    p = os.path.join(ART, f"{arch}__{shape}__{mesh}__{mode}.json")
-    if not os.path.exists(p):
-        return None
-    with open(p) as f:
-        return json.load(f)
+#: graph suite (same regimes as hillclimb's, so the tuned chunks apply)
+GRAPHS = ("ba-small", "er-small", "rmat-small")
+
+#: executor pairs to profile: (peel_mode, support_mode)
+PAIRS = (("chunked", "jnp"), ("dense", "jnp"), ("pallas", "pallas"))
 
 
-def model_flops(arch: str, shape: str) -> float:
-    """Analytic useful FLOPs per step (global, forward+backward for train)."""
-    from repro.configs import get_config, SHAPES
-    cfg = get_config(arch)
-    seq, gbs, kind = SHAPES[shape]
-    n_active = cfg.active_param_count()
-    if kind == "train":
-        tokens = seq * gbs
-        return 6.0 * n_active * tokens
-    if kind == "prefill":
-        tokens = seq * gbs
-        return 2.0 * n_active * tokens
-    # decode: one token per sequence + attention over the cache
-    from repro.models.model import n_attn_apps
-    flops = 2.0 * n_active * gbs
-    na = n_attn_apps(cfg)
-    if na:
-        flops += 4.0 * gbs * na * cfg.n_heads * cfg.head_dim * seq
-    return flops
+def stream_bandwidth(mib: int = 256, reps: int = 3) -> float:
+    """Measured host copy bandwidth in B/s (numpy out-of-cache triad)."""
+    n = mib * (1 << 20) // 8
+    a = np.ones(n)
+    b = np.empty_like(a)
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        np.copyto(b, a)
+        best = min(best, time.perf_counter() - t0)
+    return 16.0 * n / best          # 8 B read + 8 B write per element
 
 
-def cell_terms(arch: str, shape: str) -> dict | None:
-    cost = _load(arch, shape, "pod", "cost")
-    prod = _load(arch, shape, "pod", "prod")
-    if not cost or cost.get("skipped") or cost.get("error"):
-        return None
-    compute_s = cost["flops"] / PEAK_FLOPS
-    memory_s = cost["bytes_accessed"] / HBM_BW
-    coll_s = cost["collectives"]["total_bytes"] / ICI_BW
-    terms = {"compute_s": compute_s, "memory_s": memory_s,
-             "collective_s": coll_s}
-    dom = max(terms, key=terms.get)
-    mf = model_flops(arch, shape)
-    hlo_total = cost["flops"] * CHIPS
-    bound = max(compute_s, memory_s, coll_s)
-    return {
-        "arch": arch, "shape": shape,
-        **{k: float(v) for k, v in terms.items()},
-        "dominant": dom.replace("_s", ""),
-        "model_flops": mf,
-        "hlo_flops_global": hlo_total,
-        "useful_ratio": mf / max(hlo_total, 1e-9),
-        # fraction of roofline-limited time that is useful compute
-        "roofline_fraction": (mf / CHIPS / PEAK_FLOPS) / max(bound, 1e-12),
-        "mem_gib": ((prod or {}).get("temp_bytes", 0)
-                    + (prod or {}).get("arg_bytes", 0)) / 2**30,
-        "fits": (prod or {}).get("fits_hbm"),
-        "microbatches": (prod or {}).get("microbatches"),
-    }
+def _iters(g) -> int:
+    return support_mod._search_iters(g)
 
 
-def full_table() -> list[dict]:
-    from repro.configs import ARCHS, SHAPES, cell_is_valid
+def graph_terms(name: str, *, reps: int = 3) -> list[dict]:
+    """Measured warm phase times + modeled traffic for every executor pair."""
+    g, _ = prep_graph(name)
+    stab = support_mod.build_support_table(g)
+    ptab = support_mod.build_peel_table(g)
+    iters = _iters(g)
+    entry_bytes = 4 * 4 + (1 + iters) * 4
+    state_bytes = 5 * (g.m + 1) * 4
     rows = []
-    for arch in ARCHS:
-        for shape in SHAPES:
-            ok, why = cell_is_valid(arch, shape)
-            if not ok:
-                rows.append({"arch": arch, "shape": shape, "skipped": why})
-                continue
-            r = cell_terms(arch, shape)
-            rows.append(r or {"arch": arch, "shape": shape,
-                              "skipped": "missing artifact"})
+    for mode, smode in PAIRS:
+        def run_once(mode=mode, smode=smode):
+            return pkt(g, mode=mode, support_mode=smode, phase_timings=True)
+        run_once()                                  # warm (compile)
+        best = None
+        for _ in range(reps):
+            r = run_once()
+            if best is None or (r.phases["support"] + r.phases["peel"]
+                                < best.phases["support"]
+                                + best.phases["peel"]):
+                best = r
+        sup_bytes = stab.size * entry_bytes
+        peel_bytes = best.sublevels * (ptab.size * entry_bytes + state_bytes)
+        rows.append({
+            "graph": name, "mode": mode, "support_mode": smode,
+            "m": g.m, "sublevels": int(best.sublevels),
+            "support_seconds": best.phases["support"],
+            "peel_seconds": best.phases["peel"],
+            "support_bytes": int(sup_bytes),
+            "peel_bytes": int(peel_bytes),
+            "support_gbps": sup_bytes / max(best.phases["support"], 1e-12)
+            / 1e9,
+            "peel_gbps": peel_bytes / max(best.phases["peel"], 1e-12) / 1e9,
+        })
     return rows
 
 
-def markdown_table(rows=None) -> str:
-    rows = rows or full_table()
-    hdr = ("| arch | shape | compute(s) | memory(s) | collective(s) | "
-           "dominant | useful ratio | roofline frac | mem GiB (mb) |")
-    sep = "|" + "---|" * 9
-    lines = [hdr, sep]
-    for r in rows:
-        if r.get("skipped"):
-            lines.append(f"| {r['arch']} | {r['shape']} | — | — | — | "
-                         f"skip | — | — | {r['skipped'][:42]} |")
-            continue
+def full_table(graphs=GRAPHS, *, reps: int = 3) -> dict:
+    """Roofline rows for the whole suite against the measured ceiling."""
+    bw = stream_bandwidth()
+    rows = []
+    for name in graphs:
+        for r in graph_terms(name, reps=reps):
+            r["peel_frac"] = r["peel_gbps"] * 1e9 / bw
+            r["support_frac"] = r["support_gbps"] * 1e9 / bw
+            rows.append(r)
+    return {"stream_gbps": bw / 1e9, "rows": rows}
+
+
+def markdown_table(doc=None) -> str:
+    """Render a full_table() doc as a markdown table."""
+    doc = doc or full_table()
+    lines = [f"measured copy ceiling: {doc['stream_gbps']:.1f} GB/s", "",
+             "| graph | peel/support | subs | support GB/s (frac) | "
+             "peel GB/s (frac) |",
+             "|---|---|---|---|---|"]
+    for r in doc["rows"]:
         lines.append(
-            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.3e} | "
-            f"{r['memory_s']:.3e} | {r['collective_s']:.3e} | "
-            f"{r['dominant']} | {r['useful_ratio']:.2f} | "
-            f"{r['roofline_fraction']:.2f} | "
-            f"{r['mem_gib']:.1f} ({r['microbatches']}) |")
+            f"| {r['graph']} | {r['mode']}/{r['support_mode']} | "
+            f"{r['sublevels']} | "
+            f"{r['support_gbps']:.2f} ({r['support_frac']:.3f}) | "
+            f"{r['peel_gbps']:.2f} ({r['peel_frac']:.3f}) |")
     return "\n".join(lines)
 
 
 def run(suite=None) -> list[str]:
-    out = []
-    for r in full_table():
-        if r.get("skipped"):
-            out.append(f"roofline/{r['arch']}/{r['shape']},SKIP,"
-                       f"{r['skipped'][:60]}")
-            continue
-        bound = max(r["compute_s"], r["memory_s"], r["collective_s"])
+    """CSV rows for benchmarks/run.py."""
+    doc = full_table(suite or GRAPHS)
+    out = [f"roofline/stream,{0.0:.1f},ceiling={doc['stream_gbps']:.1f}GBps"]
+    for r in doc["rows"]:
         out.append(
-            f"roofline/{r['arch']}/{r['shape']},{bound * 1e6:.1f},"
-            f"dom={r['dominant']};frac={r['roofline_fraction']:.3f}"
-            f";useful={r['useful_ratio']:.2f}")
+            f"roofline/{r['graph']}/{r['mode']}-{r['support_mode']},"
+            f"{(r['support_seconds'] + r['peel_seconds']) * 1e6:.1f},"
+            f"peel={r['peel_gbps']:.2f}GBps;frac={r['peel_frac']:.3f}")
     return out
 
 
+def main() -> None:
+    """CLI entry: print the roofline table (--smoke: first graph only)."""
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--graphs", nargs="*", default=list(GRAPHS))
+    ap.add_argument("--reps", type=int, default=3)
+    ap.add_argument("--smoke", action="store_true")
+    args = ap.parse_args()
+    graphs = args.graphs[:1] if args.smoke else args.graphs
+    print(markdown_table(full_table(graphs, reps=args.reps)))
+
+
 if __name__ == "__main__":
-    print(markdown_table())
+    main()

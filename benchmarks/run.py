@@ -9,7 +9,8 @@
   engine  — batched multi-graph throughput (graphs/sec)
   inc     — incremental update vs recompute speedup     (DESIGN.md §9)
   hier    — community-index build/query + label parity  (DESIGN.md §11)
-  roofline— LM arch × shape roofline terms from dry-run (deliverable g)
+  roofline— measured phase GB/s vs the host copy ceiling (§16)
+  hillclimb— chunk-policy autotune sweep (feeds auto_chunk, §16)
 
 ``--smoke`` is the CI gate: a tiny RMAT graph decomposed by every
 (peel mode × support mode) executor pair, Ros, and the numpy oracle;
@@ -107,6 +108,7 @@ def smoke(out_path: str = "BENCH_smoke.json") -> int:
 
 
 def main() -> None:
+    """CLI entry: run the selected benches, print/write the CSV rows."""
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
                     help="small graph suite only")
@@ -127,7 +129,7 @@ def main() -> None:
 
     from benchmarks import (table2_support, table3_decomp, table4_parallel,
                             fig4_phases, fig6_levels, engine_bench, inc_bench,
-                            hier_bench, roofline)
+                            hier_bench, roofline, hillclimb)
     benches = {
         "table2": lambda: table2_support.run(suite),
         "table3": lambda: table3_decomp.run(suite),
@@ -139,7 +141,9 @@ def main() -> None:
         "fig6": lambda: fig6_levels.run(),
         "engine": lambda: engine_bench.run(
             n_graphs=12 if args.quick else 24),
-        "roofline": lambda: roofline.run(),
+        "roofline": lambda: roofline.run(
+            ("ba-small",) if args.quick else None),
+        "hillclimb": lambda: hillclimb.rows(quick=args.quick),
         "inc": lambda: inc_bench.rows(quick=args.quick),
         "hier": lambda: hier_bench.rows(quick=args.quick),
     }

@@ -17,6 +17,7 @@ from benchmarks.common import timeit, row
 
 
 def run(suite=None) -> list[str]:
+    """CSV rows: support-phase seconds per executor (paper Table 2)."""
     out = []
     for name in suite or GRAPH_SUITE:
         E = named_graph(name)

@@ -23,6 +23,7 @@ ROS_EDGE_CAP = 300_000
 
 
 def run(suite=None) -> list[str]:
+    """CSV rows: end-to-end decomposition seconds (paper Table 3)."""
     out = []
     for name in suite or GRAPH_SUITE:
         g, stats = prep_graph(name, order="kco")

@@ -36,6 +36,7 @@ print(f"RESULT {dt:.4f} {g.wedge_count()}")
 
 def run(suite=("rmat-small", "ba-small", "er-small"),
         device_counts=(1, 2, 4, 8)) -> list[str]:
+    """CSV rows: serial-vs-vmapped scaling proxy (paper Table 4)."""
     out = []
     env = dict(os.environ)
     env["PYTHONPATH"] = os.path.join(

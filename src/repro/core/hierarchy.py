@@ -20,8 +20,11 @@ many times (DESIGN.md §11):
     parent is just the (k-1)-label of its representative edge.
   * **Two builders, one contract** (the PR-4 ``table_mode`` pattern):
     ``mode="device"`` floods min-labels over the triangle rows with a jitted
-    scatter-min + pointer-jumping loop (O(log diameter) rounds, one XLA
-    dispatch per level — or one for the whole index via ``build_all``);
+    scatter-min + pointer-jumping loop (O(log diameter) rounds);
+    ``build_all`` runs a peel-order level sweep, finest level first, where
+    each level warm-starts from the next-finer labels and a host-side
+    convergence pre-check skips the dispatch entirely when the warm labels
+    are already the fixed point (DESIGN.md §16 has the parity argument).
     ``mode="host"`` is an independent union-find oracle (union-by-min over
     triangles sorted by level, shared across levels top-down).  Both
     converge to the same canonical labels.
@@ -61,27 +64,40 @@ def _labelprop_jit_factory():
     import jax
     import jax.numpy as jnp
 
-    @functools.partial(jax.jit, static_argnames=("mp",))
-    def _labelprop(tri, tri_lvl, k, L0, *, mp: int):
-        """Min-label flood over active triangle rows to the fixed point.
+    @functools.partial(jax.jit, static_argnames=("sz", "mp"))
+    def _labelprop(tri_all, lvl_all, start, k, L0, *, sz: int, mp: int):
+        """Min-label flood over the *representative graph* to the fixed point.
 
-        ``tri`` is the (Tp, 3) padded triangle table (sentinel rows point at
-        a dead slot), ``tri_lvl`` its per-row level (min member trussness,
-        sentinel rows -1), ``k`` the dynamic level, ``L0`` the (mp,) initial
-        labels (live edges: any in-component id <= their own; dead slots:
-        themselves).  Each round scatter-mins every active row's 3-way label
-        minimum into its member edges, then pointer-jumps ``L <- min(L,
-        L[L])`` — labels always point at smaller in-component edges, so the
-        composition doubles the hop distance and the flood converges in
-        O(log component diameter) rounds to the component-min fixed point.
+        ``tri_all``/``lvl_all`` are the full level-sorted triangle table and
+        its per-row levels (min member trussness); the flood runs on the
+        ``sz``-row window at dynamic offset ``start`` (every row that can
+        still merge components at level ``k`` — see the stratum windowing
+        in ``_build_device``; slicing in-jit saves two eager dispatches per
+        level).  ``k`` is the dynamic level, ``L0`` the (mp,) initial
+        labels (live edges: any in-component id <= their own — warm starts
+        pass a finer level's *flat* component minima; dead and padding
+        slots: themselves).
+
+        Each round gathers every active row's current representatives
+        ``r = L[tri]``, scatter-mins the row's 3-way representative-label
+        minimum into ``L[r]`` — the union step, expressed on the component
+        graph so already-merged rows are no-ops — then pointer-jumps
+        ``L <- min(L, L[L])``.  Labels only decrease and always point at
+        in-component edge ids, so the fixed point is exactly the flat
+        component-minimum labeling: at convergence ``L[L[e]] == L[e]``
+        (labels are roots) and every active row's members share one root
+        (DESIGN.md §16 gives the argument).  Warm-started levels converge
+        in O(log merge-chain) rounds over only their fresh stratum.
         """
-        act = tri_lvl >= k
+        tri = jax.lax.dynamic_slice(tri_all, (start, 0), (sz, 3))
+        act = jax.lax.dynamic_slice(lvl_all, (start,), (sz,)) >= k
         sink = jnp.int32(mp - 1)
 
         def body(state):
             L, _ = state
-            lm = jnp.min(L[tri], axis=1)
-            idx = jnp.where(act[:, None], tri, sink)
+            r = L[tri]
+            lm = jnp.min(L[r], axis=1)
+            idx = jnp.where(act[:, None], r, sink)
             lmw = jnp.where(act, lm, sink)
             L2 = (L.at[idx[:, 0]].min(lmw)
                    .at[idx[:, 1]].min(lmw)
@@ -96,14 +112,17 @@ def _labelprop_jit_factory():
         L, _ = jax.lax.while_loop(cond, body, (L0, jnp.full_like(L0, -1)))
         return L
 
-    @functools.partial(jax.jit, static_argnames=("mp",))
-    def _labelprop_all(tri, tri_lvl, ks, L0s, *, mp: int):
-        """All levels in one dispatch: vmap of the per-level flood."""
-        return jax.vmap(
-            lambda k, l0: _labelprop(tri, tri_lvl, k, l0, mp=mp))(ks, L0s)
+    return _labelprop
 
-    return _labelprop, _labelprop_all
 
+# Host-side flood seeding: active sets up to _SEED_ROWS_MAX rows run up to
+# _SEED_ROUNDS of the flood body on the host (np.minimum.at is ~100
+# ns/element, so larger sets would pay more on the host than the device
+# rounds they save), skipping the device dispatch entirely when the rounds
+# reach the flood's fixed point.  Larger levels with a small *fresh* stratum
+# still get one host round folded into their warm start.
+_SEED_ROWS_MAX = 4096
+_SEED_ROUNDS = 2
 
 _LABELPROP = None
 
@@ -199,7 +218,8 @@ class TrussHierarchy:
         self._dev = None          # (tri_dev, lvl_dev, mp) device upload cache
         self._uf = None           # (parent, order, ptr, k_at) host UF state
         self.stats = {"device_levels": 0, "host_levels": 0,
-                      "remapped_levels": 0, "batch_builds": 0}
+                      "remapped_levels": 0, "converged_levels": 0,
+                      "seeded_levels": 0}
 
     # ---------------------------------------------------------- level access
 
@@ -222,21 +242,17 @@ class TrussHierarchy:
         return self._labels[li]
 
     def build_all(self) -> "TrussHierarchy":
-        """Materialize every level eagerly.
+        """Materialize every level eagerly, finest (highest k) first.
 
-        Device mode batches all still-dirty levels into a single vmapped
-        dispatch (the index-build cost ``benchmarks/hier_bench.py``
-        measures); host mode runs the shared top-down union-find.
+        Both modes sweep the same peel order: device mode warm-starts every
+        level from the next-finer labels and skips the dispatch when the
+        convergence pre-check proves the warm start is already the fixed
+        point (the index-build cost ``benchmarks/hier_bench.py`` measures);
+        host mode extends the shared top-down union-find with exactly each
+        level's own triangle stratum (never a fresh rebuild).
         """
-        todo = [k for k in self.levels if self._labels[k - 2] is None]
-        if not todo:
-            return self
-        if self.mode == "device":
-            self._build_device_batch(todo)
-        else:
-            # coarse-to-fine: each level extends the shared union-find with
-            # exactly its own triangle stratum (never a fresh rebuild)
-            for k in sorted(todo, reverse=True):
+        for k in sorted(self.levels, reverse=True):
+            if self._labels[k - 2] is None:
                 self.level_labels(k)
         return self
 
@@ -278,35 +294,54 @@ class TrussHierarchy:
     def _pad_dims(self) -> tuple[int, int]:
         from repro.kernels.wedge_common import next_pow2
 
-        mp = max(8, next_pow2(self.m + 1))
+        # Labels are pure jnp (no pallas tiling), so the label array only
+        # needs *size-class* padding for compile reuse, not a full pow2:
+        # round m+1 up to the nearest of {0.75 * 2^b, 2^b}.  Half-step
+        # classes keep the O(log m) distinct compiled shapes while capping
+        # padding waste at 33% instead of 100% (m itself a pow2 is common).
+        p = max(8, next_pow2(self.m + 1))
+        mp = 3 * p // 4 if self.m + 1 <= 3 * p // 4 else p
         tp = max(8, next_pow2(max(1, self.tri.shape[0])))
         return mp, tp
 
     def _device_tables(self):
-        """Upload the padded triangle table once per hierarchy."""
+        """Upload the padded triangle table once per hierarchy.
+
+        Rows are sorted by level *descending* (stable), so the rows active
+        at any level ``k`` form a prefix — each flood then dispatches on the
+        pow2-padded active prefix only, instead of streaming the whole
+        table per level.  Scatter-min is order-insensitive, so the
+        reordering cannot change any label.
+        """
         if self._dev is None:
             import jax.numpy as jnp
 
             mp, tp = self._pad_dims()
+            order = np.argsort(-self.tri_lvl, kind="stable")
             tri = np.full((tp, 3), mp - 1, np.int32)
-            tri[: self.tri.shape[0]] = self.tri
+            tri[: self.tri.shape[0]] = self.tri[order]
             lvl = np.full(tp, -1, np.int32)
-            lvl[: self.tri.shape[0]] = self.tri_lvl
+            lvl[: self.tri.shape[0]] = self.tri_lvl[order]
             self._dev = (jnp.asarray(tri), jnp.asarray(lvl), mp)
         return self._dev
 
-    def _init_labels(self, k: int, mp: int) -> np.ndarray:
-        """Initial (mp,) int32 labels for level ``k``: live edges warm-start
-        from the nearest already-built finer level (its labels are
-        in-component ids, so the flood only has fewer rounds to run); dead
-        and padding slots point at themselves."""
+    def _warm_level(self, k: int) -> int:
+        """Nearest already-built level finer than ``k`` (``k_max + 1`` when
+        nothing finer is built — the cold, finest-level case)."""
+        for jj in range(k + 1, self.k_max + 1):
+            if self._labels[jj - 2] is not None:
+                return jj
+        return self.k_max + 1
+
+    def _init_labels(self, k: int, mp: int, j: int) -> np.ndarray:
+        """Initial (mp,) int32 labels for level ``k`` warm-started from
+        level ``j`` (see ``_warm_level``): live edges take the finer
+        level's labels where defined (in-component ids, so the flood only
+        has fewer rounds to run); dead and padding slots point at
+        themselves."""
         L0 = np.arange(mp, dtype=np.int32)
-        warm = None
-        for j in range(k + 1, self.k_max + 1):
-            if self._labels[j - 2] is not None:
-                warm = self._labels[j - 2]
-                break
-        if warm is not None:
+        if j <= self.k_max:
+            warm = self._labels[j - 2]
             fine = warm >= 0
             L0[:self.m][fine] = warm[fine]
         dead = self.T < k
@@ -314,30 +349,98 @@ class TrussHierarchy:
         return L0
 
     def _build_device(self, k: int) -> np.ndarray:
+        fault_point("hierarchy", rung="device")
+        j = self._warm_level(k)
+        fresh = (self.tri_lvl >= k) & (self.tri_lvl < j)
+        if not fresh.any():
+            # Empty-stratum shortcut: no triangle enters between j and k,
+            # so no merge is possible — level k's labels are level j's plus
+            # self-labels for the newly live (triangle-isolated at k)
+            # edges.  Skips the O(m) label-array construction entirely.
+            self.stats["converged_levels"] += 1
+            if j <= self.k_max:
+                labels = self._labels[j - 2].copy()
+                newly = (self.T >= k) & (labels < 0)
+            else:
+                labels = np.full(self.m, -1, np.int64)
+                newly = self.T >= k
+            labels[newly] = np.nonzero(newly)[0]
+            return labels
+        mp, _ = self._pad_dims()
+        L0 = self._init_labels(k, mp, j)
+        hi = int(np.count_nonzero(self.tri_lvl >= k))
+        if hi <= _SEED_ROWS_MAX:
+            # Tiny active sets pay more in per-round device dispatch latency
+            # than their arithmetic is worth, so run up to _SEED_ROUNDS of
+            # the *exact* flood body on the host — gather representatives
+            # ``r = L0[tri]``, scatter-min each row's 3-way representative-
+            # label minimum into ``L0[r]``, pointer-jump — checking the
+            # flood's own fixed-point condition between rounds (every active
+            # row's representative labels homogeneous, L0 flat under the
+            # jump).  When the check passes the while_loop body is the
+            # identity, so skipping the dispatch returns bitwise-exactly
+            # what the device would; when the rounds run out the seeded L0
+            # ships to the device flood, which converges to the canonical
+            # component minima from any in-component lower bound (§16).
+            tra = self.tri[self.tri_lvl >= k]
+            for seeds in range(_SEED_ROUNDS + 1):
+                r = L0[tra]
+                rl = L0[r]
+                lm = rl.min(axis=1)
+                if (bool((lm == rl.max(axis=1)).all())
+                        and bool((L0[L0] >= L0).all())):
+                    key = "seeded_levels" if seeds else "converged_levels"
+                    self.stats[key] += 1
+                    return self._finish(L0, k)
+                if seeds == _SEED_ROUNDS:
+                    break
+                np.minimum.at(L0, r.ravel(), np.repeat(lm, 3))
+                np.minimum(L0, L0[L0], out=L0)
+        else:
+            # Convergence pre-check (host, O(rows newly active since the
+            # warm level)): rows active at the warm level j are triangle-
+            # connected at j, so their three edges share one warm component
+            # minimum; if every *newly* active row (k <= tri_lvl < j) is
+            # also label-homogeneous under L0, the scatter-min pass cannot
+            # change any label.  L0 is idempotent by construction (warm
+            # labels are component minima at j, everything else
+            # self-labels), so the pointer jump is a no-op too: L0 is the
+            # flood's exact fixed point and the dispatch can be skipped
+            # bitwise-safely (DESIGN.md §16).
+            rows = L0[self.tri[fresh]]
+            if bool((rows.min(axis=1) == rows.max(axis=1)).all()):
+                self.stats["converged_levels"] += 1
+                return self._finish(L0, k)
+            if rows.shape[0] <= _SEED_ROWS_MAX:
+                # Fold one flood round over the fresh stratum into the
+                # warm start (the full active set is too large to check a
+                # fixed point on, so no skip — the seed just spares the
+                # device its first merge round).
+                rl = L0[rows]
+                lm = rl.min(axis=1)
+                np.minimum.at(L0, rows.ravel(), np.repeat(lm, 3))
+                np.minimum(L0, L0[L0], out=L0)
         import jax.numpy as jnp
 
-        fault_point("hierarchy", rung="device")
-        labelprop, _ = _labelprop_fns()
-        tri_dev, lvl_dev, mp = self._device_tables()
-        L = labelprop(tri_dev, lvl_dev, jnp.int32(k),
-                      jnp.asarray(self._init_labels(k, mp)), mp=mp)
+        labelprop = _labelprop_fns()
+        tri_dev, lvl_dev, _ = self._device_tables()
+        # Dispatch on the *fresh stratum* window only: the device rows are
+        # sorted by level descending, so rows entering between the warm
+        # level j and this level k occupy positions [count(lvl >= j),
+        # count(lvl >= k)).  Rows finer than the window are no-ops under a
+        # warm start (their members already share a flat label) and rows
+        # coarser than it are masked by the flood's own ``tri_lvl >= k``
+        # predicate, so pow2-rounding the window backward is bitwise-safe
+        # while bounding distinct compiled flood shapes to O(log T).
+        from repro.kernels.wedge_common import next_pow2
+
+        lo = int(np.count_nonzero(self.tri_lvl >= j))
+        sz = min(int(tri_dev.shape[0]), max(8, next_pow2(hi - lo)))
+        start = max(0, hi - sz)
+        L = labelprop(tri_dev, lvl_dev, jnp.int32(start), jnp.int32(k),
+                      jnp.asarray(L0), sz=sz, mp=mp)
         self.stats["device_levels"] += 1
         return self._finish(np.asarray(L), k)
-
-    def _build_device_batch(self, ks: list[int]) -> None:
-        import jax.numpy as jnp
-
-        fault_point("hierarchy", rung="device")
-        _, labelprop_all = _labelprop_fns()
-        tri_dev, lvl_dev, mp = self._device_tables()
-        L0s = np.stack([self._init_labels(k, mp) for k in ks])
-        Ls = np.asarray(labelprop_all(
-            tri_dev, lvl_dev, jnp.asarray(np.asarray(ks, np.int32)),
-            jnp.asarray(L0s), mp=mp))
-        for i, k in enumerate(ks):
-            self._labels[k - 2] = self._finish(Ls[i], k)
-        self.stats["device_levels"] += len(ks)
-        self.stats["batch_builds"] += 1
 
     def _finish(self, L: np.ndarray, k: int) -> np.ndarray:
         labels = L[: self.m].astype(np.int64)

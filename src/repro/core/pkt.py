@@ -124,7 +124,7 @@ def _pad_tables(tab: support_mod.WedgeTable, m: int, chunk: int,
 
 
 def prepare_peel(tab: support_mod.WedgeTable, m: int,
-                 chunk: int) -> tuple[PeelTables, int, int]:
+                 chunk: int | None) -> tuple[PeelTables, int, int]:
     """Clamp ``chunk`` to the table, pad, and derive ``n_chunks``.
 
     The single place where the chunk size is sanitized (the layout policy
@@ -269,21 +269,18 @@ def _peel_loop(N, Eid, S_ext0, processed0, tabs: PeelTables, *, m: int,
                 return chunk_contrib(c, dec, S_ext, processed, inCurr, l)
             dec = jax.lax.fori_loop(0, n_chunks, body, dec0)
         elif mode == "pallas":
-            from repro.kernels.peel import peel_decrement_targets
+            from repro.kernels.peel import peel_decrement_fold
             active = _active_chunk_mask(inCurr, tabs, m, n_chunks)
-            tgt2, tgt3 = peel_decrement_targets(
+            pin = (jnp.zeros((m + 1,), jnp.int32) if pinned is None
+                   else pinned.astype(jnp.int32))
+            dec = peel_decrement_fold(
                 active.astype(jnp.int32),
                 jnp.reshape(l, (1,)).astype(jnp.int32),
                 tabs.e1, tabs.cand_slot, tabs.lo, tabs.hi, N, Eid,
                 S_ext, processed.astype(jnp.int32),
-                inCurr.astype(jnp.int32),
+                inCurr.astype(jnp.int32), pin,
                 chunk=chunk, n_chunks=n_chunks, iters=iters, m=m,
                 interpret=interpret)
-            if pinned is not None:
-                # redirect suppressed targets to the absorbing sentinel slot
-                tgt2 = jnp.where(pinned[tgt2], m, tgt2)
-                tgt3 = jnp.where(pinned[tgt3], m, tgt3)
-            dec = dec0.at[tgt2].add(1).at[tgt3].add(1)
         else:  # chunked: visit only chunks overlapping the frontier
             active = _active_chunk_mask(inCurr, tabs, m, n_chunks)
             n_active = jnp.sum(active.astype(jnp.int32))

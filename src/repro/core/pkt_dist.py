@@ -115,15 +115,13 @@ def _dist_support_body(N, Eid, e1, cand, lo, hi, *, m: int, iters: int,
     identical.
     """
     if mode == "pallas":
-        from repro.kernels.support import (fold_support_targets,
-                                           support_hit_targets)
+        from repro.kernels.support import support_accumulate
 
         local = e1.shape[0]
         assert chunk >= 1 and local % chunk == 0, (local, chunk)
-        tgt1, tgt2, tgt3, _ = support_hit_targets(
+        S, _ = support_accumulate(
             e1, cand, lo, hi, N, Eid, chunk=chunk,
             n_chunks=local // chunk, iters=iters, m=m, interpret=interpret)
-        S = fold_support_targets(tgt1, tgt2, tgt3, m=m)
     else:
         hit, safe = wedge_common.probe(N, cand, lo, hi, iters=iters)
         # sentinel entries carry e1 == m

@@ -256,13 +256,12 @@ def support_from_table_arrays(e1, cand, lo, hi, N, Eid, *, m: int, mode: str,
     ``pad_chunked`` convention and must span ``n_chunks * chunk`` rows.
     """
     if mode == "pallas":
-        from repro.kernels.support import (fold_support_targets,
-                                           support_hit_targets)
+        from repro.kernels.support import support_accumulate
 
-        tgt1, tgt2, tgt3, _ = support_hit_targets(
+        S, _ = support_accumulate(
             e1, cand, lo, hi, N, Eid, chunk=chunk, n_chunks=n_chunks,
             iters=iters, m=m, interpret=interpret)
-        return fold_support_targets(tgt1, tgt2, tgt3, m=m)[:m]
+        return S[:m]
     return _support_jit(N, Eid, e1, cand, lo, hi, iters, m)
 
 

@@ -414,7 +414,8 @@ class IncrementalTruss:
         insert_mode: insertion repair strategy ("batched" / "sequential",
             §13) — one merged-region re-peel per batch vs one re-peel per
             inserted edge; bitwise-identical results.
-        chunk: peel chunk size (pow2).
+        chunk: peel chunk size (pow2); ``None`` applies the tuned
+            auto-chunk policy per table (``kernels.wedge_common``).
         local_frac: affected-region fraction above which an update falls
             back to full recompute.
         host_peel_max: region size ceiling for the host re-peel path;
@@ -432,7 +433,7 @@ class IncrementalTruss:
     def __init__(self, edges, *, n: int | None = None, mode: str = "chunked",
                  support_mode: str = "jnp", table_mode: str = "device",
                  hier_mode: str = "device", insert_mode: str = "batched",
-                 chunk: int = 1 << 12,
+                 chunk: int | None = None,
                  local_frac: float = 0.25, host_peel_max: int = 4096,
                  compact_frac: float | None = _COMPACT_FRAC,
                  compact_min: int = _COMPACT_MIN,
@@ -454,7 +455,7 @@ class IncrementalTruss:
             raise ValueError(
                 f"insert_mode must be one of {INSERT_MODES}, "
                 f"got {insert_mode!r}")
-        if chunk < 1:
+        if chunk is not None and chunk < 1:
             raise ValueError("chunk must be positive")
         if not 0.0 <= local_frac <= 1.0:
             raise ValueError("local_frac must be in [0, 1]")
@@ -466,7 +467,8 @@ class IncrementalTruss:
         self._hier: TrussHierarchy | None = None
         self.compact_frac = compact_frac
         self.compact_min = int(compact_min)
-        self.chunk = wedge_common.next_pow2(chunk)
+        self.chunk = (None if chunk is None
+                      else wedge_common.next_pow2(chunk))
         self.local_frac = float(local_frac)
         self.host_peel_max = int(host_peel_max)
         self.interpret = (wedge_common.interpret_default()

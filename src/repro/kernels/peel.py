@@ -4,12 +4,21 @@ One grid step evaluates one wedge-table chunk: the chunk's ``e1 / cand_slot /
 lo / hi`` rows are staged in VMEM next to the (replicated) adjacency arrays
 and edge-state vectors, the ranged binary search runs branch-free on the VPU,
 and the frontier / processed / tie-break predicates of ProcessSubLevel are
-evaluated as dense masks.  The kernel emits, per wedge entry, the *decrement
-target* for each of the two non-anchor triangle edges — the edge id when the
-paper's AtomicSub would fire, or the sentinel ``m`` otherwise.  The caller
-folds the two target streams into the decrement vector with two scatter-adds
-(slot ``m`` absorbs the no-ops), which keeps the kernel store-contention-free:
-every output slot is written by exactly one grid step.
+evaluated as dense masks.  The decrement fold is fused on-chip: the kernel
+owns a single ``(m + 1,)`` accumulator output block pinned to block 0 for
+every grid step, so it stays resident in VMEM across the whole (sequential)
+grid.  Grid step 0 zeroes it; every step scatter-adds its chunk's two
+decrement targets — the edge id of each non-anchor triangle edge when the
+paper's AtomicSub would fire, or the absorbing sentinel slot ``m``
+otherwise — directly into the accumulator.  Integer addition is exact, so
+the fused fold is bitwise identical to the jnp executors (and to the retired
+target-stream + host-side scatter) regardless of accumulation order.
+
+The incremental layer's ``pinned`` schedule mask (edges that process their
+triangles at a replayed level but never receive decrements,
+core/truss_inc.py) rides into the kernel as one more replicated (m+1,)
+state vector and suppresses the decrement predicate in place — the retired
+stream path had to re-route pinned targets to the sentinel on the host.
 
 Chunk skipping (the paper's dynamic scheduling) survives as an ``active``
 mask input: a Pallas grid is static, so sub-levels that only touch a few
@@ -19,10 +28,10 @@ work-efficient ``mode="chunked"`` while_loop in ``core/pkt.py`` remains the
 right choice for very sparse frontiers; this kernel wins when frontiers are
 wide (dense sub-levels dominate total peel time, paper Fig. 6).
 
-VMEM per grid step ≈ 4·(chunk + two_m·2 + 3·(m+1)) bytes plus the output
-blocks; callers pick ``chunk`` so this stays well under the ~16 MiB budget.
-On non-TPU backends the kernel runs in interpret mode (the CI contract: the
-lowering is exercised on every PR, the Mosaic path on TPU runners).
+VMEM per grid step ≈ 4·(chunk + two_m·2 + 5·(m+1)) bytes; callers pick
+``chunk`` so this stays well under the ~16 MiB budget.  On non-TPU backends
+the kernel runs in interpret mode (the CI contract: the lowering is
+exercised on every PR, the Mosaic path on TPU runners).
 
 Chunk layout, padding, and the fused gather + ranged-binary-search probe are
 shared with the support kernel via ``kernels/wedge_common.py``.
@@ -42,14 +51,19 @@ _interpret_default = wedge_common.interpret_default
 
 
 def _peel_chunk_kernel(act_ref, l_ref, e1_ref, cand_ref, lo_ref, hi_ref,
-                       n_ref, eid_ref, s_ref, proc_ref, curr_ref,
-                       tgt2_ref, tgt3_ref, *, iters: int, m: int):
-    """One wedge-table chunk → decrement targets (edge id, or m for no-op)."""
+                       n_ref, eid_ref, s_ref, proc_ref, curr_ref, pin_ref,
+                       dec_ref, *, iters: int, m: int):
+    """One wedge-table chunk folded into the (m+1,) decrement accumulator."""
+    @pl.when(pl.program_id(0) == 0)
+    def _zero():
+        dec_ref[...] = jnp.zeros_like(dec_ref)
+
     N = n_ref[...]                 # (two_m,) int32 adjacency values
     Eid = eid_ref[...]             # (two_m,) int32 slot → edge id
     S = s_ref[...]                 # (m+1,)  int32 extended support
     proc = proc_ref[...] != 0      # (m+1,)  processed mask
     curr = curr_ref[...] != 0      # (m+1,)  current-frontier mask
+    pin = pin_ref[...] != 0        # (m+1,)  pinned schedule mask
     act = act_ref[0] != 0          # chunk overlaps a frontier edge's range
     l = l_ref[0]                   # current peel level
 
@@ -65,25 +79,28 @@ def _peel_chunk_kernel(act_ref, l_ref, e1_ref, cand_ref, lo_ref, hi_ref,
     valid = act & in1 & hit & (~proc[e2]) & (~proc[e3])
     # the paper's tie-break: of two frontier edges sharing a triangle, the
     # lower edge id processes it (each triangle decremented exactly once)
-    dec2 = valid & (S[e2] > l) & ((~curr[e3]) | (e1 < e3))
-    dec3 = valid & (S[e3] > l) & ((~curr[e2]) | (e1 < e2))
-    tgt2_ref[...] = jnp.where(dec2, e2, m).astype(jnp.int32)
-    tgt3_ref[...] = jnp.where(dec3, e3, m).astype(jnp.int32)
+    dec2 = valid & (S[e2] > l) & ((~curr[e3]) | (e1 < e3)) & (~pin[e2])
+    dec3 = valid & (S[e3] > l) & ((~curr[e2]) | (e1 < e2)) & (~pin[e3])
+    tgt2 = jnp.where(dec2, e2, m).astype(jnp.int32)
+    tgt3 = jnp.where(dec3, e3, m).astype(jnp.int32)
+    dec_ref[...] = dec_ref[...].at[tgt2].add(1).at[tgt3].add(1)
 
 
-def peel_decrement_targets(active, l, e1, cand, lo, hi, N, Eid,
-                           S_ext, processed, inCurr, *, chunk: int,
-                           n_chunks: int, iters: int, m: int,
-                           interpret: bool = True):
-    """Decrement targets for every wedge-table entry at sub-level ``l``.
+def peel_decrement_fold(active, l, e1, cand, lo, hi, N, Eid,
+                        S_ext, processed, inCurr, pinned, *, chunk: int,
+                        n_chunks: int, iters: int, m: int,
+                        interpret: bool = True):
+    """Fused decrement fold over the wedge table at sub-level ``l``.
 
     active: (n_chunks,) int32 chunk mask; l: (1,) int32; table arrays
-    (n_chunks*chunk,) int32; N/Eid: (two_m,) int32; S_ext/processed/inCurr:
-    (m+1,) int32.  Returns (tgt2, tgt3), each (n_chunks*chunk,) int32 in
-    [0, m] — scatter ``+1`` at both and read the result below index m.
+    (n_chunks*chunk,) int32; N/Eid: (two_m,) int32;
+    S_ext/processed/inCurr/pinned: (m+1,) int32 (pinned all-zero when the
+    caller has no schedule edges).  Returns the (m+1,) int32 decrement
+    vector accumulated on-chip — slot ``m`` absorbs sentinel writes; read
+    the result below index m.  Trace-level: ``core/pkt.py`` calls this
+    inside its jitted peel loop.
     """
     two_m = N.shape[0]
-    nw = n_chunks * chunk
     kernel = functools.partial(_peel_chunk_kernel, iters=iters, m=m)
     chunk_spec = wedge_common.chunk_spec(chunk)
     full = wedge_common.replicated_spec
@@ -95,12 +112,14 @@ def peel_decrement_targets(active, l, e1, cand, lo, hi, N, Eid,
             full(1),                              # l (replicated scalar)
             chunk_spec, chunk_spec, chunk_spec, chunk_spec,
             full(two_m), full(two_m),             # N, Eid
-            full(m + 1), full(m + 1), full(m + 1),  # S_ext, processed, inCurr
+            full(m + 1), full(m + 1),             # S_ext, processed
+            full(m + 1), full(m + 1),             # inCurr, pinned
         ],
-        out_specs=[chunk_spec, chunk_spec],
-        out_shape=[jax.ShapeDtypeStruct((nw,), jnp.int32)] * 2,
+        out_specs=[full(m + 1)],
+        out_shape=[jax.ShapeDtypeStruct((m + 1,), jnp.int32)],
         interpret=interpret,
-    )(active, l, e1, cand, lo, hi, N, Eid, S_ext, processed, inCurr)
+    )(active, l, e1, cand, lo, hi, N, Eid, S_ext, processed, inCurr,
+      pinned)[0]
 
 
 @functools.partial(jax.jit, static_argnames=("chunk", "n_chunks", "iters",
@@ -108,14 +127,11 @@ def peel_decrement_targets(active, l, e1, cand, lo, hi, N, Eid,
 def peel_decrements(active, l, e1, cand, lo, hi, N, Eid, S_ext, processed,
                     inCurr, *, chunk: int, n_chunks: int, iters: int, m: int,
                     interpret: bool = True):
-    """Jitted convenience wrapper: targets folded into the (m+1,) decrement
-    vector (slot m absorbs sentinel writes). Used directly by tests and the
-    CI interpret-compile gate; ``core/pkt.py`` traces the unjitted version
-    inside its peel loop."""
-    tgt2, tgt3 = peel_decrement_targets(
+    """Jitted convenience wrapper: fused fold with no pinned edges → (m+1,)
+    decrement vector (slot m absorbs sentinel writes). Used directly by tests
+    and the CI interpret-compile gate; ``core/pkt.py`` traces
+    ``peel_decrement_fold`` inside its peel loop."""
+    return peel_decrement_fold(
         active, l, e1, cand, lo, hi, N, Eid, S_ext, processed, inCurr,
+        jnp.zeros((m + 1,), jnp.int32),
         chunk=chunk, n_chunks=n_chunks, iters=iters, m=m, interpret=interpret)
-    dec = jnp.zeros((m + 1,), jnp.int32)
-    dec = dec.at[tgt2].add(1)
-    dec = dec.at[tgt3].add(1)
-    return dec

@@ -10,24 +10,26 @@ branch-free on the VPU.
 
 Each hit is one triangle, discovered exactly once (AM4 anchors a triangle at
 its lowest-vertex edge), and must increment the support of its three edges.
-The kernel emits, per wedge entry, the three *increment targets* — the edge
-ids of the anchor ``(u,v)``, the scanned edge ``(v,w)`` and the closing edge
-``(u,w)`` on a hit, or the sentinel ``m`` otherwise — and accumulates the
-chunk's partial triangle count on-chip (one int per grid step, the fused
-reduction over the chunk's hit mask).  The caller folds the target streams
-into the support vector with three scatter-adds; integer addition is exact,
-so the result is bitwise identical to the jnp path's gather/scatter pipeline
-regardless of accumulation order.  Keeping the scatter outside the kernel
-keeps it store-contention-free: every output slot is written by exactly one
-grid step (the same contract as ``kernels/peel.py``).
+The fold is fused on-chip: the kernel owns a single ``(m + 1,)`` accumulator
+output block whose index map pins it to block 0 for every grid step, so it
+stays resident in VMEM across the whole (sequential) grid.  Grid step 0
+zeroes it; every step then scatter-adds its chunk's three increment targets —
+the edge ids of the anchor ``(u,v)``, the scanned edge ``(v,w)`` and the
+closing edge ``(u,w)`` on a hit, or the absorbing sentinel slot ``m``
+otherwise — directly into the accumulator.  Integer addition is exact, so
+the result is bitwise identical to the jnp path's gather/scatter pipeline
+(and to the retired stream-out + host-side fold) regardless of accumulation
+order.  Per-chunk triangle partials still stream out one int per grid step
+(each AM4 hit is one distinct triangle, so the partials sum to the graph's
+total).
 
 Unlike the peel kernel there is no frontier state: the support table is
 scanned exactly once per decomposition, so there is no ``active`` mask and no
 per-level re-entry — the grid is simply the chunked table.  VMEM per grid
-step ≈ 4·(4·chunk + 2·two_m) bytes plus the output blocks; callers pick
-``chunk`` so this stays well under the ~16 MiB budget.  On non-TPU backends
-the kernel runs in interpret mode (the CI contract: the lowering is exercised
-on every PR, the Mosaic path on TPU runners).
+step ≈ 4·(4·chunk + 2·two_m + (m+1)) bytes; callers pick ``chunk`` so this
+stays well under the ~16 MiB budget.  On non-TPU backends the kernel runs in
+interpret mode (the CI contract: the lowering is exercised on every PR, the
+Mosaic path on TPU runners).
 """
 
 from __future__ import annotations
@@ -42,9 +44,12 @@ from repro.kernels import wedge_common
 
 
 def _support_chunk_kernel(e1_ref, cand_ref, lo_ref, hi_ref, n_ref, eid_ref,
-                          tgt1_ref, tgt2_ref, tgt3_ref, tri_ref, *,
-                          iters: int, m: int):
-    """One oriented wedge-table chunk → three increment-target streams."""
+                          s_ref, tri_ref, *, iters: int, m: int):
+    """One oriented wedge-table chunk folded into the (m+1,) accumulator."""
+    @pl.when(pl.program_id(0) == 0)
+    def _zero():
+        s_ref[...] = jnp.zeros_like(s_ref)
+
     N = n_ref[...]                 # (two_m,) int32 adjacency values
     Eid = eid_ref[...]             # (two_m,) int32 slot → edge id
     e1 = e1_ref[...]               # (chunk,) anchor edge ids (m = padding)
@@ -53,27 +58,28 @@ def _support_chunk_kernel(e1_ref, cand_ref, lo_ref, hi_ref, n_ref, eid_ref,
     hi = hi_ref[...]               # (chunk,) probe range end (lo==hi → miss)
 
     hit, safe = wedge_common.probe(N, cand, lo, hi, iters=iters)
-    tgt1_ref[...] = jnp.where(hit, e1, m).astype(jnp.int32)
-    tgt2_ref[...] = jnp.where(hit, Eid[cand], m).astype(jnp.int32)
-    tgt3_ref[...] = jnp.where(hit, Eid[safe], m).astype(jnp.int32)
-    # on-chip partial accumulation: this chunk's triangle count (each AM4 hit
-    # is one distinct triangle, so the partials sum to the graph's total)
+    tgt1 = jnp.where(hit, e1, m).astype(jnp.int32)
+    tgt2 = jnp.where(hit, Eid[cand], m).astype(jnp.int32)
+    tgt3 = jnp.where(hit, Eid[safe], m).astype(jnp.int32)
+    s_ref[...] = s_ref[...].at[tgt1].add(1).at[tgt2].add(1).at[tgt3].add(1)
+    # on-chip partial accumulation: this chunk's triangle count
     tri_ref[...] = jnp.sum(hit.astype(jnp.int32), keepdims=True)
 
 
-def support_hit_targets(e1, cand, lo, hi, N, Eid, *, chunk: int,
-                        n_chunks: int, iters: int, m: int,
-                        interpret: bool = True):
-    """Increment targets (and per-chunk triangle partials) for a full table.
+def support_accumulate(e1, cand, lo, hi, N, Eid, *, chunk: int,
+                       n_chunks: int, iters: int, m: int,
+                       interpret: bool = True):
+    """Fused support fold (and per-chunk triangle partials) for a full table.
 
     Table arrays are (n_chunks*chunk,) int32, padded per
     ``wedge_common.pad_chunked``; N/Eid are (two_m,) int32.  Returns
-    ``(tgt1, tgt2, tgt3, tri_partial)`` — the first three (n_chunks*chunk,)
-    int32 in [0, m] (scatter ``+1`` at each and read the result below index
-    m), the last (n_chunks,) int32 per-chunk triangle counts.
+    ``(S_ext, tri_partial)`` — ``S_ext`` the (m+1,) int32 support vector
+    accumulated on-chip (slot ``m`` absorbs padding rows and misses; read
+    ``S_ext[:m]``), ``tri_partial`` the (n_chunks,) int32 per-chunk triangle
+    counts.  Trace-level: the batched engine and the distributed path call
+    this inside their own jit/vmap/shard_map scopes.
     """
     two_m = N.shape[0]
-    nw = n_chunks * chunk
     kernel = functools.partial(_support_chunk_kernel, iters=iters, m=m)
     cspec = wedge_common.chunk_spec(chunk)
     full = wedge_common.replicated_spec
@@ -81,36 +87,25 @@ def support_hit_targets(e1, cand, lo, hi, N, Eid, *, chunk: int,
         kernel,
         grid=(n_chunks,),
         in_specs=[cspec, cspec, cspec, cspec, full(two_m), full(two_m)],
-        out_specs=[cspec, cspec, cspec, wedge_common.chunk_spec(1)],
-        out_shape=[jax.ShapeDtypeStruct((nw,), jnp.int32)] * 3
-        + [jax.ShapeDtypeStruct((n_chunks,), jnp.int32)],
+        out_specs=[full(m + 1), wedge_common.chunk_spec(1)],
+        out_shape=[jax.ShapeDtypeStruct((m + 1,), jnp.int32),
+                   jax.ShapeDtypeStruct((n_chunks,), jnp.int32)],
         interpret=interpret,
     )(e1, cand, lo, hi, N, Eid)
-
-
-def fold_support_targets(tgt1, tgt2, tgt3, *, m: int) -> jnp.ndarray:
-    """Scatter the three target streams into the (m+1,) support vector.
-
-    Slot ``m`` absorbs sentinel writes (padding rows and misses); callers
-    read ``S[:m]``.  Shared by every consumer of the kernel so the fold
-    cannot drift between the single-graph, batched, and distributed paths.
-    """
-    S = jnp.zeros((m + 1,), jnp.int32)
-    return S.at[tgt1].add(1).at[tgt2].add(1).at[tgt3].add(1)
 
 
 @functools.partial(jax.jit, static_argnames=("chunk", "n_chunks", "iters",
                                              "m", "interpret"))
 def support_counts(e1, cand, lo, hi, N, Eid, *, chunk: int, n_chunks: int,
                    iters: int, m: int, interpret: bool = True):
-    """Jitted convenience wrapper: kernel + fold → ((m+1,) S, triangles).
+    """Jitted convenience wrapper: fused kernel → ((m+1,) S, triangles).
 
     Used by ``core.support.compute_support(mode="pallas")``, tests, and the
     CI interpret-lowering gate; the batched engine and the distributed path
-    trace ``support_hit_targets`` directly inside their own jit/shard_map
+    trace ``support_accumulate`` directly inside their own jit/shard_map
     scopes.
     """
-    tgt1, tgt2, tgt3, tri = support_hit_targets(
+    S, tri = support_accumulate(
         e1, cand, lo, hi, N, Eid, chunk=chunk, n_chunks=n_chunks,
         iters=iters, m=m, interpret=interpret)
-    return fold_support_targets(tgt1, tgt2, tgt3, m=m), jnp.sum(tri)
+    return S, jnp.sum(tri)

@@ -28,6 +28,10 @@ from ``core/`` without cycles (``core.support`` re-exports
 
 from __future__ import annotations
 
+import json
+import os
+import pathlib
+
 import numpy as np
 
 import jax
@@ -59,19 +63,74 @@ AUTO_CHUNK_MIN = 1 << 7
 AUTO_CHUNK_MAX = 1 << 14
 
 
+#: tuned-chunk table location: ``benchmarks/hillclimb.py`` measures the best
+#: chunk per pow2 table-size bucket and writes it here (override with the
+#: env var for experiments); missing/invalid files fall back to the
+#: recorded-defaults formula below
+TUNED_CHUNKS_ENV = "TRUSS_TUNED_CHUNKS"
+TUNED_CHUNKS_PATH = pathlib.Path(__file__).with_name("tuned_chunks.json")
+
+_TUNED_CHUNKS: dict[int, int] | None | bool = False  # False = not loaded yet
+
+
+def _load_tuned_chunks() -> dict[int, int] | None:
+    """Parse the tuned-chunk table: {log2(pow2 table bucket): chunk}.
+
+    Any failure (missing file, wrong format version, non-pow2 values)
+    disables the table for the whole process — the formula fallback keeps
+    ``auto_chunk`` total, so a stale or corrupt tuning file can never break
+    a decomposition, only untune it.
+    """
+    path = os.environ.get(TUNED_CHUNKS_ENV) or TUNED_CHUNKS_PATH
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+        if doc.get("format") != 1:
+            return None
+        table = {}
+        for bucket, chunk in doc["buckets"].items():
+            b, c = int(bucket), int(chunk)
+            if c < 1 or c & (c - 1):
+                return None
+            table[b] = c
+        return table or None
+    except (OSError, ValueError, KeyError, AttributeError, TypeError):
+        return None
+
+
+def reload_tuned_chunks() -> dict[int, int] | None:
+    """Drop the cached tuned table and re-read it (test / autotuner hook)."""
+    global _TUNED_CHUNKS
+    _TUNED_CHUNKS = _load_tuned_chunks()
+    return _TUNED_CHUNKS
+
+
 def auto_chunk(size: int, *, target: int = AUTO_CHUNK_TARGET,
                lo: int = AUTO_CHUNK_MIN, hi: int = AUTO_CHUNK_MAX) -> int:
     """Derive a chunk size from the table size (used when none is requested).
 
-    Returns a power of two sized so the table splits into roughly ``target``
-    chunks, clamped to ``[lo, hi]``.  The old fixed ``1 << 14`` default made
-    every table smaller than 16Ki entries a *single* chunk, so the
-    work-efficient chunk-skipping executor scanned the whole table every
-    sub-level while still paying the while_loop machinery — the
-    chunked-slower-than-dense pathology BENCH_smoke.json showed on tiny
-    graphs.  Large tables still get the VMEM-budget chunk ``hi``.
+    Consults the tuned-chunk table first: ``benchmarks/hillclimb.py`` sweeps
+    chunk candidates per pow2 table-size bucket and records the winner in
+    ``tuned_chunks.json``; a hit is clamped to ``[lo, hi]`` and returned.
+    Buckets the autotuner never measured (and any load failure) fall back
+    to the recorded-defaults formula: a power of two sized so the table
+    splits into roughly ``target`` chunks, clamped to ``[lo, hi]``.  The
+    old fixed ``1 << 14`` default made every table smaller than 16Ki
+    entries a *single* chunk, so the work-efficient chunk-skipping executor
+    scanned the whole table every sub-level while still paying the
+    while_loop machinery — the chunked-slower-than-dense pathology
+    BENCH_smoke.json showed on tiny graphs.  Large tables still get the
+    VMEM-budget chunk ``hi``.
     """
+    global _TUNED_CHUNKS
     size = max(1, int(size))
+    if _TUNED_CHUNKS is False:
+        _TUNED_CHUNKS = _load_tuned_chunks()
+    if _TUNED_CHUNKS:
+        bucket = next_pow2(size).bit_length() - 1
+        tuned = _TUNED_CHUNKS.get(bucket)
+        if tuned is not None:
+            return int(min(hi, max(lo, tuned)))
     want = next_pow2(-(-size // max(1, int(target))))
     return int(min(hi, max(lo, want)))
 

@@ -46,6 +46,8 @@ synchronous parity replay:
 from __future__ import annotations
 
 import argparse
+import os
+import sys
 import time
 
 import numpy as np
@@ -55,6 +57,70 @@ from repro.graphs.csr import build_csr, relabel, degeneracy_order
 from repro.kernels.wedge_common import pow2_chunk
 from repro.core import (pkt, truss_wc, truss_ros, truss_trilist, truss_numpy,
                         pkt_dist)
+
+# ------------------------------------------------------- host env tuning ----
+
+#: re-exec guard: set once tuning has been applied so ``--tune-env`` cannot
+#: loop the process
+_ENV_TUNED_MARK = "_TRUSS_ENV_TUNED"
+
+#: where distro packages put tcmalloc (the SNIPPETS.md serving exemplar);
+#: first hit wins, absence just skips the preload
+TCMALLOC_PATHS = (
+    "/usr/lib/x86_64-linux-gnu/libtcmalloc.so.4",
+    "/usr/lib/x86_64-linux-gnu/libtcmalloc_minimal.so.4",
+    "/usr/lib/libtcmalloc.so.4",
+)
+
+
+def tuned_env(environ=None) -> dict[str, str]:
+    """Host-side env additions for serving (docs/PERFORMANCE.md):
+
+    * ``LD_PRELOAD`` tcmalloc — glibc malloc serializes the multi-GiB host
+      buffer churn of table builds; tcmalloc's thread caches don't.
+    * ``TCMALLOC_LARGE_ALLOC_REPORT_THRESHOLD`` raised so steady-state
+      large allocations don't spam stderr.
+    * ``TF_CPP_MIN_LOG_LEVEL=4`` — silence the XLA C++ banner on every
+      worker.
+    * ``JAX_DEFAULT_DTYPE_BITS=32`` — the whole pipeline is int32/float32;
+      keep accidental int64 promotion off the device.
+
+    Returns only the *additions* (never overrides anything the user set),
+    so it is unit-testable and composes with existing environments.
+    """
+    env = os.environ if environ is None else environ
+    add: dict[str, str] = {}
+    if "TF_CPP_MIN_LOG_LEVEL" not in env:
+        add["TF_CPP_MIN_LOG_LEVEL"] = "4"
+    if "JAX_DEFAULT_DTYPE_BITS" not in env:
+        add["JAX_DEFAULT_DTYPE_BITS"] = "32"
+    if "TCMALLOC_LARGE_ALLOC_REPORT_THRESHOLD" not in env:
+        add["TCMALLOC_LARGE_ALLOC_REPORT_THRESHOLD"] = "60000000000"
+    if "libtcmalloc" not in env.get("LD_PRELOAD", ""):
+        for p in TCMALLOC_PATHS:
+            if os.path.exists(p):
+                pre = env.get("LD_PRELOAD", "")
+                add["LD_PRELOAD"] = f"{pre}:{p}".strip(":")
+                break
+    return add
+
+
+def apply_env_tuning(*, reexec: bool = True) -> dict[str, str]:
+    """Apply ``tuned_env`` to this process (idempotent via the guard var).
+
+    ``LD_PRELOAD`` only binds at process start, so when the preload is part
+    of the additions and ``reexec`` is allowed the process re-execs itself
+    once with the tuned environment; everything else takes effect in place.
+    Returns the additions that were applied.
+    """
+    if os.environ.get(_ENV_TUNED_MARK):
+        return {}
+    add = tuned_env()
+    os.environ[_ENV_TUNED_MARK] = "1"
+    os.environ.update(add)
+    if reexec and "LD_PRELOAD" in add:
+        os.execv(sys.executable, [sys.executable] + sys.argv)
+    return add
 
 
 def churn_batch(edges: np.ndarray, n: int, frac: float, rng):
@@ -125,7 +191,7 @@ def run_update_stream(args) -> None:
     eng = TrussEngine(mode=args.mode, support_mode=args.support_mode,
                       table_mode=args.table_mode, hier_mode=args.hier_mode,
                       insert_mode=args.insert_mode,
-                      chunk=args.chunk or (1 << 12))
+                      chunk=args.chunk)
     t0 = time.perf_counter()
     h = eng.open(E, local_frac=args.local_frac)
     t_open = time.perf_counter() - t0
@@ -206,7 +272,7 @@ def run_serve(args) -> None:
         mode=args.mode, support_mode=args.support_mode,
         table_mode=args.table_mode, hier_mode=args.hier_mode,
         insert_mode=args.insert_mode,
-        chunk=args.chunk or (1 << 12))
+        chunk=args.chunk)
     t0 = time.perf_counter()
     h = sched.open_async(E, local_frac=args.local_frac).result()
     print(f"graph={args.graph} n={n} m={h.m} open "
@@ -310,7 +376,7 @@ def run_serve(args) -> None:
         eng = TrussEngine(mode=args.mode, support_mode=args.support_mode,
                           table_mode=args.table_mode,
                           hier_mode=args.hier_mode,
-                          chunk=args.chunk or (1 << 12))
+                          chunk=args.chunk)
         hs = eng.open(E, local_frac=args.local_frac)
         ok = True
         for op, (status, got) in zip(ops, outcomes):
@@ -337,7 +403,7 @@ def run_query_communities(args) -> None:
     E = named_graph(args.graph)
     eng = TrussEngine(mode=args.mode, support_mode=args.support_mode,
                       table_mode=args.table_mode, hier_mode=args.hier_mode,
-                      chunk=args.chunk or (1 << 12))
+                      chunk=args.chunk)
     t0 = time.perf_counter()
     h = eng.open(E)
     t_open = time.perf_counter() - t0
@@ -347,7 +413,16 @@ def run_query_communities(args) -> None:
 
 
 def main(argv=None):
+    # env tuning must act before any heavy jax work; re-exec only on a real
+    # CLI invocation (tests pass argv explicitly and must not exec away)
+    raw = sys.argv[1:] if argv is None else argv
+    if "--tune-env" in raw:
+        apply_env_tuning(reexec=argv is None)
     ap = argparse.ArgumentParser()
+    ap.add_argument("--tune-env", action="store_true",
+                    help="apply host env tuning (tcmalloc preload, XLA/TF "
+                         "log + dtype defaults) before running; re-execs "
+                         "once when the preload changes")
     ap.add_argument("--graph", default="rmat-small")
     ap.add_argument("--order", default="kco", choices=["kco", "natural"])
     ap.add_argument("--engine", default="pkt",

@@ -143,14 +143,13 @@ def _batched_truss(ops: BatchOperand, *, m: int, chunk: int, n_chunks: int,
     """vmap of (support → peel) across one bucket of padded graphs."""
     def one(op: BatchOperand):
         if support_mode == "pallas":
-            from repro.kernels.support import (fold_support_targets,
-                                               support_hit_targets)
+            from repro.kernels.support import support_accumulate
 
-            tgt1, tgt2, tgt3, _ = support_hit_targets(
+            S_acc, _ = support_accumulate(
                 op.s_e1, op.s_cand, op.s_lo, op.s_hi, op.N, op.Eid,
                 chunk=sup_chunk, n_chunks=sup_n_chunks, iters=iters, m=m,
                 interpret=interpret)
-            S0 = fold_support_targets(tgt1, tgt2, tgt3, m=m)[:m]
+            S0 = S_acc[:m]
         else:
             S0 = support_mod._support_jit(
                 op.N, op.Eid, op.s_e1, op.s_cand, op.s_lo, op.s_hi, iters, m)
@@ -347,7 +346,9 @@ class TrussEngine:
         insert_mode: handle insertion repair strategy ("batched" /
             "sequential", §13) — one merged-region re-peel per update batch
             vs one re-peel per inserted edge; bitwise-identical results.
-        chunk: peel chunk size (rounded up to pow2).
+        chunk: peel chunk size (rounded up to pow2). ``None`` (default)
+            derives it per size class from the tuned-chunk policy
+            (``kernels.wedge_common.auto_chunk``, §16).
         reorder: degeneracy-reorder each submission before decomposition.
         max_pending: auto-flush threshold — ``submit`` triggers a full
             ``flush`` once this many submissions are queued.
@@ -362,7 +363,7 @@ class TrussEngine:
 
     def __init__(self, *, mode: str = "chunked", support_mode: str = "jnp",
                  table_mode: str = "device", hier_mode: str = "device",
-                 insert_mode: str = "batched", chunk: int = 1 << 12,
+                 insert_mode: str = "batched", chunk: int | None = None,
                  reorder: bool = True, max_pending: int = 32,
                  max_edges: int = 1 << 22, interpret: bool | None = None):
         if mode not in PEEL_MODES:
@@ -380,7 +381,7 @@ class TrussEngine:
         if insert_mode not in INSERT_MODES:
             raise ValueError(f"insert_mode must be one of {INSERT_MODES}, "
                              f"got {insert_mode!r}")
-        if chunk < 1:
+        if chunk is not None and chunk < 1:
             raise ValueError("chunk must be positive")
         if max_edges < 1:
             raise ValueError("max_edges must be positive")
@@ -390,7 +391,7 @@ class TrussEngine:
         self.hier_mode = hier_mode
         self.insert_mode = insert_mode
         self.max_edges = max_edges
-        self.chunk = _next_pow2(chunk)
+        self.chunk = None if chunk is None else _next_pow2(chunk)
         self.reorder = reorder
         self.max_pending = max_pending
         self.interpret = (wedge_common.interpret_default()
@@ -820,7 +821,7 @@ class TrussEngine:
 
 def truss_batched(graphs, *, mode: str = "chunked",
                   support_mode: str = "jnp", table_mode: str = "device",
-                  chunk: int = 1 << 12,
+                  chunk: int | None = None,
                   reorder: bool = True) -> list[np.ndarray]:
     """One-shot convenience: decompose a list of edge arrays, order-aligned."""
     graphs = list(graphs)

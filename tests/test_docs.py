@@ -1,21 +1,31 @@
-"""Docs are load-bearing: README examples execute, DESIGN.md §s resolve."""
+"""Docs are load-bearing: examples execute, §s resolve, benches stay fresh."""
 
 import pathlib
 import re
+import subprocess
 
 import pytest
 
 ROOT = pathlib.Path(__file__).resolve().parents[1]
 
+#: markdown files whose fenced python blocks must execute as written
+EXECUTABLE_DOCS = ("README.md", "docs/PERFORMANCE.md")
 
-def _readme_blocks():
-    text = (ROOT / "README.md").read_text()
+
+def _doc_blocks(rel: str):
+    text = (ROOT / rel).read_text()
     return re.findall(r"```python\n(.*?)```", text, re.S)
+
+
+def _all_blocks():
+    return [(rel, idx, block)
+            for rel in EXECUTABLE_DOCS
+            for idx, block in enumerate(_doc_blocks(rel))]
 
 
 def test_readme_has_python_examples():
     """The README keeps runnable examples for every serving entry point."""
-    blocks = _readme_blocks()
+    blocks = _doc_blocks("README.md")
     assert len(blocks) >= 4
     joined = "\n".join(blocks)
     for api in ("truss_pkt", "TrussScheduler", "TrussEngine",
@@ -23,21 +33,29 @@ def test_readme_has_python_examples():
         assert api in joined, f"README examples no longer cover {api}"
 
 
-@pytest.mark.parametrize("idx", range(len(_readme_blocks())))
-def test_readme_python_block_executes(idx):
-    """Every fenced python block in the README runs as written."""
-    block = _readme_blocks()[idx]
-    exec(compile(block, f"<README.md block {idx}>", "exec"),
-         {"__name__": f"readme_block_{idx}"})
+def test_performance_doc_covers_the_knobs():
+    """The handbook keeps runnable examples for the §16 tuning surface."""
+    joined = "\n".join(_doc_blocks("docs/PERFORMANCE.md"))
+    for api in ("phase_timings", "auto_chunk", "tuned_env"):
+        assert api in joined, f"PERFORMANCE.md examples no longer cover {api}"
+
+
+@pytest.mark.parametrize(("rel", "idx", "block"),
+                         [pytest.param(r, i, b, id=f"{r}:{i}")
+                          for r, i, b in _all_blocks()])
+def test_doc_python_block_executes(rel, idx, block):
+    """Every fenced python block in the executable docs runs as written."""
+    exec(compile(block, f"<{rel} block {idx}>", "exec"),
+         {"__name__": f"doc_block_{idx}"})
 
 
 def test_design_sections_referenced_from_code_exist():
-    """Every `§N` cited in source/benchmarks/README is a DESIGN.md heading."""
+    """Every `§N` cited in source/benchmarks/docs is a DESIGN.md heading."""
     design = (ROOT / "DESIGN.md").read_text()
     headings = {int(m) for m in re.findall(r"^## §(\d+)", design, re.M)}
     assert headings, "DESIGN.md has no §N headings?"
     cited = set()
-    files = [ROOT / "README.md"]
+    files = [ROOT / "README.md"] + sorted((ROOT / "docs").glob("*.md"))
     for sub in ("src", "benchmarks", "tests"):
         files += sorted((ROOT / sub).rglob("*.py"))
     for f in files:
@@ -48,8 +66,71 @@ def test_design_sections_referenced_from_code_exist():
     assert not missing, f"dangling DESIGN.md references: {sorted(missing)}"
 
 
+def test_performance_doc_cross_references_resolve():
+    """Repo paths and artifacts named in the handbook actually exist."""
+    text = (ROOT / "docs/PERFORMANCE.md").read_text()
+    # markdown links are relative to docs/
+    for target in re.findall(r"\]\(([^)#]+)\)", text):
+        if "://" in target:
+            continue
+        assert (ROOT / "docs" / target).resolve().exists(), (
+            f"PERFORMANCE.md links missing file {target}")
+    # inline-code repo paths (modules, benches, artifacts) resolve from root
+    for path in re.findall(r"`([\w./-]+\.(?:py|json|md))`", text):
+        assert (ROOT / path).exists(), (
+            f"PERFORMANCE.md names missing path {path}")
+
+
 def test_readme_links_every_bench_snapshot():
     """Each committed BENCH_*.json is linked from the README bench table."""
     readme = (ROOT / "README.md").read_text()
     for snap in sorted(ROOT.glob("BENCH_*.json")):
         assert f"({snap.name})" in readme, f"README does not link {snap.name}"
+
+
+#: bench snapshot -> the code whose changes should invalidate it (the
+#: producing bench module; core modules churn too often to pin here)
+_BENCH_PRODUCERS = {
+    "BENCH_smoke.json": "benchmarks/run.py",
+    "BENCH_inc.json": "benchmarks/inc_bench.py",
+    "BENCH_compact.json": "benchmarks/compact_bench.py",
+    "BENCH_hier.json": "benchmarks/hier_bench.py",
+    "BENCH_serve.json": "benchmarks/serve_bench.py",
+    "BENCH_retrace.json": "benchmarks/retrace_bench.py",
+    "BENCH_chaos.json": "benchmarks/chaos_bench.py",
+}
+
+
+def _commit_time(rel: str):
+    try:
+        out = subprocess.run(
+            ["git", "log", "-1", "--format=%ct", "--", rel],
+            cwd=ROOT, capture_output=True, text=True, timeout=30)
+    except (OSError, subprocess.TimeoutExpired):
+        return None
+    if out.returncode != 0 or not out.stdout.strip():
+        return None
+    return int(out.stdout.strip())
+
+
+def test_bench_snapshots_fresher_than_their_bench():
+    """Committed snapshots postdate the bench that writes them.
+
+    A snapshot older than its producing module means the bench changed and
+    nobody re-ran it — the committed trend would be comparing incompatible
+    measurements.  Equal timestamps (same commit) pass; working-tree edits
+    are invisible to this check by design — it gates what lands in a PR.
+    """
+    if not (ROOT / ".git").exists() or _commit_time("README.md") is None:
+        pytest.skip("git history unavailable")
+    for snap in sorted(ROOT.glob("BENCH_*.json")):
+        producer = _BENCH_PRODUCERS.get(snap.name)
+        assert producer is not None, (
+            f"{snap.name} has no producer mapping — extend _BENCH_PRODUCERS")
+        t_snap = _commit_time(snap.name)
+        t_bench = _commit_time(producer)
+        if t_snap is None or t_bench is None:
+            continue  # never committed yet (fresh working tree)
+        assert t_snap >= t_bench, (
+            f"{snap.name} (committed {t_snap}) is staler than {producer} "
+            f"({t_bench}) — re-run the bench and commit the new snapshot")

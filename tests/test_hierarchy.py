@@ -120,13 +120,68 @@ def test_host_out_of_order_level_requests():
     assert np.array_equal(l2, _brute_labels(inc.trussness, inc.triangles, 2))
 
 
-def test_device_lazy_equals_batch():
+def test_device_lazy_equals_sweep():
+    """build_all's warm-started level sweep must be bitwise-identical to the
+    same levels built lazily in sweep order, and the convergence pre-check
+    must actually skip some dispatches (every level flooding from scratch
+    was the BENCH_hier pathology)."""
     inc = IncrementalTruss(_er_edges(24, 0.3, 3))
-    batch = TrussHierarchy(inc.trussness, inc.triangles).build_all()
+    sweep = TrussHierarchy(inc.trussness, inc.triangles).build_all()
     lazy = TrussHierarchy(inc.trussness, inc.triangles)
     for k in sorted(lazy.levels, reverse=True):   # warm-start path
-        assert np.array_equal(lazy.level_labels(k), batch.level_labels(k))
-    assert batch.stats["batch_builds"] == 1
+        assert np.array_equal(lazy.level_labels(k), sweep.level_labels(k))
+    n_levels = len(sweep.levels)
+    built = (sweep.stats["device_levels"] + sweep.stats["converged_levels"]
+             + sweep.stats["seeded_levels"])
+    assert built == n_levels
+
+
+def test_sweep_skips_converged_levels():
+    """On a clique every triangle sits at the top level, so only k_max does
+    any flood work — its tiny active set closes in host seed rounds — and
+    every coarser level is provably converged and must skip (bitwise-
+    identically — checked against the brute oracle)."""
+    n = 6
+    E = edges_from_arrays(*np.nonzero(np.triu(np.ones((n, n)), 1)), n)
+    inc = IncrementalTruss(E)
+    h = TrussHierarchy(inc.trussness, inc.triangles).build_all()
+    assert h.k_max == n
+    assert h.stats["device_levels"] == 0          # 20 rows: host-seeded
+    assert h.stats["seeded_levels"] == 1          # only k_max floods
+    assert h.stats["converged_levels"] == n - 2   # k = 2 .. k_max-1 skip
+    for k in h.levels:
+        assert np.array_equal(
+            h.level_labels(k),
+            _brute_labels(inc.trussness, inc.triangles, k)), k
+
+
+def test_forced_device_flood_matches_host(monkeypatch):
+    """With the host-seeding cutoff disabled every level must take the real
+    device flood dispatch and still match the host oracle bitwise — keeps
+    ``_labelprop`` covered now that small active sets close on the host."""
+    import repro.core.hierarchy as hier_mod
+
+    monkeypatch.setattr(hier_mod, "_SEED_ROWS_MAX", 0)
+    inc = IncrementalTruss(_er_edges(24, 0.3, 3))
+    dev = TrussHierarchy(inc.trussness, inc.triangles, mode="device")
+    dev.build_all()
+    assert dev.stats["device_levels"] > 0
+    assert dev.stats["seeded_levels"] == 0
+    host = TrussHierarchy(inc.trussness, inc.triangles, mode="host")
+    for k in dev.levels:
+        assert np.array_equal(dev.level_labels(k), host.level_labels(k)), k
+
+
+def test_device_cold_out_of_order_requests():
+    """A lazy request with no finer level built (no warm start) must still
+    produce canonical labels — the pre-check may only skip when it can
+    prove convergence."""
+    inc = IncrementalTruss(_er_edges(24, 0.3, 3))
+    h = TrussHierarchy(inc.trussness, inc.triangles)
+    for k in sorted(h.levels):                    # coldest-first order
+        assert np.array_equal(
+            h.level_labels(k),
+            _brute_labels(inc.trussness, inc.triangles, k)), k
 
 
 # ------------------------------------------------------------- structure ----
